@@ -1,0 +1,87 @@
+"""Paper Figure 2: scoring latency vs catalogue size on simulated data.
+
+Exactly the paper's RQ2 protocol: the backbone is excluded (phi is a random
+vector), the sub-id embeddings are random, and we measure scoring + top-k
+(top-k included, as its cost also depends on |I|).  m in {8, 64}.
+
+Default sweep: 10^4 .. 10^6 (CI-friendly).  ``--full`` extends to 10^7
+(and 10^8 items PQ-only); like the paper's 128 GB box losing the Default
+line past 10^7, the dense baseline is the first to hit the memory wall —
+we cap it at the size whose W matrix fits the budget.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import time_fn
+from repro.core import scoring
+
+D_MODEL = 512
+K = 10
+DENSE_MEM_BUDGET = 8e9    # bytes of W we allow the dense baseline (CPU host)
+
+
+def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
+                methods=("dense", "recjpq", "pqtopk")):
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    phi = jax.random.normal(key, (1, D_MODEL), jnp.float32)
+    s = jax.random.normal(key, (1, m, b), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, b, (n_items, m)), jnp.int32)
+    out = {}
+    for method in methods:
+        if method == "dense":
+            if n_items * D_MODEL * 4 > DENSE_MEM_BUDGET:
+                out[method] = None    # memory wall (paper: OOM past 1e7)
+                continue
+            w = jax.random.normal(key, (n_items, D_MODEL), jnp.float32)
+            fn = jax.jit(lambda w_, p_: jax.lax.top_k(
+                scoring.score_dense(w_, p_), K))
+            out[method] = time_fn(lambda: fn(w, phi), repeats=repeats)
+            del w
+        else:
+            alg = {"recjpq": scoring.score_recjpq,
+                   "pqtopk": scoring.score_pqtopk,
+                   "pqtopk_onehot": scoring.score_pqtopk_onehot}[method]
+            fn = jax.jit(lambda c_, s_: jax.lax.top_k(alg(c_, s_), K))
+            out[method] = time_fn(lambda: fn(codes, s), repeats=repeats)
+    return out
+
+
+def run(full: bool = False, repeats: int = 5):
+    sizes = [10_000, 100_000, 1_000_000]
+    if full:
+        sizes += [10_000_000]
+    rows = []
+    for m in (8, 64):
+        for n in sizes:
+            res = bench_point(n, m, repeats=repeats)
+            for method, t in res.items():
+                rows.append({
+                    "n_items": n, "m": m, "method": method,
+                    "scoring_ms": None if t is None
+                    else t["median_s"] * 1e3,
+                })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+    rows = run(args.full, args.repeats)
+    print(f"{'m':>3s} {'n_items':>11s} {'method':8s} {'scoring_ms':>11s}")
+    for r in rows:
+        ms = "OOM-guard" if r["scoring_ms"] is None else f"{r['scoring_ms']:.2f}"
+        print(f"{r['m']:3d} {r['n_items']:11,d} {r['method']:8s} {ms:>11s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

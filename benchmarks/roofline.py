@@ -1,0 +1,160 @@
+"""Roofline report: read dry-run artifacts and derive the three terms per
+(arch × shape × mesh), the dominant bottleneck, MODEL_FLOPS and the
+useful-compute ratio (EXPERIMENTS.md §Roofline).
+
+  compute_s    = HLO_FLOPs_per_device / 197e12   (bf16 peak per v5e chip)
+  memory_s     = HLO_bytes_per_device / 819e9    (HBM)
+  collective_s = collective_bytes_per_device / 50e9 (ICI link)
+
+MODEL_FLOPS (useful work, global):
+  LM train     6 * N_active * tokens
+  LM prefill   2 * N_active * tokens
+  LM decode    2 * N_active * batch      (+ 2*KV attention flops, minor)
+  seqrec serve 2 * N_backbone_tok * users + users * (2*b*d + 2*m*|I|)
+  recsys/gnn   documented per-kind in _model_flops.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _lm_cfg(arch_id: str):
+    from repro.configs.base import get_config
+    return get_config(arch_id)
+
+
+def _model_flops(rec: Dict) -> Optional[float]:
+    from repro.configs.base import get_config
+    arch = get_config(rec["arch"])
+    meta = rec.get("meta", {})
+    kind = meta.get("kind")
+    m = arch.model
+    if arch.family == "lm":
+        n = m.active_param_count()
+        if kind == "train":
+            return 6.0 * n * meta["tokens"]
+        if kind == "prefill":
+            return 2.0 * n * meta["tokens"]
+        if kind == "decode":
+            a = m.attention
+            kv_len = meta.get("kv_len", 0)
+            # Window-aware: sliding layers attend over O(window), not O(L).
+            n_global = sum(a.layer_is_global(i) for i in range(m.n_layers))
+            n_local = m.n_layers - n_global
+            eff = (n_global * kv_len
+                   + n_local * min(a.window or kv_len, kv_len))
+            kv_flops = 2 * a.n_heads * a.head_dim * 2 * eff
+            return (2.0 * n + kv_flops) * meta["tokens"]
+    if arch.family == "seqrec":
+        d, L = m.d_model, m.n_blocks
+        # per-token backbone ~ 12*d^2 per block (attn+ffn), + PQ scoring.
+        if kind == "train":
+            return 3 * 12 * d * d * L * meta["tokens"]
+        users = meta.get("users", 1)
+        seq = 200
+        backbone = 12 * d * d * L * users * seq
+        scoring = users * (2 * m.pq.b * d + 2 * m.pq.m * m.n_items)
+        return backbone + scoring
+    if arch.family == "recsys":
+        ex = meta.get("examples", meta.get("n_candidates", 1))
+        dense_params = sum(
+            w_in * w_out for w_in, w_out in _recsys_mats(m))
+        per_ex = 2.0 * (dense_params + m.n_sparse * m.embed_dim)
+        mult = 3.0 if kind == "train" else 1.0
+        if kind == "retrieval":
+            return 2.0 * m.pq.m * m.n_items + 2.0 * m.pq.b * m.embed_dim
+        return mult * per_ex * ex
+    if arch.family == "gnn":
+        return None
+    return None
+
+
+def _recsys_mats(m):
+    d0 = m.n_dense + m.n_sparse * m.embed_dim
+    mats = []
+    prev = d0
+    for w in m.mlp:
+        mats.append((prev, w))
+        prev = w
+    mats.append((prev, 1))
+    for _ in range(m.n_cross_layers):
+        mats.append((d0, d0))
+    return mats
+
+
+def load_records(art_dir: str, variant: Optional[str] = None) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if variant and rec.get("variant") != variant:
+            continue
+        out.append(rec)
+    return out
+
+
+def analyse(rec: Dict) -> Dict:
+    r = dict(rec)
+    roof = rec.get("roofline", {})
+    terms = {k: roof.get(k, 0.0) for k in
+             ("compute_s", "memory_s", "collective_s")}
+    dominant = max(terms, key=terms.get) if any(terms.values()) else "n/a"
+    bound_s = max(terms.values()) if terms else 0.0
+    mf = _model_flops(rec)
+    flops_dev = rec.get("corrected", {}).get(
+        "flops_per_device", rec.get("flops_per_device", 0.0))
+    hlo_global = flops_dev * rec.get("devices", 1)
+    r.update({
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound_s,
+        "model_flops": mf,
+        "useful_ratio": (mf / hlo_global) if (mf and hlo_global) else None,
+        # roofline fraction: useful-FLOPs time / achievable (bounded) time
+        "roofline_frac": (
+            (mf / rec["devices"] / PEAK_FLOPS) / bound_s
+            if (mf and bound_s) else None),
+    })
+    return r
+
+
+def table(art_dir: str = "benchmarks/artifacts/dryrun",
+          variant: str = "baseline", mesh: Optional[str] = "single"):
+    rows = []
+    for rec in load_records(art_dir, variant):
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec.get("error", "?")})
+            continue
+        rows.append(analyse(rec))
+    return rows
+
+
+def main():
+    rows = table()
+    hdr = (f"{'arch':20s} {'shape':14s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dom':>5s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for r in rows:
+        if "error" in r:
+            print(f"{r['arch']:20s} {r['shape']:14s} ERROR {r['error'][:60]}")
+            continue
+        roof = r["roofline"]
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        rf = f"{100 * r['roofline_frac']:.1f}" if r["roofline_frac"] else "-"
+        print(f"{r['arch']:20s} {r['shape']:14s} {roof['compute_s']:9.2e} "
+              f"{roof['memory_s']:9.2e} {roof['collective_s']:9.2e} "
+              f"{r['dominant']:>5s} {ur:>7s} {rf:>7s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table3/*    — scoring + total mRT per (dataset, backbone, method) [Table 3]
+  figure2/*   — scoring latency vs catalogue size, m in {8, 64}   [Fig. 2]
+  kernel/*    — PQ scoring algorithm micro-bench (XLA paths)
+  roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
+
+Full-scale sweeps (10^7+ items) are behind ``--full`` (CI keeps <= 10^6).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(name: str, us: float | None, derived: str = ""):
+    us_s = f"{us:.1f}" if us is not None else "nan"
+    print(f"{name},{us_s},{derived}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", action="append", default=[],
+                    choices=["table3", "figure2", "kernel", "roofline"])
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+
+    if "table3" not in args.skip:
+        from benchmarks import table3
+        datasets = ("booking", "gowalla") if args.full else ("booking",)
+        # CI default keeps the 1.27M-item Gowalla build out (slow dense
+        # reconstruction on host); --full reproduces the whole table.
+        rows = table3.run(repeats=args.repeats, datasets=datasets)
+        for r in rows:
+            _emit(f"table3/{r['dataset']}/{r['backbone']}/{r['method']}/scoring",
+                  r["scoring_ms"] * 1e3,
+                  f"total_ms={r['total_ms']:.2f};backbone_ms={r['backbone_ms']:.2f}")
+
+    if "figure2" not in args.skip:
+        from benchmarks import figure2
+        rows = figure2.run(full=args.full, repeats=args.repeats)
+        for r in rows:
+            us = None if r["scoring_ms"] is None else r["scoring_ms"] * 1e3
+            _emit(f"figure2/m{r['m']}/n{r['n_items']}/{r['method']}", us,
+                  "mem-wall" if us is None else "")
+
+    if "kernel" not in args.skip:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from benchmarks.timing import time_fn
+        from repro.core import scoring
+        rng = np.random.default_rng(0)
+        n, m, b = 262_144, 8, 256
+        codes = jnp.asarray(rng.integers(0, b, (n, m)), jnp.int32)
+        s = jax.random.normal(jax.random.PRNGKey(0), (1, m, b))
+        for name, alg in [("pqtopk", scoring.score_pqtopk),
+                          ("recjpq", scoring.score_recjpq),
+                          ("onehot", scoring.score_pqtopk_onehot)]:
+            fn = jax.jit(alg)
+            t = time_fn(lambda: fn(codes, s), repeats=args.repeats)
+            _emit(f"kernel/pq_scoring_262k/{name}", t["median_s"] * 1e6,
+                  f"items_per_s={n / t['median_s']:.3e}")
+
+    if "roofline" not in args.skip:
+        import os
+        from benchmarks import roofline
+        art = "benchmarks/artifacts/dryrun"
+        if os.path.isdir(art):
+            for r in roofline.table(art):
+                if "error" in r:
+                    _emit(f"roofline/{r['arch']}/{r['shape']}", None,
+                          f"error={r['error'][:50]}")
+                    continue
+                rf = r.get("roofline_frac")
+                _emit(f"roofline/{r['arch']}/{r['shape']}",
+                      r["bound_s"] * 1e6,
+                      f"dominant={r['dominant']};"
+                      f"roofline_frac={rf:.3f}" if rf else
+                      f"dominant={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Table 3: scoring-method latency per backbone per dataset scale.
+
+Datasets are synthetic but size-matched to the paper's Table 1
+(Booking.com ~34.7k items, Gowalla ~1.27M items).  We measure, per user
+(batch=1, like the paper's per-request mRT):
+
+  * backbone mRT     (Transformer only — independent of scoring method)
+  * scoring mRT      (Default matmul / RecJPQ Alg.2 / PQTopK Alg.1)
+  * total mRT
+
+Absolute numbers are CPU-host timings (not the paper's Ryzen/TF stack) —
+the *claims* under test are ordering and ratios: PQTopK < RecJPQ < Default
+at Gowalla scale, and backbone-dominated totals at Booking scale.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import time_fn
+from repro.configs.base import PQConfig, SeqRecConfig
+from repro.core import retrieval_head, scoring, topk
+from repro.models import seqrec as S
+
+DATASETS = {
+    "booking": 34_742,
+    "gowalla": 1_271_638,
+}
+BACKBONES = {
+    "sasrec": dict(backbone="sasrec", n_blocks=2, d_ff=512),
+    "gbert4rec": dict(backbone="bert4rec", n_blocks=3, d_ff=2048),
+}
+METHODS = ("dense", "recjpq", "pqtopk")
+
+
+def _make(backbone: str, n_items: int, *, d_model=512, m=8, b=512,
+          seq_len=200):
+    cfg = SeqRecConfig(name=f"bench-{backbone}", n_items=n_items,
+                       d_model=d_model, max_seq_len=seq_len,
+                       pq=PQConfig(m=m, b=b), **BACKBONES[backbone])
+    params = S.init_seqrec(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def run(repeats: int = 7, datasets=("booking", "gowalla"),
+        backbones=("sasrec", "gbert4rec"), k: int = 10):
+    rows = []
+    for ds_name in datasets:
+        n_items = DATASETS[ds_name]
+        for bb in backbones:
+            cfg, params = _make(bb, n_items)
+            rng = np.random.default_rng(0)
+            seq = jnp.asarray(rng.integers(1, n_items, (1, cfg.max_seq_len)),
+                              jnp.int32)
+
+            phi_fn = jax.jit(lambda s: S.sequence_embedding(params, s, cfg))
+            phi = jax.block_until_ready(phi_fn(seq))
+            t_backbone = time_fn(lambda: phi_fn(seq), repeats=repeats)
+
+            for method in METHODS:
+                score_fn = jax.jit(functools.partial(
+                    _score_and_topk, method=method, k=k))
+                t_scoring = time_fn(
+                    lambda: score_fn(params["item_emb"], phi),
+                    repeats=repeats)
+                rows.append({
+                    "dataset": ds_name, "backbone": bb, "method": method,
+                    "n_items": n_items,
+                    "backbone_ms": t_backbone["median_s"] * 1e3,
+                    "scoring_ms": t_scoring["median_s"] * 1e3,
+                    "total_ms": (t_backbone["median_s"]
+                                 + t_scoring["median_s"]) * 1e3,
+                })
+    return rows
+
+
+def _score_and_topk(head_params, phi, *, method: str, k: int):
+    r = retrieval_head.score_all(head_params, phi, method)
+    return jax.lax.top_k(r, k)
+
+
+def main():
+    rows = run()
+    print(f"{'dataset':9s} {'backbone':10s} {'method':8s} "
+          f"{'scoring_ms':>10s} {'total_ms':>9s}")
+    for r in rows:
+        print(f"{r['dataset']:9s} {r['backbone']:10s} {r['method']:8s} "
+              f"{r['scoring_ms']:10.2f} {r['total_ms']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared wall-clock timing helpers (CPU algorithm-level benches).
+
+The paper reports median response time (mRT) per user; we do the same:
+jit, warm up, then median over repeats with block_until_ready.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable[[], object], *, repeats: int = 10,
+            warmup: int = 2) -> dict:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    arr = np.asarray(times)
+    return {
+        "median_s": float(np.median(arr)),
+        "mean_s": float(arr.mean()),
+        "p99_s": float(np.percentile(arr, 99)),
+        "min_s": float(arr.min()),
+    }

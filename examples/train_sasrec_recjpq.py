@@ -1,0 +1,118 @@
+"""End-to-end training driver: SASRec + RecJPQ on a synthetic Gowalla-mini
+dataset — data generation -> SVD codebook -> gBCE training with
+checkpointing -> NDCG@10 eval vs a popularity baseline.
+
+  PYTHONPATH=src python examples/train_sasrec_recjpq.py \
+      --items 50000 --users 2000 --steps 300
+
+Scale knobs go up to the real Gowalla config (--items 1271638) on a bigger
+host; on TPU the same step function runs under the production mesh via
+``repro.launch.dryrun``-style shardings.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PQConfig, SeqRecConfig
+from repro.core import codebook
+from repro.data.sequences import SeqRecDataset
+from repro.models import seqrec as S
+from repro.training import checkpoint as ckpt_lib, optimizer as O, train_loop as TL
+
+
+def ndcg_at_k(ranks, k=10):
+    g = np.where((ranks >= 0) & (ranks < k), 1.0 / np.log2(ranks + 2), 0.0)
+    return float(g.mean())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=50_000)
+    ap.add_argument("--users", type=int, default=2_000)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--seq-len", type=int, default=50)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--b", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/sasrec_recjpq_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = SeqRecConfig(
+        name="sasrec-recjpq-example", backbone="sasrec", n_items=args.items,
+        d_model=args.d_model, n_blocks=2, n_heads=8, d_ff=args.d_model,
+        max_seq_len=args.seq_len, n_negatives=128,
+        pq=PQConfig(m=args.m, b=args.b, assign="svd"))
+
+    print(f"generating {args.users:,} users x ~12 interactions over "
+          f"{args.items:,} items ...")
+    ds = SeqRecDataset.synthetic(args.users, args.items, 12,
+                                 args.seq_len + 1, seed=0)
+    users, items = ds.interactions()
+
+    print("building RecJPQ codebook (truncated SVD + per-split k-means) ...")
+    t0 = time.time()
+    codes, _ = codebook.build_codebook(
+        cfg.pq, cfg.n_items + 1, d_model=cfg.d_model,
+        interactions=(users, items + 1, args.users))
+    print(f"  codebook built in {time.time() - t0:.1f}s; "
+          f"codes shape {codes.shape}")
+
+    params = S.init_seqrec(jax.random.PRNGKey(0), cfg, codes=codes)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    dense_equiv = (cfg.n_items + 1) * cfg.d_model + n_params - (
+        params["item_emb"]["codes"].size + params["item_emb"]["sub_emb"].size)
+    print(f"  params: {n_params / 1e6:.1f}M (dense-equivalent "
+          f"{dense_equiv / 1e6:.1f}M -> RecJPQ compression)")
+
+    ocfg = O.AdamWConfig(lr=1e-3, warmup_steps=args.steps // 10,
+                         total_steps=args.steps)
+    opt_state = TL.init_opt_state(params, ocfg)
+    step_fn = jax.jit(TL.make_train_step(
+        lambda p, b: S.seqrec_loss(p, b, cfg), ocfg), donate_argnums=(0, 1))
+    mgr = ckpt_lib.CheckpointManager(args.ckpt, keep=2)
+
+    it = ds.batches(args.batch, cfg.n_negatives, backbone="sasrec", seed=1)
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 25 == 0 or step == args.steps - 1:
+            rate = args.batch * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"({rate:.1f} seq/s)")
+    mgr.save(args.steps, {"params": params, "opt_state": opt_state},
+             block=True)
+
+    # --- eval: hold out the last item, rank with PQTopK ------------------
+    seqs = ds.sequences
+    valid = seqs[:, -1] != 0
+    prefix, held = jnp.asarray(seqs[valid][:, :-1]), seqs[valid][:, -1]
+    k = 100
+    ids, _ = S.serve_topk(params, prefix, cfg, k=k, method="pqtopk")
+    ids = np.asarray(ids)
+    ranks = np.full(len(held), -1)
+    for u in range(len(held)):
+        w = np.nonzero(ids[u] == held[u])[0]
+        if len(w):
+            ranks[u] = w[0]
+    # popularity baseline
+    pop = np.bincount(seqs[valid][:, :-1].ravel(),
+                      minlength=cfg.n_items + 1)
+    pop[0] = 0
+    pop_top = np.argsort(-pop)[:k]
+    pop_ranks = np.full(len(held), -1)
+    for u in range(len(held)):
+        w = np.nonzero(pop_top == held[u])[0]
+        if len(w):
+            pop_ranks[u] = w[0]
+    print(f"NDCG@10  model={ndcg_at_k(ranks):.4f}  "
+          f"popularity={ndcg_at_k(pop_ranks):.4f}")
+    print(f"checkpoint saved to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

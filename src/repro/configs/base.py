@@ -1,0 +1,333 @@
+"""Config dataclasses + arch registry.
+
+Every assigned architecture lives in its own module (``repro/configs/<id>.py``)
+exposing ``CONFIG`` (the exact published config) and ``reduced()`` (a tiny
+same-family config for CPU smoke tests).  ``get_config(arch_id)`` resolves
+either by registry id (``--arch qwen2.5-14b``).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Paper technique: Product-Quantised retrieval head (RecJPQ + PQTopK).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PQConfig:
+    """Sub-item-id decomposition (RecJPQ) of a large id space."""
+
+    m: int = 8          # number of splits (sub-ids per item)
+    b: int = 256        # distinct sub-ids per split (codebook width)
+    assign: str = "svd"  # codebook builder: svd | kmeans | random
+    code_dtype: str = "int32"
+
+    def __post_init__(self):
+        if self.b > 2 ** 16:
+            raise ValueError("b > 65536 not supported (codes stored <= int32)")
+
+
+# ---------------------------------------------------------------------------
+# LM family.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # Sliding-window mix: every ``local_global_ratio``+1-th layer is global,
+    # the rest are local with window ``window``.  0 => all layers global.
+    window: int = 0
+    local_global_ratio: int = 0
+
+    def layer_is_global(self, layer_idx: int) -> bool:
+        if self.local_global_ratio <= 0 or self.window <= 0:
+            return True
+        return (layer_idx + 1) % (self.local_global_ratio + 1) == 0
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attention: AttentionConfig
+    act: str = "silu"         # silu | gelu | relu | sqrelu
+    gated_mlp: bool = True    # GLU-style two-matrix up-projection
+    moe: Optional[MoEConfig] = None
+    moe_impl: str = "dense"   # dense (GShard one-hot) | sort (gather/scatter)
+    norm: str = "rmsnorm"     # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    causal: bool = True       # False => encoder-style (BERT4Rec)
+    # PQ-compressed unembedding for decode-time vocab scoring (beyond-paper
+    # application of the technique to LM heads).
+    pq_head: Optional[PQConfig] = PQConfig()
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"   # bf16 for 340B-scale (see DESIGN.md §8)
+    remat: bool = True
+    scan_layers: bool = True
+
+    @property
+    def q_dim(self) -> int:
+        return self.attention.n_heads * self.attention.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.attention.n_kv_heads * self.attention.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        a = self.attention
+        attn = self.d_model * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.d_model
+        if self.moe is None:
+            n_mat = 3 if self.gated_mlp else 2
+            ffn = n_mat * self.d_model * self.d_ff
+        else:
+            n_mat = 3 if self.gated_mlp else 2
+            ffn = self.moe.n_experts * n_mat * self.d_model * self.moe.d_ff_expert
+            ffn += self.d_model * self.moe.n_experts  # router
+            ffn += self.moe.n_shared * n_mat * self.d_model * self.moe.d_ff_expert
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        a = self.attention
+        attn = self.d_model * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.d_model
+        n_mat = 3 if self.gated_mlp else 2
+        ffn = (self.moe.top_k + self.moe.n_shared) * n_mat * self.d_model * self.moe.d_ff_expert
+        ffn += self.d_model * self.moe.n_experts
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+
+# ---------------------------------------------------------------------------
+# Sequential-recommendation family (the paper's own models).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SeqRecConfig:
+    name: str
+    backbone: str              # sasrec | bert4rec
+    n_items: int
+    d_model: int = 512
+    n_blocks: int = 2
+    n_heads: int = 8
+    d_ff: int = 1024
+    max_seq_len: int = 200
+    dropout: float = 0.0       # inference-focused; kept for completeness
+    pq: PQConfig = field(default_factory=PQConfig)
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+    moment_dtype: str = "float32"
+    # gBCE negative sampling (gSASRec / gBERT4Rec training)
+    n_negatives: int = 256
+    gbce_t: float = 0.75
+
+
+# ---------------------------------------------------------------------------
+# RecSys CTR/retrieval family.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                  # dcn | bst | dien | fm
+    n_dense: int = 0
+    n_sparse: int = 26
+    embed_dim: int = 16
+    table_rows: Tuple[int, ...] = ()   # one entry per sparse field
+    mlp: Tuple[int, ...] = ()
+    n_cross_layers: int = 0
+    seq_len: int = 0           # behaviour-sequence length (bst / dien)
+    n_blocks: int = 0
+    n_heads: int = 0
+    gru_dim: int = 0           # dien
+    n_items: int = 1_000_000   # retrieval catalogue for retrieval_cand
+    pq: Optional[PQConfig] = field(default_factory=PQConfig)
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+    moment_dtype: str = "float32"
+
+    def total_rows(self) -> int:
+        return sum(self.table_rows)
+
+
+# ---------------------------------------------------------------------------
+# GNN family.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    aggregator: str = "mean"
+    sample_sizes: Tuple[int, ...] = (25, 10)
+    n_classes: int = 41
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+    moment_dtype: str = "float32"
+
+
+# ---------------------------------------------------------------------------
+# Shapes.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape × step-kind) cell of the dry-run matrix."""
+
+    name: str
+    kind: str        # train | prefill | decode | serve | retrieval
+    dims: Any = field(default_factory=dict)
+    skip_reason: str = ""   # non-empty => documented skip (DESIGN.md §4)
+
+
+def lm_shapes(*, sub_quadratic: bool, decoder: bool = True) -> Tuple[ShapeSpec, ...]:
+    shapes = [
+        ShapeSpec("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+        ShapeSpec("prefill_32k", "prefill", {"seq_len": 32_768, "global_batch": 32}),
+        ShapeSpec(
+            "decode_32k", "decode", {"seq_len": 32_768, "global_batch": 128},
+            skip_reason="" if decoder else "encoder-only arch: no autoregressive decode",
+        ),
+        ShapeSpec(
+            "long_500k", "decode", {"seq_len": 524_288, "global_batch": 1},
+            skip_reason=""
+            if (sub_quadratic and decoder)
+            else (
+                "pure full-attention arch: no sub-quadratic mechanism (DESIGN.md §4)"
+                if decoder
+                else "encoder-only arch: no autoregressive decode"
+            ),
+        ),
+    ]
+    return tuple(shapes)
+
+
+def recsys_shapes() -> Tuple[ShapeSpec, ...]:
+    return (
+        ShapeSpec("train_batch", "train", {"global_batch": 65_536}),
+        ShapeSpec("serve_p99", "serve", {"global_batch": 512}),
+        ShapeSpec("serve_bulk", "serve", {"global_batch": 262_144}),
+        ShapeSpec("retrieval_cand", "retrieval", {"global_batch": 1, "n_candidates": 1_000_000}),
+    )
+
+
+def gnn_shapes() -> Tuple[ShapeSpec, ...]:
+    return (
+        ShapeSpec("full_graph_sm", "train",
+                  {"n_nodes": 2_708, "n_edges": 10_556, "d_feat": 1_433, "n_classes": 7}),
+        ShapeSpec("minibatch_lg", "train",
+                  {"n_nodes": 232_965, "n_edges": 114_615_892, "batch_nodes": 1_024,
+                   "fanout": (15, 10), "d_feat": 602, "n_classes": 41}),
+        ShapeSpec("ogb_products", "train",
+                  {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+                   "n_classes": 47}),
+        ShapeSpec("molecule", "train",
+                  {"n_nodes": 30, "n_edges": 64, "graph_batch": 128, "d_feat": 16,
+                   "n_classes": 2}),
+    )
+
+
+def seqrec_shapes(n_items: int) -> Tuple[ShapeSpec, ...]:
+    return (
+        ShapeSpec("train_seq", "train", {"global_batch": 4096, "seq_len": 200}),
+        ShapeSpec("serve_users", "retrieval",
+                  {"global_batch": 2048, "seq_len": 200, "n_candidates": n_items}),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Arch registry.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                  # lm | seqrec | recsys | gnn
+    model: Any
+    shapes: Tuple[ShapeSpec, ...]
+    source: str = ""
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id}: unknown shape {name!r}")
+
+    def active_shapes(self) -> Tuple[ShapeSpec, ...]:
+        return tuple(s for s in self.shapes if not s.skip_reason)
+
+
+_REGISTRY = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "gemma3-27b": "gemma3_27b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "dbrx-132b": "dbrx_132b",
+    "graphsage-reddit": "graphsage_reddit",
+    "dcn-v2": "dcn_v2",
+    "bst": "bst",
+    "dien": "dien",
+    "fm": "fm",
+    # the paper's own models
+    "sasrec-recjpq": "sasrec_recjpq",
+    "gbert4rec-recjpq": "gbert4rec_recjpq",
+}
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch_id]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch_id]}")
+    return mod.reduced()
+
+
+__all__ = [
+    "PQConfig", "MoEConfig", "AttentionConfig", "LMConfig", "SeqRecConfig",
+    "RecsysConfig", "GNNConfig", "ShapeSpec", "ArchConfig",
+    "lm_shapes", "recsys_shapes", "gnn_shapes", "seqrec_shapes",
+    "list_archs", "get_config", "get_reduced", "replace",
+]

@@ -1,0 +1,4 @@
+"""Core: the paper's contribution — PQ sub-id retrieval + PQTopK scoring."""
+from repro.core import codebook, pq, retrieval_head, scoring, topk
+
+__all__ = ["codebook", "pq", "retrieval_head", "scoring", "topk"]

@@ -1,0 +1,77 @@
+"""PQ (RecJPQ-style) embedding: item embedding = concat of m sub-embeddings.
+
+Parameters of a ``PQEmbedding``:
+  codes:   (n_items, m) integer codebook G (Eq. 1) — non-trainable.
+  sub_emb: (m, b, d/m)  sub-id embedding tables Psi (one per split).
+
+Reconstruction (Eq. 2):  w_i = psi_{1,g_i1} || ... || psi_{m,g_im}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PQConfig
+
+Params = Dict[str, Any]
+
+
+def init_pq_embedding(key: jax.Array, pq: PQConfig, n_items: int, d_model: int,
+                      codes: Optional[np.ndarray] = None,
+                      centroids: Optional[np.ndarray] = None,
+                      dtype: Any = jnp.float32) -> Params:
+    if d_model % pq.m:
+        raise ValueError(f"d_model={d_model} not divisible by m={pq.m}")
+    sub = d_model // pq.m
+    if codes is None:
+        codes = jax.random.randint(key, (n_items, pq.m), 0, pq.b)
+    codes = jnp.asarray(codes, jnp.dtype(pq.code_dtype))
+    if centroids is None:
+        sub_emb = jax.random.normal(key, (pq.m, pq.b, sub), jnp.float32) * 0.02
+    else:
+        sub_emb = jnp.asarray(centroids, jnp.float32)
+        if sub_emb.shape != (pq.m, pq.b, sub):
+            raise ValueError(f"centroid shape {sub_emb.shape} != {(pq.m, pq.b, sub)}")
+    return {"codes": codes, "sub_emb": sub_emb.astype(dtype)}
+
+
+def abstract_pq_embedding(pq: PQConfig, n_items: int, d_model: int,
+                          dtype: Any = jnp.float32) -> Params:
+    """ShapeDtypeStruct stand-in (dry-run: no allocation)."""
+    sub = d_model // pq.m
+    return {
+        "codes": jax.ShapeDtypeStruct((n_items, pq.m), jnp.dtype(pq.code_dtype)),
+        "sub_emb": jax.ShapeDtypeStruct((pq.m, pq.b, sub), dtype),
+    }
+
+
+def reconstruct(params: Params, ids: jax.Array) -> jax.Array:
+    """Eq. 2: gather sub-embeddings for ``ids`` and concat. (..., d_model)."""
+    codes = params["codes"][ids]                       # (..., m)
+    sub_emb = params["sub_emb"]                        # (m, b, d/m)
+    m = sub_emb.shape[0]
+    parts = [jnp.take(sub_emb[k], codes[..., k], axis=0) for k in range(m)]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def reconstruct_all(params: Params) -> jax.Array:
+    """Materialise the full (n_items, d) table — tests/small catalogues only."""
+    n_items = params["codes"].shape[0]
+    return reconstruct(params, jnp.arange(n_items))
+
+
+def pq_vmem_bytes(pq: PQConfig, d_model: int) -> int:
+    """Bytes of the Psi tables + one S matrix — the working set that replaces
+    the (n_items × d) embedding matrix."""
+    sub = d_model // pq.m
+    return pq.m * pq.b * sub * 4 + pq.m * pq.b * 4
+
+
+def compression_ratio(pq: PQConfig, n_items: int, d_model: int,
+                      dense_bytes: int = 4, code_bytes: int = 4) -> float:
+    dense = n_items * d_model * dense_bytes
+    compressed = n_items * pq.m * code_bytes + pq.m * pq.b * (d_model // pq.m) * dense_bytes
+    return dense / compressed

@@ -1,0 +1,173 @@
+"""RetrievalHead: "score a huge id space against a query vector, top-K".
+
+The paper's technique packaged as the first-class head used by every arch
+that retrieves from a large id space (seqrec items, LM vocab at decode,
+recsys candidate catalogues).  Holds either
+
+* a PQ representation  — ``{"codes": (N, m), "sub_emb": (m, b, d/m)}``, or
+* a dense table        — ``{"table": (N, d)}`` (Transformer-Default baseline)
+
+and exposes scoring via any of the paper's three algorithms plus the Pallas
+kernel path and the item-sharded distributed path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import PQConfig
+from repro.core import pq as pq_lib
+from repro.core import scoring, topk as topk_lib
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, n_items: int, d_model: int,
+         pq: Optional[PQConfig] = None, codes=None, centroids=None,
+         dtype: Any = jnp.float32) -> Params:
+    if pq is None:
+        table = jax.random.normal(key, (n_items, d_model), jnp.float32) * 0.02
+        return {"table": table.astype(dtype)}
+    return pq_lib.init_pq_embedding(key, pq, n_items, d_model, codes,
+                                    centroids, dtype)
+
+
+def abstract(n_items: int, d_model: int, pq: Optional[PQConfig] = None,
+             dtype: Any = jnp.float32) -> Params:
+    if pq is None:
+        return {"table": jax.ShapeDtypeStruct((n_items, d_model), dtype)}
+    return pq_lib.abstract_pq_embedding(pq, n_items, d_model, dtype)
+
+
+def is_pq(params: Params) -> bool:
+    return "codes" in params
+
+
+def n_items(params: Params) -> int:
+    return (params["codes"] if is_pq(params) else params["table"]).shape[0]
+
+
+def embed(params: Params, ids: jax.Array) -> jax.Array:
+    """Input-embedding lookup (shared with the head, as in RecJPQ)."""
+    if is_pq(params):
+        return pq_lib.reconstruct(params, ids)
+    return jnp.take(params["table"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# scoring
+# ---------------------------------------------------------------------------
+
+def score_all(params: Params, phi: jax.Array, method: str = "pqtopk",
+              ) -> jax.Array:
+    """All item scores (B, N) via the selected algorithm."""
+    if method == "dense":
+        w = (pq_lib.reconstruct_all(params) if is_pq(params)
+             else params["table"])
+        return scoring.score_dense(w.astype(phi.dtype), phi)
+    if not is_pq(params):
+        raise ValueError(f"method {method!r} requires a PQ head")
+    s = scoring.subid_scores(params["sub_emb"].astype(jnp.float32),
+                             phi.astype(jnp.float32))
+    if method == "recjpq":
+        return scoring.score_recjpq(params["codes"], s)
+    if method == "pqtopk":
+        return scoring.score_pqtopk(params["codes"], s)
+    if method == "pqtopk_onehot":
+        return scoring.score_pqtopk_onehot(params["codes"], s)
+    if method == "pqtopk_kernel":
+        from repro.kernels.pqtopk import ops as kernel_ops
+        return kernel_ops.pq_scores(params["codes"], s)
+    raise ValueError(f"unknown scoring method {method!r}")
+
+
+def score_candidates(params: Params, phi: jax.Array, item_ids: jax.Array,
+                     method: str = "pqtopk") -> jax.Array:
+    """Scores for a candidate subset V (Algorithm 1's optional V)."""
+    if method == "dense":
+        w = embed(params, item_ids)
+        return scoring.score_dense(w.astype(phi.dtype), phi)
+    s = scoring.subid_scores(params["sub_emb"].astype(jnp.float32),
+                             phi.astype(jnp.float32))
+    return scoring.score_pqtopk(params["codes"][item_ids], s)
+
+
+def top_items(params: Params, phi: jax.Array, k: int,
+              method: str = "pqtopk", tile: int = 8192,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """TopK(score, K) — returns (values (B,k), item ids (B,k))."""
+    r = score_all(params, phi, method)
+    return topk_lib.tiled_topk(r, k, tile)
+
+
+# ---------------------------------------------------------------------------
+# distributed: items sharded over a mesh axis, O(k * shards) merge
+# ---------------------------------------------------------------------------
+
+def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
+                      axis: str = "model", method: str = "pqtopk",
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Item-sharded retrieval: codes sharded over ``axis``; each shard runs
+    PQTopK locally and contributes k candidates to an all-gather merge.
+
+    Per-shard collective volume: k * (4 + 4) bytes * n_shards — independent
+    of N (DESIGN.md §5).
+    """
+    if not is_pq(params):
+        return _dense_top_items_sharded(params, phi, k, mesh, axis)
+    n = params["codes"].shape[0]
+    n_shards = mesh.shape[axis]
+    pad = (-n) % n_shards
+    codes = params["codes"]
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    n_local = (n + pad) // n_shards
+    scorer = {"pqtopk": scoring.score_pqtopk,
+              "pqtopk_onehot": scoring.score_pqtopk_onehot,
+              "recjpq": scoring.score_recjpq}[method]
+
+    def shard_fn(codes_local, sub_emb, phi_):
+        s = scoring.subid_scores(sub_emb.astype(jnp.float32),
+                                 phi_.astype(jnp.float32))
+        r_local = scorer(codes_local, s)
+        offset = jax.lax.axis_index(axis) * n_local
+        # Mask padding rows (global id >= n) out of the top-k.
+        gid = offset + jnp.arange(n_local)
+        r_local = jnp.where(gid[None, :] < n, r_local, -jnp.inf)
+        return topk_lib.local_then_merge_topk(r_local, k, axis, offset)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,   # outputs are replicated post-all_gather
+    )
+    return fn(codes, params["sub_emb"], phi)
+
+
+def _dense_top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
+                             axis: str) -> Tuple[jax.Array, jax.Array]:
+    n = params["table"].shape[0]
+    n_local = n // mesh.shape[axis]
+
+    def shard_fn(table_local, phi_):
+        r_local = scoring.score_dense(table_local.astype(phi_.dtype), phi_)
+        offset = jax.lax.axis_index(axis) * n_local
+        return topk_lib.local_then_merge_topk(
+            r_local.astype(jnp.float32), k, axis, offset)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(params["table"], phi)

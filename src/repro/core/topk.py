@@ -1,0 +1,77 @@
+"""Top-K selection: exact, tiled (two-stage), and shard-local + merge.
+
+On TPUs ``lax.top_k`` over 10⁶–10⁹ columns is sort-bound; the two-stage tiled
+variant reduces the sorted set from N to (N/tile)*k first-stage winners, and
+the distributed variant keeps collective volume at O(k * n_shards) instead of
+O(N) (DESIGN.md §3/§5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k. scores: (B, N) -> (values (B,k), indices (B,k))."""
+    return jax.lax.top_k(scores, k)
+
+
+def tiled_topk(scores: jax.Array, k: int, tile: int = 8192,
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Two-stage exact top-k: per-tile top-k, then top-k over winners.
+
+    Exact because every global top-k element is a top-k element of its tile.
+    """
+    b, n = scores.shape
+    if n <= tile or n % tile:
+        return jax.lax.top_k(scores, k)
+    n_tiles = n // tile
+    kk = min(k, tile)
+    tiles = scores.reshape(b, n_tiles, tile)
+    tv, ti = jax.lax.top_k(tiles, kk)                  # (B, T, kk)
+    base = (jnp.arange(n_tiles, dtype=jnp.int32) * tile)[None, :, None]
+    cand_v = tv.reshape(b, n_tiles * kk)
+    cand_i = (ti.astype(jnp.int32) + base).reshape(b, n_tiles * kk)
+    fv, fi = jax.lax.top_k(cand_v, k)
+    return fv, jnp.take_along_axis(cand_i, fi, axis=1)
+
+
+def local_then_merge_topk(scores_local: jax.Array, k: int, axis_name: str,
+                          shard_offset: jax.Array,
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Inside ``shard_map``: local top-k then all-gather + final top-k.
+
+    scores_local: (B, N_local) on each shard; shard_offset: scalar global
+    offset of this shard's first item.  Collective: O(k * n_shards) values +
+    indices, independent of N.
+    """
+    lv, li = jax.lax.top_k(scores_local, min(k, scores_local.shape[-1]))
+    gi = li.astype(jnp.int32) + shard_offset.astype(jnp.int32)
+    all_v = jax.lax.all_gather(lv, axis_name, axis=1, tiled=True)   # (B, S*k)
+    all_i = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
+    fv, fi = jax.lax.top_k(all_v, k)
+    return fv, jnp.take_along_axis(all_i, fi, axis=1)
+
+
+def approx_topk_maxblock(scores: jax.Array, k: int,
+                         oversample: int = 2) -> Tuple[jax.Array, jax.Array]:
+    """Approximate top-k: split N into k*oversample blocks, take each block's
+    max (TPU-friendly: one reduction, no sort over N).  Recall ~= 1 - k/(2B)
+    for random score placement [Chern+ 2022, arXiv:2206.14286].
+    """
+    b, n = scores.shape
+    n_blocks = min(k * oversample, n)
+    pad = (-n) % n_blocks
+    if pad:
+        scores = jnp.pad(scores, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    blk = scores.reshape(b, n_blocks, -1)
+    bv = blk.max(axis=2)
+    bi = blk.argmax(axis=2).astype(jnp.int32)
+    width = blk.shape[2]
+    gi = bi + (jnp.arange(n_blocks, dtype=jnp.int32) * width)[None, :]
+    fv, fi = jax.lax.top_k(bv, k)
+    return fv, jnp.take_along_axis(gi, fi, axis=1)

@@ -1,0 +1,3 @@
+from repro.data import graph, recsys_data, sequences
+
+__all__ = ["graph", "recsys_data", "sequences"]

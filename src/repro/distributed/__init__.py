@@ -1,0 +1,6 @@
+from repro.distributed import sharding
+from repro.distributed.sharding import (ShardingPlan, activation_plan,
+                                        constrain, param_shardings)
+
+__all__ = ["sharding", "ShardingPlan", "activation_plan", "constrain",
+           "param_shardings"]

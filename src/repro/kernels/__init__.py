@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``pqtopk``        — PQTopK scoring (one-hot MXU) + fused block top-k:
+                      the paper's Algorithm 1, TPU-native (DESIGN.md §3).
+* ``embedding_bag`` — recsys embedding lookup (HBM row-DMA gather-reduce).
+
+Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit wrapper, CPU interpret-mode fallback) and ``ref.py``
+(pure-jnp oracle; tests assert allclose across shape/dtype sweeps).
+"""
+from repro.kernels import embedding_bag, pqtopk
+
+__all__ = ["embedding_bag", "pqtopk"]

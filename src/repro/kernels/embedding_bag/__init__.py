@@ -1,0 +1,3 @@
+from repro.kernels.embedding_bag import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,101 @@
+"""Pallas TPU embedding-bag kernel: the recsys lookup hot path.
+
+JAX has no native ``nn.EmbeddingBag``; the pure-jnp substrate builds it from
+``take`` + ``segment_sum`` (see ``ref.py`` / ``repro.models.embedding``).
+This kernel is the TPU-native version: the table stays in HBM
+(``MemorySpace.ANY``) and each bag's rows are fetched by *dynamic-index DMA*
+into a VMEM scratch buffer (same indirection pattern as paged-attention
+block tables), then reduced on the VPU with padding mask + optional
+per-sample weights.
+
+Layout:
+  indices (n_bags, bag) int32  -> scalar-prefetch (SMEM): DMA addressing
+  weights (n_bags, bag) f32    -> block (TB, bag)
+  table   (V, d) f32           -> stays in HBM (ANY), rows DMA'd on demand
+  out     (n_bags, d) f32      -> block (TB, d)
+
+Grid: one step per TB bags; bag*TB row-DMAs per step are issued before a
+single wait (they can overlap).  Padding entries use index < 0: the DMA is
+clamped to row 0 and the row is masked out of the reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BAGS_PER_STEP = 8
+
+
+def embedding_bag_kernel(idx_ref,        # (n_bags, bag) int32, SMEM prefetch
+                         weights_ref,    # (TB, bag) f32, VMEM
+                         table_ref,      # (V, d) f32, HBM/ANY
+                         out_ref,        # (TB, d) f32, VMEM
+                         scratch_ref,    # (TB, bag, d) f32, VMEM
+                         sem,            # DMA semaphore array (TB, bag)
+                         *, bags_per_step: int, bag: int, mode: str):
+    step = pl.program_id(0)
+    # Issue every row-DMA for this step's bags, then wait once each.
+    for t in range(bags_per_step):
+        for j in range(bag):
+            raw = idx_ref[step * bags_per_step + t, j]
+            row = jnp.maximum(raw, 0)                  # clamp padding (-1)
+            cp = pltpu.make_async_copy(
+                table_ref.at[pl.ds(row, 1), :],
+                scratch_ref.at[t, pl.ds(j, 1), :],
+                sem.at[t, j],
+            )
+            cp.start()
+    for t in range(bags_per_step):
+        for j in range(bag):
+            raw = idx_ref[step * bags_per_step + t, j]
+            row = jnp.maximum(raw, 0)
+            pltpu.make_async_copy(
+                table_ref.at[pl.ds(row, 1), :],
+                scratch_ref.at[t, pl.ds(j, 1), :],
+                sem.at[t, j],
+            ).wait()
+    rows = scratch_ref[...]                            # (TB, bag, d)
+    w = weights_ref[...]                               # (TB, bag)
+    # Mask padding; weights already folded by caller for weighted bags.
+    acc = (rows * w[:, :, None]).sum(axis=1)           # (TB, d)
+    if mode == "mean":
+        denom = jnp.maximum(w.sum(axis=1), 1.0)
+        acc = acc / denom[:, None]
+    out_ref[...] = acc
+
+
+def embedding_bag_call(table: jax.Array, indices: jax.Array,
+                       weights: jax.Array, *, mode: str = "sum",
+                       bags_per_step: int = DEFAULT_BAGS_PER_STEP,
+                       interpret: bool = False) -> jax.Array:
+    """table (V,d) f32, indices (n_bags,bag) i32 (-1 pads), weights
+    (n_bags,bag) f32 -> (n_bags, d) f32."""
+    n_bags, bag = indices.shape
+    v, d = table.shape
+    assert n_bags % bags_per_step == 0, (n_bags, bags_per_step)
+    grid = (n_bags // bags_per_step,)
+    kern = functools.partial(embedding_bag_kernel,
+                             bags_per_step=bags_per_step, bag=bag, mode=mode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bags_per_step, bag), lambda i, idx: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((bags_per_step, d), lambda i, idx: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bags_per_step, bag, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((bags_per_step, bag)),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), jnp.float32),
+        interpret=interpret,
+    )(indices, weights, table)

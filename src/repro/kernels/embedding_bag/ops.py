@@ -1,0 +1,39 @@
+"""Jitted wrapper for the embedding-bag Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import kernel as _k
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bags_per_step",
+                                             "interpret"))
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None, *, mode: str = "sum",
+                  bags_per_step: int = _k.DEFAULT_BAGS_PER_STEP,
+                  interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    n_bags, bag = indices.shape
+    mask = (indices >= 0).astype(jnp.float32)
+    w = mask if weights is None else weights.astype(jnp.float32) * mask
+    bags_per_step = min(bags_per_step, n_bags)
+    pad = (-n_bags) % bags_per_step
+    if pad:
+        indices = jnp.pad(indices, ((0, pad), (0, 0)), constant_values=-1)
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    out = _k.embedding_bag_call(table.astype(jnp.float32),
+                                indices.astype(jnp.int32), w, mode=mode,
+                                bags_per_step=bags_per_step,
+                                interpret=interpret)
+    return out[:n_bags]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: embedding-bag = take + masked weighted reduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None,
+                  mode: str = "sum") -> jax.Array:
+    """table (V,d), indices (n_bags,bag) int (-1 = padding),
+    weights (n_bags,bag) or None -> (n_bags, d)."""
+    mask = (indices >= 0).astype(table.dtype)
+    w = mask if weights is None else weights * mask
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0)   # (n_bags,bag,d)
+    acc = (rows * w[..., None]).sum(axis=1)
+    if mode == "mean":
+        acc = acc / jnp.maximum(w.sum(axis=1), 1.0)[:, None]
+    return acc

@@ -1,0 +1,132 @@
+"""Pallas TPU kernels for PQTopK scoring (Algorithm 1, TPU-native form).
+
+Two kernels:
+
+* ``pq_scores_kernel``     — scores only: for a tile of TN items, expand each
+  split's codes to one-hot via iota comparison (in VMEM, never in HBM) and
+  accumulate ``S_k @ onehot_k^T`` on the MXU.  HBM traffic: m bytes/item of
+  codes (vs 2*d bytes/item for dense scoring).
+
+* ``pq_topk_fused_kernel`` — additionally reduces each tile to its local
+  top-K (iterative max-extract in VMEM) so only (B, n_tiles, K) candidates
+  ever reach HBM; the final merge over tile winners happens outside.  This
+  is the hierarchical top-k of DESIGN.md §3: HBM output drops from
+  O(B*N) to O(B*K*N/TN).
+
+Block layout (grid over item tiles):
+  codes (N, m) int32/int8  -> block (TN, m)      @ row i
+  s     (B, m, b) f32      -> block (B, m, b)    (whole, replicated per step)
+  out   (B, N) f32         -> block (B, TN)      @ col i     [pq_scores]
+  out_v (B, T, K) f32      -> block (B, 1, K)    @ tile i    [fused]
+  out_i (B, T, K) i32      -> block (B, 1, K)    @ tile i    [fused]
+
+VMEM working set per step (TN=2048, b=256, B<=128, f32):
+  onehot 2048*256*4 = 2 MiB, acc B*TN*4 <= 1 MiB, S m*b*B*4 <= 1 MiB.
+MXU shapes: (B, b) @ (b, TN) — b=256 and TN multiples of 128 line up with
+the 128x128 systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 2048
+NEG_INF = float("-inf")
+
+
+def _tile_scores(codes_ref, s_ref):
+    """Shared body: one-hot MXU scoring of one item tile. -> (B, TN) f32."""
+    codes = codes_ref[...].astype(jnp.int32)          # (TN, m)
+    s = s_ref[...].astype(jnp.float32)                # (B, m, b)
+    tn, m = codes.shape
+    b = s.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tn, b), 1)
+    acc = None
+    for k in range(m):                                # m static -> unrolled
+        onehot = (codes[:, k][:, None] == iota).astype(jnp.float32)  # (TN, b)
+        part = jax.lax.dot_general(
+            s[:, k, :], onehot,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                             # (B, TN)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def pq_scores_kernel(codes_ref, s_ref, out_ref):
+    out_ref[...] = _tile_scores(codes_ref, s_ref)
+
+
+def pq_topk_fused_kernel(codes_ref, s_ref, out_v_ref, out_i_ref, *,
+                         k: int, tile: int, n_items: int):
+    i = pl.program_id(0)
+    scores = _tile_scores(codes_ref, s_ref)           # (B, TN)
+    bq, tn = scores.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, tn), 1)
+    # Mask padding beyond the true catalogue size.
+    global_col = col + i * tile
+    scores = jnp.where(global_col < n_items, scores, NEG_INF)
+    # Iterative max-extract: K passes over the VMEM-resident tile.
+    vals = jnp.full((bq, k), NEG_INF, jnp.float32)
+    idxs = jnp.zeros((bq, k), jnp.int32)
+    for j in range(k):                                # k static -> unrolled
+        v = scores.max(axis=1)                        # (B,)
+        a = scores.argmax(axis=1).astype(jnp.int32)   # (B,)
+        vals = vals.at[:, j].set(v)
+        idxs = idxs.at[:, j].set(a + i * tile)
+        scores = jnp.where(col == a[:, None], NEG_INF, scores)
+    out_v_ref[...] = vals[:, None, :]
+    out_i_ref[...] = idxs[:, None, :]
+
+
+def pq_scores_call(codes: jax.Array, s: jax.Array, *, tile: int = DEFAULT_TILE,
+                   interpret: bool = False) -> jax.Array:
+    """codes (N, m) int, s (B, m, b) f32 -> scores (B, N) f32. N % tile == 0."""
+    n, m = codes.shape
+    bq, m2, b = s.shape
+    assert m == m2, (m, m2)
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        pq_scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((bq, m, b), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bq, n), jnp.float32),
+        interpret=interpret,
+    )(codes, s)
+
+
+def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
+                       n_items: int, tile: int = DEFAULT_TILE,
+                       interpret: bool = False):
+    """-> (vals (B, T, K), ids (B, T, K)) per-tile winners; merge outside."""
+    n, m = codes.shape
+    bq, m2, b = s.shape
+    assert m == m2 and n % tile == 0
+    n_tiles = n // tile
+    kern = functools.partial(pq_topk_fused_kernel, k=k, tile=tile,
+                             n_items=n_items)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((bq, m, b), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((bq, 1, k), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bq, n_tiles, k), jnp.float32),
+            jax.ShapeDtypeStruct((bq, n_tiles, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes, s)

@@ -1,0 +1,66 @@
+"""Jitted public wrappers around the pqtopk Pallas kernels.
+
+Handles padding to the tile size, interpret-mode selection (CPU containers
+run the kernel body in Python), and the final cross-tile top-k merge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pqtopk import kernel as _k
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def _pad_codes(codes: jax.Array, tile: int) -> jax.Array:
+    n = codes.shape[0]
+    pad = (-n) % tile
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    return codes
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def pq_scores(codes: jax.Array, s: jax.Array, *, tile: int = _k.DEFAULT_TILE,
+              interpret: bool | None = None) -> jax.Array:
+    """PQ scores for all items. codes (N,m), s (B,m,b) -> (B,N) f32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = codes.shape[0]
+    tile = min(tile, _round_up(n, 128))
+    padded = _pad_codes(codes, tile)
+    out = _k.pq_scores_call(padded, s, tile=tile, interpret=interpret)
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def pq_topk(codes: jax.Array, s: jax.Array, k: int, *,
+            tile: int = _k.DEFAULT_TILE, interpret: bool | None = None):
+    """Fused PQ scoring + hierarchical top-k.  Exact (tile-local winners
+    contain all global winners when k <= tile). -> (vals (B,k), ids (B,k))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = codes.shape[0]
+    tile = min(tile, _round_up(n, 128))
+    if k > tile:
+        raise ValueError(f"k={k} > tile={tile}")
+    padded = _pad_codes(codes, tile)
+    tv, ti = _k.pq_topk_fused_call(padded, s, k, n_items=n, tile=tile,
+                                   interpret=interpret)
+    bq, n_tiles, _ = tv.shape
+    cand_v = tv.reshape(bq, n_tiles * k)
+    cand_i = ti.reshape(bq, n_tiles * k)
+    fv, fi = jax.lax.top_k(cand_v, k)
+    return fv, jnp.take_along_axis(cand_i, fi, axis=1)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the pqtopk kernels (no Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_scores(codes: jax.Array, s: jax.Array) -> jax.Array:
+    """r[q, i] = sum_k s[q, k, codes[i, k]].  codes (N,m), s (B,m,b) -> (B,N)."""
+    idx = codes.T[None].astype(jnp.int32)              # (1, m, N)
+    return jnp.take_along_axis(s.astype(jnp.float32), idx, axis=2).sum(axis=1)
+
+
+def pq_topk(codes: jax.Array, s: jax.Array, k: int):
+    """Exact global top-k of pq_scores. -> (vals (B,k), ids (B,k))."""
+    r = pq_scores(codes, s)
+    return jax.lax.top_k(r, k)

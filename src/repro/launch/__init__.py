@@ -1,0 +1,1 @@
+"""Launch layer: mesh factory, multi-pod dry-run, train/serve drivers."""

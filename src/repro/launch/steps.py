@@ -1,0 +1,448 @@
+"""Step builders for the dry-run matrix: for every (arch × shape × variant)
+produce
+
+  step_fn        — the function to jit
+  args           — ShapeDtypeStruct stand-ins for every input (no allocation)
+  in_shardings   — NamedShardings matching args
+  donate         — argnums to donate
+  plan           — the activation ShardingPlan to trace under
+
+Shapes follow ``repro.configs.base``; shardings follow DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, get_config
+from repro.distributed import sharding as shd
+from repro.training import optimizer as opt_lib, train_loop
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass
+class StepBundle:
+    name: str
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate: Tuple[int, ...]
+    plan: shd.ShardingPlan
+    meta: Dict[str, Any]
+
+
+def _fit(mesh: Mesh, sds, spec: P) -> NamedSharding:
+    """NamedSharding with non-dividing axes dropped (replicated)."""
+    fixed = []
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        ok = axes and sds.shape[dim] % size == 0
+        fixed.append((axes if len(axes) > 1 else axes[0]) if ok else None)
+    fixed += [None] * (len(sds.shape) - len(fixed))
+    return NamedSharding(mesh, P(*fixed))
+
+
+def _tree_shardings(mesh: Mesh, tree, spec_fn) -> Any:
+    return jax.tree.map(lambda x: _fit(mesh, x, spec_fn(x)), tree)
+
+
+def _batch_spec(mesh: Mesh) -> Tuple[str, ...]:
+    return shd.batch_axes(mesh)
+
+
+def _opt_shardings(mesh: Mesh, opt_abs, param_shard):
+    """Optimizer moments mirror the parameter shardings (rank-aware: error
+    feedback for frozen integer leaves collapses to scalars -> replicate)."""
+    def like(tree):
+        return jax.tree.map(
+            lambda t, s: s if len(s.spec) <= len(t.shape)
+            else NamedSharding(mesh, P()), tree, param_shard)
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": like(opt_abs["m"]),
+        "v": like(opt_abs["v"]),
+        **({"ef": like(opt_abs["ef"])} if "ef" in opt_abs else {}),
+    }
+
+
+def _opt_cfg(model) -> opt_lib.AdamWConfig:
+    return opt_lib.AdamWConfig(lr=1e-4, warmup_steps=100, total_steps=10_000,
+                               moment_dtype=model.moment_dtype)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               variant: str) -> StepBundle:
+    from repro.models import transformer as T
+    cfg = arch.model
+    plan = shd.lm_activation_plan(
+        mesh, shard_seq=variant != "noseq",
+        tp_internal=variant in ("seqpar_tp", "seqpar_tp_dots"),
+        vocab_tp=variant.startswith("vocab_tp"))
+    if variant == "seqpar_tp_dots":
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, remat=False)   # trade memory for recompute flops
+        arch = _rep(arch, model=cfg)
+    if variant in ("moe_sort", "moe_sort_vocab_tp") and cfg.moe is not None:
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, moe_impl="sort")
+        arch = _rep(arch, model=cfg)
+        if variant.endswith("vocab_tp"):
+            plan = shd.lm_activation_plan(mesh, shard_seq=True,
+                                          vocab_tp=True)
+    b_axes = _batch_spec(mesh)
+    params_abs = T.abstract_lm(cfg)
+    p_shard = shd.param_shardings(mesh, params_abs,
+                                  shd.lm_param_rules(cfg.scan_layers))
+
+    if shape.kind == "train":
+        bsz, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+        batch_abs = {"tokens": S((bsz, seq), jnp.int32),
+                     "targets": S((bsz, seq), jnp.int32)}
+        batch_shard = _tree_shardings(mesh, batch_abs,
+                                      lambda x: P(b_axes, None))
+        ocfg = _opt_cfg(cfg)
+        powersgd = variant == "powersgd" and "pod" in mesh.axis_names
+        if powersgd:
+            # Inside the manual-pod shard_map the 'pod' axis is stripped
+            # from every activation constraint.
+            plan = shd.strip_axis(plan, "pod")
+            # XLA SPMD-partitioner workaround: sharded embedding gathers
+            # inside a partial-manual region hit a partitioner CHECK
+            # (spmd_partitioner_util.cc:504) — replicate the (un)embedding.
+            repl = NamedSharding(mesh, P())
+            for key in ("embed", "head"):
+                if key in p_shard:
+                    p_shard[key] = jax.tree.map(lambda _: repl, p_shard[key])
+        opt_abs = train_loop.init_opt_state(params_abs, ocfg, abstract=True,
+                                            powersgd=powersgd)
+        o_shard = _opt_shardings(mesh, opt_abs, p_shard)
+        step = train_loop.make_train_step(
+            lambda p, b: T.lm_loss(p, b, cfg), ocfg,
+            powersgd_axis="pod" if powersgd else None, mesh=mesh,
+            grad_shardings=p_shard if variant.endswith("gradrs") else None)
+        return StepBundle(
+            name=f"{arch.arch_id}__{shape.name}",
+            step_fn=step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_shard, o_shard, batch_shard),
+            donate=(0, 1), plan=plan,
+            meta={"kind": "train", "tokens": bsz * seq},
+        )
+
+    if shape.kind == "prefill":
+        bsz, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+        tok_abs = S((bsz, seq), jnp.int32)
+        return StepBundle(
+            name=f"{arch.arch_id}__{shape.name}",
+            step_fn=lambda p, t: T.lm_prefill(p, t, cfg),
+            args=(params_abs, tok_abs),
+            in_shardings=(p_shard, _fit(mesh, tok_abs, P(b_axes, None))),
+            donate=(), plan=plan,
+            meta={"kind": "prefill", "tokens": bsz * seq},
+        )
+
+    # decode (decode_32k / long_500k): one token, KV cache of seq_len.
+    bsz, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    caches_abs = T.init_caches(cfg, bsz, seq, abstract=True)
+    # Batch over data when it divides; sequence over model (+data for B=1).
+    if bsz >= max(mesh.shape.get("data", 1), 1):
+        cache_spec = P(b_axes, "model", None, None)
+    else:
+        cache_spec = P(None, ("data", "model"), None, None)
+    if isinstance(caches_abs, dict):  # stacked (L, B, S, H, D)
+        c_shard = jax.tree.map(
+            lambda x: _fit(mesh, x, P(None, *cache_spec)), caches_abs)
+    else:
+        c_shard = jax.tree.map(lambda x: _fit(mesh, x, cache_spec),
+                               caches_abs)
+    tok_abs = S((bsz,), jnp.int32)
+    pos_abs = S((), jnp.int32)
+    head = {"pqtopk_head": "pqtopk", "dense_head": "dense",
+            "onehot_head": "pqtopk_onehot"}.get(variant, "pqtopk")
+
+    def decode(p, tok, pos, caches):
+        return T.lm_decode_step(p, tok, pos, caches, cfg, k=64,
+                                head_method=head)
+
+    return StepBundle(
+        name=f"{arch.arch_id}__{shape.name}",
+        step_fn=decode,
+        args=(params_abs, tok_abs, pos_abs, caches_abs),
+        in_shardings=(p_shard, _fit(mesh, tok_abs, P(b_axes)),
+                      NamedSharding(mesh, P()), c_shard),
+        donate=(3,), plan=plan,
+        meta={"kind": "decode", "tokens": bsz, "kv_len": seq, "head": head},
+    )
+
+
+# ---------------------------------------------------------------------------
+# SeqRec family (the paper's models)
+# ---------------------------------------------------------------------------
+
+def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                   variant: str) -> StepBundle:
+    from repro.models import seqrec as SR
+    cfg = arch.model
+    plan = shd.lm_activation_plan(mesh, shard_seq=False)
+    b_axes = _batch_spec(mesh)
+    params_abs = SR.abstract_seqrec(cfg)
+    p_shard = shd.param_shardings(mesh, params_abs, shd.seqrec_param_rules())
+
+    if shape.kind == "train":
+        bsz, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+        batch_abs = {
+            "input_seq": S((bsz, seq), jnp.int32),
+            "targets": S((bsz, seq), jnp.int32),
+            "negatives": S((bsz, seq, cfg.n_negatives), jnp.int32),
+        }
+        batch_shard = _tree_shardings(mesh, batch_abs,
+                                      lambda x: P(b_axes, *([None] * (len(x.shape) - 1))))
+        ocfg = _opt_cfg(cfg)
+        opt_abs = train_loop.init_opt_state(params_abs, ocfg, abstract=True)
+        o_shard = _opt_shardings(mesh, opt_abs, p_shard)
+        step = train_loop.make_train_step(
+            lambda p, b: SR.seqrec_loss(p, b, cfg), ocfg)
+        return StepBundle(
+            name=f"{arch.arch_id}__{shape.name}", step_fn=step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_shard, o_shard, batch_shard),
+            donate=(0, 1), plan=plan,
+            meta={"kind": "train", "tokens": bsz * seq},
+        )
+
+    # serve_users: retrieval over the full catalogue.
+    bsz, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    method = {"dense_head": "dense", "recjpq_head": "recjpq",
+              "onehot_head": "pqtopk_onehot",
+              "sharded_head": "pqtopk",
+              "sharded_head_bm": "pqtopk",
+              "sharded_onehot": "pqtopk_onehot"}.get(variant, "pqtopk")
+    sharded = variant.startswith("sharded_")
+    serve_b_axes = b_axes
+    if variant.endswith("_bm"):
+        # Backbone batch over BOTH axes: 256-way instead of data-only.
+        serve_b_axes = tuple(mesh.axis_names)
+        plan = shd.ShardingPlan(mesh, {
+            "seq_hidden": P(serve_b_axes, None, None),
+            "phi": P(serve_b_axes, None),
+        })
+
+    seq_abs = S((bsz, seq), jnp.int32)
+
+    def serve(p, seqs):
+        return SR.serve_topk(p, seqs, cfg, k=10, method=method,
+                             sharded_mesh=mesh if sharded else None)
+
+    return StepBundle(
+        name=f"{arch.arch_id}__{shape.name}", step_fn=serve,
+        args=(params_abs, seq_abs),
+        in_shardings=(p_shard, _fit(mesh, seq_abs, P(serve_b_axes, None))),
+        donate=(), plan=plan,
+        meta={"kind": "retrieval", "users": bsz,
+              "n_items": cfg.n_items, "method": method},
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_abs(cfg, bsz: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if cfg.kind in ("dcn", "fm"):
+        if cfg.n_dense:
+            out["dense"] = S((bsz, cfg.n_dense), jnp.float32)
+        out["sparse"] = S((bsz, cfg.n_sparse), jnp.int32)
+    else:
+        out["seq"] = S((bsz, cfg.seq_len, 2), jnp.int32)
+        out["target"] = S((bsz, 2), jnp.int32)
+    return out
+
+
+def _recsys_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                   variant: str) -> StepBundle:
+    from repro.models import recsys as R
+    cfg = arch.model
+    plan = shd.recsys_activation_plan(mesh)
+    b_axes = _batch_spec(mesh)
+    params_abs = R.abstract_recsys(cfg)
+    p_shard = shd.param_shardings(mesh, params_abs, shd.recsys_param_rules())
+    bsz = shape.dims["global_batch"]
+
+    if shape.kind == "train":
+        batch_abs = dict(_recsys_batch_abs(cfg, bsz),
+                         label=S((bsz,), jnp.float32))
+        batch_shard = _tree_shardings(
+            mesh, batch_abs,
+            lambda x: P(b_axes, *([None] * (len(x.shape) - 1))))
+        ocfg = _opt_cfg(cfg)
+        opt_abs = train_loop.init_opt_state(params_abs, ocfg, abstract=True)
+        o_shard = _opt_shardings(mesh, opt_abs, p_shard)
+        step = train_loop.make_train_step(
+            lambda p, b: R.ctr_loss(p, b, cfg), ocfg)
+        return StepBundle(
+            name=f"{arch.arch_id}__{shape.name}", step_fn=step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_shard, o_shard, batch_shard),
+            donate=(0, 1), plan=plan,
+            meta={"kind": "train", "examples": bsz},
+        )
+
+    if shape.kind == "serve":
+        batch_abs = _recsys_batch_abs(cfg, bsz)
+        batch_shard = _tree_shardings(
+            mesh, batch_abs,
+            lambda x: P(b_axes, *([None] * (len(x.shape) - 1))))
+
+        def serve(p, b):
+            return R.ctr_logits(p, b, cfg)
+
+        return StepBundle(
+            name=f"{arch.arch_id}__{shape.name}", step_fn=serve,
+            args=(params_abs, batch_abs),
+            in_shardings=(p_shard, batch_shard),
+            donate=(), plan=plan,
+            meta={"kind": "serve", "examples": bsz},
+        )
+
+    # retrieval_cand: PQTopK over the candidate catalogue.
+    n_cand = shape.dims["n_candidates"]
+    method = {"dense_head": "dense", "recjpq_head": "recjpq",
+              "onehot_head": "pqtopk_onehot"}.get(variant, "pqtopk")
+    batch_abs = _recsys_batch_abs(cfg, bsz)
+    batch_shard = _tree_shardings(
+        mesh, batch_abs,
+        lambda x: P(b_axes, *([None] * (len(x.shape) - 1))))
+
+    def retrieve(p, b):
+        return R.retrieve_topk(p, b, cfg, k=10, method=method)
+
+    return StepBundle(
+        name=f"{arch.arch_id}__{shape.name}", step_fn=retrieve,
+        args=(params_abs, batch_abs),
+        in_shardings=(p_shard, batch_shard),
+        donate=(), plan=plan,
+        meta={"kind": "retrieval", "n_candidates": n_cand, "method": method},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _gnn_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                variant: str) -> StepBundle:
+    from repro.models import gnn as G
+    cfg = arch.model
+    plan = shd.gnn_activation_plan(mesh)
+    all_axes = tuple(mesh.axis_names)
+    d = shape.dims
+    params_abs = G.abstract_gnn(cfg, d["d_feat"])
+    p_shard = shd.param_shardings(mesh, params_abs, shd.gnn_param_rules())
+    ocfg = _opt_cfg(cfg)
+    opt_abs = train_loop.init_opt_state(params_abs, ocfg, abstract=True)
+    o_shard = _opt_shardings(mesh, opt_abs, p_shard)
+
+    if shape.name == "minibatch_lg":
+        f1, f2 = d["fanout"]
+        bn = d["batch_nodes"]
+        batch_abs = {
+            "feats_b": S((bn, d["d_feat"]), jnp.float32),
+            "feats_n1": S((bn, f1, d["d_feat"]), jnp.float32),
+            "feats_n2": S((bn, f1, f2, d["d_feat"]), jnp.float32),
+            "labels": S((bn,), jnp.int32),
+        }
+        loss = G.gnn_minibatch_loss
+        batch_shard = _tree_shardings(
+            mesh, batch_abs,
+            lambda x: P(_batch_spec(mesh), *([None] * (len(x.shape) - 1))))
+    elif shape.name == "molecule":
+        gbatch, n, e = d["graph_batch"], d["n_nodes"], d["n_edges"]
+        batch_abs = {
+            "feats": S((gbatch * n, d["d_feat"]), jnp.float32),
+            "edges": S((gbatch * e, 2), jnp.int32),
+            "graph_ids": S((gbatch * n,), jnp.int32),
+            "labels": S((gbatch,), jnp.int32),
+        }
+        loss = G.gnn_graph_batch_loss
+        batch_shard = {
+            "feats": _fit(mesh, batch_abs["feats"], P(all_axes, None)),
+            "edges": _fit(mesh, batch_abs["edges"], P(all_axes, None)),
+            "graph_ids": _fit(mesh, batch_abs["graph_ids"], P(all_axes)),
+            "labels": _fit(mesh, batch_abs["labels"], P(all_axes)),
+        }
+    else:  # full_graph_sm / ogb_products: full-batch edge-list training
+        batch_abs = {
+            "feats": S((d["n_nodes"], d["d_feat"]), jnp.float32),
+            "edges": S((d["n_edges"], 2), jnp.int32),
+            "labels": S((d["n_nodes"],), jnp.int32),
+            "label_mask": S((d["n_nodes"],), jnp.float32),
+        }
+        loss = G.gnn_loss
+        batch_shard = {
+            "feats": _fit(mesh, batch_abs["feats"], P()),       # replicated
+            "edges": _fit(mesh, batch_abs["edges"], P(all_axes, None)),
+            "labels": _fit(mesh, batch_abs["labels"], P()),
+            "label_mask": _fit(mesh, batch_abs["label_mask"], P()),
+        }
+
+    n_classes = d.get("n_classes", cfg.n_classes)
+    if n_classes != cfg.n_classes:
+        from dataclasses import replace
+        cfg = replace(cfg, n_classes=n_classes)
+        params_abs = G.abstract_gnn(cfg, d["d_feat"])
+        p_shard = shd.param_shardings(mesh, params_abs, shd.gnn_param_rules())
+        opt_abs = train_loop.init_opt_state(params_abs, ocfg, abstract=True)
+        o_shard = _opt_shardings(mesh, opt_abs, p_shard)
+
+    step = train_loop.make_train_step(
+        functools.partial(lambda p, b, c: loss(p, b, c), c=cfg), ocfg)
+    return StepBundle(
+        name=f"{arch.arch_id}__{shape.name}", step_fn=step,
+        args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(p_shard, o_shard, batch_shard),
+        donate=(0, 1), plan=plan,
+        meta={"kind": "train", "shape": shape.name},
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {
+    "lm": _lm_bundle,
+    "seqrec": _seqrec_bundle,
+    "recsys": _recsys_bundle,
+    "gnn": _gnn_bundle,
+}
+
+
+def build_step(arch_id: str, shape_name: str, mesh: Mesh,
+               variant: str = "baseline",
+               arch_override: Optional[ArchConfig] = None) -> StepBundle:
+    arch = arch_override if arch_override is not None else get_config(arch_id)
+    shape = arch.shape(shape_name)
+    if shape.skip_reason:
+        raise ValueError(
+            f"{arch_id}/{shape_name} is a documented skip: {shape.skip_reason}")
+    bundle = _BUILDERS[arch.family](arch, shape, mesh, variant)
+    bundle.meta["variant"] = variant
+    bundle.meta["family"] = arch.family
+    return bundle

@@ -1,0 +1,135 @@
+"""Training launcher: end-to-end driver with checkpoint/auto-resume and
+failure injection (CPU-scale configs; the production mesh path is exercised
+by dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch sasrec-recjpq \
+      --reduced --steps 200 --batch 64 --ckpt /tmp/ckpt --fail-at 120
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_reduced
+from repro.training import checkpoint as ckpt_lib, fault_tolerance as ft
+from repro.training import optimizer as opt_lib, train_loop
+
+
+def make_data(arch, batch_size: int, seed: int = 0):
+    cfg = arch.model
+    if arch.family == "seqrec":
+        from repro.data.sequences import SeqRecDataset
+        ds = SeqRecDataset.synthetic(
+            max(batch_size * 4, 256), cfg.n_items, 10, cfg.max_seq_len,
+            seed=seed)
+        from repro.models import seqrec as m
+        return (ds.batches(batch_size, cfg.n_negatives,
+                           backbone=cfg.backbone, seed=seed),
+                lambda p, b: m.seqrec_loss(p, b, cfg),
+                lambda key: m.init_seqrec(key, cfg))
+    if arch.family == "recsys":
+        from repro.data.recsys_data import ctr_batches
+        from repro.models import recsys as m
+        return (ctr_batches(cfg, batch_size, seed=seed),
+                lambda p, b: m.ctr_loss(p, b, cfg),
+                lambda key: m.init_recsys(key, cfg))
+    if arch.family == "gnn":
+        from repro.data.graph import NeighborSampler, synthetic_graph
+        from repro.models import gnn as m
+        d_feat = 32
+        g = synthetic_graph(2000, 16000, d_feat, cfg.n_classes, seed=seed)
+        sampler = NeighborSampler(g)
+        rng = np.random.default_rng(seed)
+
+        def gen():
+            while True:
+                nodes = rng.integers(0, g.n_nodes, batch_size)
+                yield sampler.sample_batch(nodes, tuple(cfg.sample_sizes[:2]),
+                                           rng)
+
+        return (gen(), lambda p, b: m.gnn_minibatch_loss(p, b, cfg),
+                lambda key: m.init_gnn(key, cfg, d_feat))
+    if arch.family == "lm":
+        from repro.models import transformer as m
+        vocab, seq = cfg.vocab, 64
+        rng = np.random.default_rng(seed)
+
+        def gen():
+            while True:
+                tok = rng.integers(0, vocab, (batch_size, seq + 1))
+                yield {"tokens": tok[:, :-1].astype(np.int32),
+                       "targets": tok[:, 1:].astype(np.int32)}
+
+        return (gen(), lambda p, b: m.lm_loss(p, b, cfg),
+                lambda key: m.init_lm(key, cfg))
+    raise ValueError(arch.family)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, action="append", default=[])
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    data, loss_fn, init_fn = make_data(arch, args.batch)
+    ocfg = opt_lib.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                               total_steps=args.steps,
+                               moment_dtype=arch.model.moment_dtype)
+    step_fn = jax.jit(train_loop.make_train_step(loss_fn, ocfg),
+                      donate_argnums=(0, 1))
+    injector = ft.FailureInjector(args.fail_at)
+    straggler = ft.StragglerMonitor()
+    mgr = ckpt_lib.CheckpointManager(args.ckpt) if args.ckpt else None
+
+    def make_state():
+        params = init_fn(jax.random.PRNGKey(0))
+        opt_state = train_loop.init_opt_state(params, ocfg)
+        start = 0
+        if mgr is not None and mgr.latest_step() is not None:
+            start = mgr.latest_step()
+            restored = mgr.restore(start, {"params": params,
+                                           "opt_state": opt_state})
+            params, opt_state = restored["params"], restored["opt_state"]
+            print(f"resumed from step {start}")
+        return {"params": params, "opt_state": opt_state, "step": start}
+
+    def train(state, restarts):
+        params, opt_state = state["params"], state["opt_state"]
+        for step in range(state["step"], args.steps):
+            t0 = time.monotonic()
+            injector.check(step)
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            straggler.record(step, time.monotonic() - t0)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f}")
+            if mgr is not None and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, {"params": params, "opt_state": opt_state})
+        if mgr is not None:
+            mgr.save(args.steps, {"params": params, "opt_state": opt_state},
+                     block=True)
+            mgr.wait()
+        print(f"finished {args.steps} steps "
+              f"({len(straggler.flagged)} straggler steps flagged)")
+        return {"params": params, "opt_state": opt_state}
+
+    return ft.run_with_restarts(make_state, train,
+                                max_restarts=args.max_restarts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import (attention, embedding, gnn, layers, moe, recsys,
+                          seqrec, transformer)
+
+__all__ = ["attention", "embedding", "gnn", "layers", "moe", "recsys",
+           "seqrec", "transformer"]

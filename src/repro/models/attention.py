@@ -1,0 +1,256 @@
+"""GQA attention: chunked (flash-style) training/prefill path + KV-cache
+decode path, with optional sliding window and QK-norm.
+
+The chunked path is pure JAX (lax.scan over KV chunks with online-softmax
+carry) so it lowers on any backend — this is what the multi-pod dry-run
+compiles.  On TPU the same interface can dispatch to a Pallas kernel; the
+distribution-level analysis is identical (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+DEFAULT_KV_CHUNK = 1024
+NEG_INF = -1e30
+
+# Analysis mode: unroll the KV-chunk scan into a python loop so XLA cost
+# analysis (which counts while-loop bodies ONCE) sees every chunk.  Set by
+# launch/dryrun.py during roofline-extrapolation compiles only.
+UNROLL_CHUNKS = False
+
+
+def attention_init(key: jax.Array, cfg: AttentionConfig, d_model: int,
+                   dtype: Any = jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    q_dim = cfg.n_heads * cfg.head_dim
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    p = {
+        "wq": layers.dense_init(ks[0], d_model, q_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": layers.dense_init(ks[1], d_model, kv_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": layers.dense_init(ks[2], d_model, kv_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": layers.dense_init(ks[3], q_dim, d_model, dtype=dtype,
+                                scale=q_dim ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.norm_init(cfg.head_dim, "rmsnorm", dtype)
+        p["k_norm"] = layers.norm_init(cfg.head_dim, "rmsnorm", dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: AttentionConfig, x: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = layers.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = layers.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.apply_norm(p["q_norm"], q, "rmsnorm")
+        k = layers.apply_norm(p["k_norm"], k, "rmsnorm")
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      kv_chunk: int = DEFAULT_KV_CHUNK) -> jax.Array:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); Hq = Hkv * G.
+    window > 0 limits attention to the last ``window`` positions (inclusive
+    of self).  Peak memory: one (B, Hkv, G, Sq, chunk) score block.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = sk // kv_chunk if sk % kv_chunk == 0 else -(-sk // kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(b, n_chunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, n_chunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        idx, k_i, v_i = xs
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s_blk = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_i.astype(jnp.float32))
+        mask = k_pos[None, :] < sk                 # padding
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s_blk.max(-1))
+        p_blk = jnp.exp(s_blk - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + p_blk.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p_blk, v_i.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    if UNROLL_CHUNKS:
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (jnp.int32(i), kc[i], vc[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def full_attention(p: Params, cfg: AttentionConfig, x: jax.Array, *,
+                   is_global: jax.Array | bool = True, causal: bool = True,
+                   kv_chunk: int = DEFAULT_KV_CHUNK) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill).
+
+    ``is_global`` may be a traced bool (scan over heterogeneous layers):
+    local layers apply the sliding window by adding the window mask, chosen
+    with a where() on the two mask variants inside the chunk scan — we
+    implement it by running the windowed mask with window size selected per
+    layer (window or "infinite").
+    """
+    from repro.distributed.sharding import constrain
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # TP hook: shard query heads over 'model' (Megatron-SP plans set
+    # "attn_q_heads"; no-op in the baseline plan).
+    q = constrain(q, "attn_q_heads")
+    if isinstance(is_global, bool):
+        window = 0 if is_global else cfg.window
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                kv_chunk=kv_chunk)
+    else:
+        # Traced layer type: compute the window mask with an effective
+        # window of `s` (= no-op) for global layers.  One attention pass.
+        eff_window = jnp.where(is_global, jnp.int32(s + 1),
+                               jnp.int32(cfg.window))
+        out = _chunked_attention_dyn_window(q, k, v, causal=causal,
+                                            window=eff_window,
+                                            kv_chunk=kv_chunk)
+    out = constrain(out, "attn_q_heads")
+    b_, s_, hq, d = out.shape
+    return layers.dense(p["wo"], out.reshape(b_, s_, hq * d))
+
+
+def _chunked_attention_dyn_window(q, k, v, *, causal, window, kv_chunk):
+    """chunked_attention with a traced (dynamic) window size."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = -(-sk // kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(b, n_chunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, n_chunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        idx, k_i, v_i = xs
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s_blk = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_i.astype(jnp.float32))
+        mask = k_pos[None, :] < sk
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s_blk.max(-1))
+        p_blk = jnp.exp(s_blk - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + p_blk.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p_blk, v_i.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    if UNROLL_CHUNKS:
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (jnp.int32(i), kc[i], vc[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, max_len: int, cfg: AttentionConfig, *,
+               is_global: bool, dtype: Any = jnp.bfloat16,
+               ) -> Dict[str, jax.Array]:
+    """Global layers cache max_len positions; local layers a ring buffer of
+    ``window`` positions (O(window) memory — what makes long_500k viable for
+    sliding-window archs)."""
+    length = max_len if is_global else min(cfg.window, max_len)
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(batch: int, max_len: int, cfg: AttentionConfig, *,
+                   is_global: bool, dtype: Any = jnp.bfloat16):
+    length = max_len if is_global else min(cfg.window, max_len)
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_attend(p: Params, cfg: AttentionConfig, x: jax.Array,
+                  cache: Dict[str, jax.Array], pos: jax.Array,
+                  is_global: jax.Array | bool,
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  x: (B, 1, d_model); pos: scalar current position.
+
+    Writes the new KV at ``pos`` (global) or ``pos % window`` (ring buffer),
+    then attends over the valid cache region.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, jnp.full((b, 1), pos))
+    cache_len = cache["k"].shape[1]
+    slot = jnp.where(jnp.asarray(is_global), pos, pos % cache_len)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    hq, hkv, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32))
+    # Valid region: ring slots written so far (local) or positions <= pos.
+    slots = jnp.arange(cache_len)
+    valid_global = slots <= pos
+    valid_local = slots <= jnp.minimum(pos, cache_len - 1)  # ring fills up
+    valid = jnp.where(jnp.asarray(is_global), valid_global, valid_local)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * d).astype(x.dtype)
+    return layers.dense(p["wo"], out), {"k": k, "v": v}

@@ -1,0 +1,70 @@
+"""Sparse-feature embedding substrate for recsys archs.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — per the brief this
+is built here: per-field tables + ``take``-based single-valued lookup +
+bag (multi-hot) lookup via take + masked segment reduce.  Tables are
+row-sharded over the ``model`` mesh axis (DESIGN.md §5); the Pallas
+``embedding_bag`` kernel is the TPU fast path for the bag case.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def init_tables(key: jax.Array, rows: Sequence[int], dim: int,
+                dtype: Any = jnp.float32) -> Params:
+    keys = jax.random.split(key, len(rows))
+    return {
+        "tables": [
+            (jax.random.normal(k, (r, dim), jnp.float32) * 0.02).astype(dtype)
+            for k, r in zip(keys, rows)
+        ]
+    }
+
+
+def lookup_fields(params: Params, ids: jax.Array) -> jax.Array:
+    """Single-valued categorical fields.  ids: (B, n_fields) ->
+    (B, n_fields, dim)."""
+    outs = [jnp.take(t, ids[:, i], axis=0)
+            for i, t in enumerate(params["tables"])]
+    return jnp.stack(outs, axis=1)
+
+
+def lookup_bag(table: jax.Array, indices: jax.Array,
+               weights: jax.Array | None = None, mode: str = "sum",
+               use_kernel: bool = False) -> jax.Array:
+    """EmbeddingBag over one table: indices (B, bag), -1 = padding."""
+    if use_kernel:
+        from repro.kernels.embedding_bag import ops
+        return ops.embedding_bag(table, indices, weights, mode=mode)
+    mask = (indices >= 0).astype(table.dtype)
+    w = mask if weights is None else weights.astype(table.dtype) * mask
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0)
+    acc = (rows * w[..., None]).sum(axis=1)
+    if mode == "mean":
+        acc = acc / jnp.maximum(w.sum(axis=1), 1.0)[:, None]
+    return acc
+
+
+def segment_embedding_bag(table: jax.Array, flat_indices: jax.Array,
+                          segment_ids: jax.Array, n_bags: int,
+                          weights: jax.Array | None = None,
+                          mode: str = "sum") -> jax.Array:
+    """Ragged EmbeddingBag: CSR-style (values, segment ids) layout built on
+    ``jax.ops.segment_sum`` — the canonical JAX form of torch's
+    EmbeddingBag(include_last_offset) API."""
+    rows = jnp.take(table, flat_indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    acc = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(flat_indices, table.dtype), segment_ids,
+            num_segments=n_bags)
+        acc = acc / jnp.maximum(cnt, 1.0)[:, None]
+    return acc

@@ -1,0 +1,131 @@
+"""Shared NN building blocks (pure-functional: init_* returns a params dict,
+apply functions are free functions)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, *, bias: bool = False,
+               dtype: Any = jnp.float32, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key: jax.Array, vocab: int, d: int,
+                   dtype: Any = jnp.float32, scale: float = 0.02) -> Params:
+    t = jax.random.normal(key, (vocab, d), jnp.float32) * scale
+    return {"table": t.astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 compute)
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype: Any = jnp.float32) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),   # Primer / Nemotron
+        "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D), positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                            # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated GLU or plain 2-matrix)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, *, gated: bool,
+             dtype: Any = jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "down": dense_init(ks[1], d_ff, d_model, dtype=dtype,
+                           scale=d_ff ** -0.5),
+    }
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    from repro.distributed.sharding import constrain
+    f = activation(act)
+    h = dense(p["up"], x)
+    if "gate" in p:
+        h = f(dense(p["gate"], x)) * h
+    else:
+        h = f(h)
+    # TP hook: keeps the d_ff intermediate model-sharded (Megatron-SP
+    # layouts set "mlp_hidden" in the activation plan; no-op otherwise).
+    h = constrain(h, "mlp_hidden")
+    return dense(p["down"], h)

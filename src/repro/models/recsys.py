@@ -1,0 +1,283 @@
+"""RecSys CTR/retrieval models: DCN-v2, BST, DIEN (AUGRU), FM.
+
+All four share the embedding substrate (``models/embedding.py``) and a PQ
+item catalogue for the ``retrieval_cand`` path: candidates are scored with
+PQTopK (the paper's technique) and, where the model has a non-factorised
+interaction (DCN/BST/DIEN), the top slate is re-ranked by the full model
+(DESIGN.md §4 cascade).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.core import retrieval_head
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_lib, embedding, layers
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# shared init
+# ---------------------------------------------------------------------------
+
+def _mlp_tower_init(key: jax.Array, d_in: int, widths, dtype) -> list:
+    ks = jax.random.split(key, len(widths) + 1)
+    tower = []
+    prev = d_in
+    for i, w in enumerate(widths):
+        tower.append(layers.dense_init(ks[i], prev, w, bias=True, dtype=dtype))
+        prev = w
+    tower.append(layers.dense_init(ks[-1], prev, 1, bias=True, dtype=dtype))
+    return tower
+
+
+def _mlp_tower(tower: list, x: jax.Array) -> jax.Array:
+    for p in tower[:-1]:
+        x = jax.nn.relu(layers.dense(p, x))
+    return layers.dense(tower[-1], x)[..., 0]
+
+
+def init_recsys(key: jax.Array, cfg: RecsysConfig, codes=None,
+                centroids=None) -> Params:
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Params = {"emb": embedding.init_tables(ks[0], cfg.table_rows,
+                                              cfg.embed_dim, dtype)}
+    d_emb = cfg.n_sparse * cfg.embed_dim
+
+    if cfg.kind == "dcn":
+        d0 = cfg.n_dense + d_emb
+        cross = []
+        cks = jax.random.split(ks[1], cfg.n_cross_layers)
+        for i in range(cfg.n_cross_layers):
+            cross.append(layers.dense_init(cks[i], d0, d0, bias=True,
+                                           dtype=dtype))
+        p["cross"] = cross
+        p["mlp"] = _mlp_tower_init(ks[2], d0, cfg.mlp, dtype)
+        p["user_proj"] = layers.dense_init(ks[3], d0, cfg.embed_dim,
+                                           dtype=dtype)
+    elif cfg.kind == "bst":
+        head_dim = cfg.embed_dim * cfg.n_sparse // cfg.n_heads
+        d_tok = cfg.embed_dim * cfg.n_sparse        # item+cate per position
+        from repro.configs.base import AttentionConfig
+        acfg = AttentionConfig(n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                               head_dim=max(head_dim, 8))
+        blocks = []
+        for i in range(cfg.n_blocks):
+            bks = jax.random.split(jax.random.fold_in(ks[1], i), 2)
+            blocks.append({
+                "attn": attn_lib.attention_init(bks[0], acfg, d_tok, dtype),
+                "ln1": layers.norm_init(d_tok, "layernorm", dtype),
+                "ln2": layers.norm_init(d_tok, "layernorm", dtype),
+                "mlp": layers.mlp_init(bks[1], d_tok, 4 * d_tok, gated=False,
+                                       dtype=dtype),
+            })
+        p["blocks"] = blocks
+        p["pos_emb"] = layers.embedding_init(ks[2], cfg.seq_len + 1, d_tok,
+                                             dtype)
+        p["mlp"] = _mlp_tower_init(ks[3], d_tok * (cfg.seq_len + 1), cfg.mlp,
+                                   dtype)
+    elif cfg.kind == "dien":
+        d_in = cfg.embed_dim * cfg.n_sparse          # item+cate concat
+        p["gru"] = _gru_init(ks[1], d_in, cfg.gru_dim, dtype)
+        p["augru"] = _gru_init(ks[2], cfg.gru_dim, cfg.gru_dim, dtype)
+        p["att"] = layers.dense_init(ks[3], cfg.gru_dim, d_in, dtype=dtype)
+        p["mlp"] = _mlp_tower_init(ks[4], cfg.gru_dim + d_in, cfg.mlp, dtype)
+    elif cfg.kind == "fm":
+        p["linear"] = {
+            "w": [jnp.zeros((r,), dtype) for r in cfg.table_rows],
+            "b": jnp.zeros((), dtype),
+        }
+    else:
+        raise ValueError(cfg.kind)
+
+    if cfg.pq is not None:
+        # PQ item catalogue for retrieval_cand (query dim = embed_dim).
+        p["item_emb"] = retrieval_head.init(ks[6], cfg.n_items, cfg.embed_dim,
+                                            cfg.pq, codes=codes,
+                                            centroids=centroids,
+                                            dtype=jnp.float32)
+    return p
+
+
+def abstract_recsys(cfg: RecsysConfig) -> Params:
+    return jax.eval_shape(functools.partial(init_recsys, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# GRU / AUGRU (DIEN)
+# ---------------------------------------------------------------------------
+
+def _gru_init(key: jax.Array, d_in: int, d_h: int, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    scale = (d_in + d_h) ** -0.5
+    wx = jax.random.normal(ks[0], (d_in, 3 * d_h), jnp.float32) * scale
+    wh = jax.random.normal(ks[1], (d_h, 3 * d_h), jnp.float32) * scale
+    return {"wx": wx.astype(dtype), "wh": wh.astype(dtype),
+            "b": jnp.zeros((3 * d_h,), dtype)}
+
+
+def _gru_cell(p: Params, h: jax.Array, x: jax.Array,
+              a: jax.Array | None = None) -> jax.Array:
+    d_h = h.shape[-1]
+    gates = x @ p["wx"].astype(x.dtype) + h @ p["wh"].astype(x.dtype) \
+        + p["b"].astype(x.dtype)
+    r, z, n = jnp.split(gates, 3, axis=-1)
+    r, z = jax.nn.sigmoid(r), jax.nn.sigmoid(z)
+    n = jnp.tanh(n + (r - 1.0) * (h @ p["wh"].astype(x.dtype))[..., 2 * d_h:])
+    if a is not None:                      # AUGRU: attention-scaled update
+        z = z * a[..., None]
+    return (1.0 - z) * n + z * h
+
+
+def gru_scan(p: Params, xs: jax.Array, att: jax.Array | None = None,
+             ) -> jax.Array:
+    """xs (B, S, d_in) -> all hidden states (B, S, d_h)."""
+    b = xs.shape[0]
+    d_h = p["wh"].shape[0]
+    h0 = jnp.zeros((b, d_h), xs.dtype)
+
+    def step(h, inp):
+        if att is None:
+            x = inp
+            h = _gru_cell(p, h, x)
+        else:
+            x, a = inp
+            h = _gru_cell(p, h, x, a)
+        return h, h
+
+    seq = xs.swapaxes(0, 1)
+    inputs = seq if att is None else (seq, att.swapaxes(0, 1))
+    _, hs = jax.lax.scan(step, h0, inputs)
+    return hs.swapaxes(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# forward per kind: pointwise CTR score
+# ---------------------------------------------------------------------------
+
+def ctr_logits(params: Params, batch: Dict[str, jax.Array],
+               cfg: RecsysConfig) -> jax.Array:
+    """Pointwise (user, item) scoring -> logit (B,)."""
+    if cfg.kind == "dcn":
+        emb = embedding.lookup_fields(params["emb"], batch["sparse"])
+        x0 = jnp.concatenate(
+            [batch["dense"].astype(emb.dtype),
+             emb.reshape(emb.shape[0], -1)], axis=-1)
+        x0 = constrain(x0, "hidden")
+        x = x0
+        for cp in params["cross"]:
+            x = x0 * layers.dense(cp, x) + x      # DCN-v2 cross layer
+        return _mlp_tower(params["mlp"], x)
+    if cfg.kind == "bst":
+        # behaviour sequence (B, S, 2) ids + target (B, 2): embed, concat
+        # fields per position, prepend target, transformer, MLP.
+        seq_emb = _bst_tokens(params, batch["seq"], batch["target"], cfg)
+        x = seq_emb
+        from repro.configs.base import AttentionConfig
+        d_tok = x.shape[-1]
+        acfg = AttentionConfig(n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                               head_dim=max(d_tok // cfg.n_heads, 8))
+        for blk in params["blocks"]:
+            h = layers.apply_norm(blk["ln1"], x, "layernorm")
+            h = attn_lib.full_attention(blk["attn"], acfg, h, causal=False)
+            x = x + h
+            h = layers.apply_norm(blk["ln2"], x, "layernorm")
+            x = x + layers.mlp(blk["mlp"], h, "relu")
+        return _mlp_tower(params["mlp"], x.reshape(x.shape[0], -1))
+    if cfg.kind == "dien":
+        seq_emb = embedding.lookup_fields(params["emb"],
+                                          batch["seq"].reshape(-1, 2))
+        b, s = batch["seq"].shape[:2]
+        seq_emb = seq_emb.reshape(b, s, -1)             # (B, S, 2*emb)
+        tgt_emb = embedding.lookup_fields(params["emb"], batch["target"])
+        tgt_emb = tgt_emb.reshape(b, -1)                # (B, 2*emb)
+        hs = gru_scan(params["gru"], seq_emb)           # interest extraction
+        att_logits = jnp.einsum(
+            "bsd,bd->bs", layers.dense(params["att"], hs), tgt_emb)
+        att = jax.nn.softmax(att_logits, axis=-1)
+        hs2 = gru_scan(params["augru"], hs, att)        # interest evolution
+        final = hs2[:, -1, :]
+        x = jnp.concatenate([final, tgt_emb], axis=-1)
+        return _mlp_tower(params["mlp"], x)
+    if cfg.kind == "fm":
+        emb = embedding.lookup_fields(params["emb"], batch["sparse"])
+        sum_v = emb.sum(1)
+        sum_sq = jnp.square(emb).sum(1)
+        pairwise = 0.5 * (jnp.square(sum_v) - sum_sq).sum(-1)
+        lin = params["linear"]["b"].astype(pairwise.dtype)
+        for i, w in enumerate(params["linear"]["w"]):
+            lin = lin + jnp.take(w, batch["sparse"][:, i])
+        return lin + pairwise
+    raise ValueError(cfg.kind)
+
+
+def _bst_tokens(params: Params, seq: jax.Array, target: jax.Array,
+                cfg: RecsysConfig) -> jax.Array:
+    b, s = seq.shape[:2]
+    seq_emb = embedding.lookup_fields(params["emb"], seq.reshape(-1, 2))
+    seq_emb = seq_emb.reshape(b, s, -1)
+    tgt_emb = embedding.lookup_fields(params["emb"], target).reshape(b, 1, -1)
+    x = jnp.concatenate([seq_emb, tgt_emb], axis=1)     # (B, S+1, d_tok)
+    return x + params["pos_emb"]["table"][None, :s + 1].astype(x.dtype)
+
+
+def ctr_loss(params: Params, batch: Dict[str, jax.Array], cfg: RecsysConfig,
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = ctr_logits(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    loss = -(y * jax.nn.log_sigmoid(logits)
+             + (1 - y) * jax.nn.log_sigmoid(-logits)).mean()
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# retrieval: PQTopK over the item catalogue (paper technique)
+# ---------------------------------------------------------------------------
+
+def user_query(params: Params, batch: Dict[str, jax.Array],
+               cfg: RecsysConfig) -> jax.Array:
+    """User-side query vector in item-embedding space (B, embed_dim)."""
+    if cfg.kind == "dcn":
+        emb = embedding.lookup_fields(params["emb"], batch["sparse"])
+        x0 = jnp.concatenate(
+            [batch["dense"].astype(emb.dtype),
+             emb.reshape(emb.shape[0], -1)], axis=-1)
+        return layers.dense(params["user_proj"], x0).astype(jnp.float32)
+    if cfg.kind == "bst":
+        seq_emb = embedding.lookup_fields(
+            params["emb"], batch["seq"].reshape(-1, 2))
+        b, s = batch["seq"].shape[:2]
+        # Mean-pooled history, item-field half only.
+        return seq_emb.reshape(b, s, 2, -1)[:, :, 0, :].mean(1).astype(
+            jnp.float32)
+    if cfg.kind == "dien":
+        seq_emb = embedding.lookup_fields(
+            params["emb"], batch["seq"].reshape(-1, 2))
+        b, s = batch["seq"].shape[:2]
+        seq_emb = seq_emb.reshape(b, s, -1)
+        hs = gru_scan(params["gru"], seq_emb)
+        # Final interest state projected onto the item half via att weights.
+        return layers.dense(params["att"], hs[:, -1, :])[
+            :, :cfg.embed_dim].astype(jnp.float32)
+    if cfg.kind == "fm":
+        emb = embedding.lookup_fields(params["emb"], batch["sparse"])
+        return emb.sum(1).astype(jnp.float32)   # FM user-side sum of factors
+    raise ValueError(cfg.kind)
+
+
+def retrieve_topk(params: Params, batch: Dict[str, jax.Array],
+                  cfg: RecsysConfig, *, k: int = 10,
+                  method: str = "pqtopk"):
+    """retrieval_cand path: PQTopK over the n_items catalogue."""
+    phi = constrain(user_query(params, batch, cfg), "hidden")
+    vals, ids = retrieval_head.top_items(params["item_emb"], phi, k,
+                                         method=method)
+    return ids, vals

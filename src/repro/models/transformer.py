@@ -1,0 +1,265 @@
+"""Configurable decoder/encoder LM covering every assigned LM arch:
+GQA + RoPE (+QK-norm, QKV-bias), sliding/global layer interleave, dense or
+MoE FFN, squared-ReLU / SiLU / GeGLU, scan-over-layers + remat, and the
+PQ-compressed retrieval head on the decode path (the paper's technique
+applied to vocab scoring — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core import retrieval_head
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, moe as moe_lib
+
+Params = Dict[str, Any]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_cast(x, dtype):
+    """Identity fwd; cast the cotangent to ``dtype`` in bwd — pins the
+    backward residual stream to bf16 so weight gathers / grad psums move
+    2-byte data (§Perf 'bf16_grads' iteration)."""
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, None
+
+
+def _grad_cast_bwd(dtype, _, g):
+    return (g.astype(dtype),)
+
+
+_grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "attn": attention.attention_init(ks[0], cfg.attention, cfg.d_model, dtype),
+        "ln1": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+        "ln2": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.moe is None:
+        p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                   gated=cfg.gated_mlp, dtype=dtype)
+    else:
+        p["moe"] = moe_lib.moe_init(ks[1], cfg.moe, cfg.d_model,
+                                    gated=cfg.gated_mlp, dtype=dtype)
+    return p
+
+
+def init_lm(key: jax.Array, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    else:
+        blocks = [init_block(k, cfg) for k in layer_keys]
+    p: Params = {
+        "embed": layers.embedding_init(ks[1], cfg.vocab, cfg.d_model, dtype),
+        "layers": blocks,
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.dense_init(ks[2], cfg.d_model, cfg.vocab,
+                                      dtype=dtype)
+    if cfg.pq_head is not None:
+        p["pq_head"] = retrieval_head.init(ks[3], cfg.vocab, cfg.d_model,
+                                           cfg.pq_head, dtype=jnp.float32)
+    return p
+
+
+def abstract_lm(cfg: LMConfig) -> Params:
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return jax.eval_shape(functools.partial(init_lm, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def layer_types(cfg: LMConfig) -> np.ndarray:
+    """Per-layer is_global flags (sliding/global interleave)."""
+    return np.array([cfg.attention.layer_is_global(i)
+                     for i in range(cfg.n_layers)])
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill): scan over layers
+# ---------------------------------------------------------------------------
+
+def _block_fwd(blk: Params, cfg: LMConfig, x: jax.Array,
+               is_global: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    x = _grad_cast(x, jnp.dtype(cfg.dtype))
+    h = layers.apply_norm(blk["ln1"], x, cfg.norm)
+    h = attention.full_attention(blk["attn"], cfg.attention, h,
+                                 is_global=is_global, causal=cfg.causal)
+    x = x + h
+    h = layers.apply_norm(blk["ln2"], x, cfg.norm)
+    if cfg.moe is None:
+        h, aux = layers.mlp(blk["mlp"], h, cfg.act), jnp.float32(0.0)
+    else:
+        h, aux = moe_lib.moe_ffn(blk["moe"], cfg.moe, h, cfg.act,
+                                 impl=cfg.moe_impl)
+    x = constrain(x + h, "hidden")
+    return x, aux
+
+
+def lm_hidden(params: Params, tokens: jax.Array, cfg: LMConfig) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (hidden (B, S, d), aux_loss)."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = constrain(x.astype(jnp.dtype(cfg.dtype)), "hidden")
+    flags = jnp.asarray(layer_types(cfg))
+
+    def body(x, xs):
+        blk, is_global = xs
+        x, aux = _block_fwd(blk, cfg, x, is_global)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(body, x, (params["layers"], flags))
+        aux = auxs.sum()
+    else:
+        aux = jnp.float32(0.0)
+        for i, blk in enumerate(params["layers"]):
+            x, a = body(x, (blk, flags[i]))
+            aux = aux + a
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def unembed(params: Params, hidden: jax.Array, cfg: LMConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(hidden.dtype)   # (V, d)
+        logits = jnp.einsum("bsd,vd->bsv", hidden, w)
+    else:
+        logits = layers.dense(params["head"], hidden)
+    return constrain(logits, "logits")
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: LMConfig,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal-LM cross entropy over the (model-sharded) vocab."""
+    hidden, aux = lm_hidden(params, batch["tokens"], cfg)
+    logits = unembed(params, hidden, cfg).astype(jnp.float32)
+    targets = batch["targets"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with PQ head
+# ---------------------------------------------------------------------------
+
+def _uniform_layers(cfg: LMConfig) -> bool:
+    flags = layer_types(cfg)
+    return bool(flags.all()) and cfg.scan_layers
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int, *, abstract=False):
+    """KV caches.
+
+    * Homogeneous all-global archs (qwen/nemotron/dbrx/qwen3-moe): one
+      *stacked* (L, B, S, H, D) cache pair so decode can scan over layers
+      (small HLO — critical for 96-layer compiles).
+    * Mixed sliding/global archs (gemma3): per-layer list; sliding layers
+      get an O(window) ring buffer — the memory shape that makes long_500k
+      viable (DESIGN.md §4).
+    """
+    mk = attention.abstract_cache if abstract else attention.init_cache
+    flags = layer_types(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    if _uniform_layers(cfg):
+        one = mk(batch, max_len, cfg.attention, is_global=True, dtype=dtype)
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape,
+                                               s.dtype), one)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    return [mk(batch, max_len, cfg.attention, is_global=bool(flags[i]),
+               dtype=dtype) for i in range(cfg.n_layers)]
+
+
+def lm_decode_step(params: Params, token: jax.Array, pos: jax.Array,
+                   caches, cfg: LMConfig, *, k: int = 64,
+                   head_method: str = "pqtopk"):
+    """One decode step. token (B,), pos scalar.
+
+    Returns (topk_ids (B,k), topk_scores (B,k), updated caches).
+    Vocab scoring goes through the PQ retrieval head (paper technique) or
+    the dense unembedding (baseline), selected by ``head_method``.
+    """
+    x = jnp.take(params["embed"]["table"], token[:, None], axis=0)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    flags = layer_types(cfg)
+
+    def body(x, blk, cache, is_global):
+        h = layers.apply_norm(blk["ln1"], x, cfg.norm)
+        h, new_cache = attention.decode_attend(blk["attn"], cfg.attention, h,
+                                               cache, pos, is_global)
+        x = x + h
+        h = layers.apply_norm(blk["ln2"], x, cfg.norm)
+        if cfg.moe is None:
+            h = layers.mlp(blk["mlp"], h, cfg.act)
+        else:
+            h, _ = moe_lib.moe_ffn(blk["moe"], cfg.moe, h, cfg.act,
+                                   impl=cfg.moe_impl)
+        return x + h, new_cache
+
+    if _uniform_layers(cfg):
+        # Homogeneous layers: scan with stacked caches (compact HLO).
+        def scan_body(x, xs):
+            blk, cache = xs
+            return body(x, blk, cache, True)
+
+        x, new_caches = jax.lax.scan(scan_body, x,
+                                     (params["layers"], caches))
+    else:
+        # Mixed sliding/global: unroll so each layer keeps its own cache
+        # shape (ring buffers for sliding layers).
+        new_caches = []
+        for i in range(cfg.n_layers):
+            blk = (jax.tree.map(lambda a: a[i], params["layers"])
+                   if cfg.scan_layers else params["layers"][i])
+            x, nc = body(x, blk, caches[i], bool(flags[i]))
+            new_caches.append(nc)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    phi = constrain(x[:, 0, :].astype(jnp.float32), "phi")     # (B, d)
+
+    if head_method == "dense":
+        w = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["head"]["w"].T)
+        scores = jnp.einsum("bd,vd->bv", phi, w.astype(jnp.float32))
+        scores = constrain(scores, "scores")
+        vals, ids = jax.lax.top_k(scores, k)
+    else:
+        scores = retrieval_head.score_all(params["pq_head"], phi, head_method)
+        scores = constrain(scores, "scores")
+        vals, ids = jax.lax.top_k(scores, k)
+    return ids, vals, new_caches
+
+
+def lm_prefill(params: Params, tokens: jax.Array, cfg: LMConfig):
+    """Prefill: full forward returning last-position hidden (the serving
+    engine fills KV caches incrementally through decode; the dry-run prefill
+    cell measures the full-sequence forward)."""
+    hidden, _ = lm_hidden(params, tokens, cfg)
+    return hidden[:, -1, :]

@@ -1,0 +1,5 @@
+from repro.serving.engine import (DecodeEngine, MicroBatcher, Request,
+                                  Result, RetrievalEngine)
+
+__all__ = ["DecodeEngine", "MicroBatcher", "Request", "Result",
+           "RetrievalEngine"]

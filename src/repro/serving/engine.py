@@ -1,0 +1,180 @@
+"""Batched serving engine.
+
+Two engines share the queue/batcher machinery:
+
+* ``RetrievalEngine`` — the paper's serving mode: request = user history,
+  response = top-K items.  Backbone -> phi -> PQTopK -> TopK, batched.
+* ``DecodeEngine``    — LM decode with slot-based continuous batching: a
+  fixed pool of KV-cache slots; requests claim a slot, every ``step()``
+  decodes one token for all active slots through the PQ vocab head.
+
+Both apply deadline-based request timeouts (serving-side straggler
+mitigation, same policy knob as training's StragglerMonitor).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    request_id: int
+    payload: Any                      # user seq (np.ndarray) / prompt ids
+    k: int = 10
+    arrival: float = field(default_factory=time.monotonic)
+    deadline_ms: float = 1000.0
+
+
+@dataclass
+class Result:
+    request_id: int
+    items: np.ndarray
+    scores: np.ndarray
+    latency_ms: float
+    timed_out: bool = False
+
+
+class MicroBatcher:
+    """Greedy size/timeout batcher with power-of-two padding buckets so jit
+    recompiles stay bounded."""
+
+    def __init__(self, max_batch: int = 64, max_wait_ms: float = 2.0):
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.queue: collections.deque[Request] = collections.deque()
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def next_batch(self) -> List[Request]:
+        out = []
+        start = time.monotonic()
+        while self.queue and len(out) < self.max_batch:
+            out.append(self.queue.popleft())
+            if (time.monotonic() - start) * 1e3 > self.max_wait_ms:
+                break
+        return out
+
+    @staticmethod
+    def bucket(n: int, max_batch: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, max_batch)
+
+
+class RetrievalEngine:
+    """Paper-mode serving: top-K item retrieval for user sequences."""
+
+    def __init__(self, serve_fn: Callable[[jax.Array, int], Tuple[jax.Array, jax.Array]],
+                 *, seq_len: int, k: int = 10, max_batch: int = 64):
+        """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores)."""
+        self._fn = jax.jit(serve_fn, static_argnums=(1,))
+        self.seq_len = seq_len
+        self.k = k
+        self.batcher = MicroBatcher(max_batch=max_batch)
+        self.latencies_ms: List[float] = []
+        self.timeouts = 0
+
+    def submit(self, req: Request):
+        self.batcher.submit(req)
+
+    def run_once(self) -> List[Result]:
+        reqs = self.batcher.next_batch()
+        if not reqs:
+            return []
+        bucket = MicroBatcher.bucket(len(reqs), self.batcher.max_batch)
+        seqs = np.zeros((bucket, self.seq_len), np.int32)
+        for i, r in enumerate(reqs):
+            s = np.asarray(r.payload)[-self.seq_len:]
+            seqs[i, -len(s):] = s
+        ids, scores = self._fn(jnp.asarray(seqs), self.k)
+        ids, scores = np.asarray(ids), np.asarray(scores)
+        now = time.monotonic()
+        out = []
+        for i, r in enumerate(reqs):
+            lat = (now - r.arrival) * 1e3
+            timed_out = lat > r.deadline_ms
+            self.timeouts += int(timed_out)
+            self.latencies_ms.append(lat)
+            out.append(Result(r.request_id, ids[i, :r.k], scores[i, :r.k],
+                              lat, timed_out))
+        return out
+
+    def drain(self) -> List[Result]:
+        out = []
+        while self.batcher.queue:
+            out.extend(self.run_once())
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        lat = np.asarray(self.latencies_ms or [0.0])
+        return {
+            "count": float(len(self.latencies_ms)),
+            "mRT_ms": float(np.median(lat)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "timeouts": float(self.timeouts),
+        }
+
+
+class DecodeEngine:
+    """Slot-based continuous batching for LM decode."""
+
+    def __init__(self, decode_fn, init_caches_fn, *, n_slots: int,
+                 max_len: int, k: int = 8):
+        """``decode_fn(tokens (B,), pos (B,), caches)`` ->
+        (next_tokens (B,), caches); caches batched over slots."""
+        self._decode = jax.jit(decode_fn)
+        self.caches = init_caches_fn(n_slots)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.k = k
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.slot_token = np.zeros(n_slots, np.int32)
+        self.slot_out: List[List[int]] = [[] for _ in range(n_slots)]
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.finished: List[Tuple[Request, List[int]]] = []
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.waiting:
+                req = self.waiting.popleft()
+                self.slot_req[s] = req
+                self.slot_pos[s] = 0
+                self.slot_token[s] = int(np.asarray(req.payload).reshape(-1)[0])
+                self.slot_out[s] = []
+
+    def step(self, max_new: int = 16):
+        """One engine iteration: admit, decode one token for all slots,
+        retire finished requests."""
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return
+        tokens = jnp.asarray(self.slot_token)
+        pos = jnp.asarray(self.slot_pos)
+        nxt, self.caches = self._decode(tokens, pos, self.caches)
+        nxt = np.asarray(nxt)
+        for s in active:
+            self.slot_out[s].append(int(nxt[s]))
+            self.slot_token[s] = int(nxt[s])
+            self.slot_pos[s] += 1
+            if self.slot_pos[s] >= min(max_new, self.max_len - 1):
+                self.finished.append((self.slot_req[s], self.slot_out[s]))
+                self.slot_req[s] = None
+
+    def run(self, max_new: int = 16):
+        while self.waiting or any(self.slot_req):
+            self.step(max_new)
+        return self.finished

@@ -1,0 +1,5 @@
+from repro.training import (checkpoint, compression, fault_tolerance, losses,
+                            optimizer, train_loop)
+
+__all__ = ["checkpoint", "compression", "fault_tolerance", "losses",
+           "optimizer", "train_loop"]

@@ -1,0 +1,112 @@
+"""PowerSGD gradient compression with error feedback [Vogels+ NeurIPS'19],
+targeted at the cross-pod (DCI) all-reduce — the slowest link at 1000+ nodes.
+
+For each 2-D gradient G (m x n): P = G @ Q; all-reduce P (r*m floats);
+Q' = G^T @ P_orth; all-reduce Q' (r*n floats); G_hat = P_orth @ Q'^T.
+Bytes per matrix drop from m*n to r*(m+n).  The residual G - G_hat is kept
+locally and added to the next step's gradient (error feedback), which is
+what makes low-rank compression converge.
+
+Non-2D leaves (biases, norms, stacked scans are treated per-matrix by
+flattening leading dims) below ``min_size`` are reduced uncompressed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _as_matrix(g: jax.Array) -> Optional[Tuple[jax.Array, Tuple[int, ...]]]:
+    """Reshape to 2-D (prod(leading), last) if sensibly matrix-like."""
+    if g.ndim < 2:
+        return None
+    shape = g.shape
+    m = 1
+    for s in shape[:-1]:
+        m *= s
+    return g.reshape(m, shape[-1]), shape
+
+
+def _orthonormalise(p: jax.Array) -> jax.Array:
+    """Gram-Schmidt via QR (columns)."""
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32)
+                        if jnp.issubdtype(p.dtype, jnp.floating)
+                        else jnp.zeros((), jnp.float32), params)
+
+
+def abstract_error_feedback(params: Params) -> Params:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(
+            p.shape if jnp.issubdtype(p.dtype, jnp.floating) else (),
+            jnp.float32),
+        params)
+
+
+def compressed_psum(grads: Params, err: Params, axis: str, *, rank: int = 4,
+                    min_size: int = 65536, seed: int = 0,
+                    ) -> Tuple[Params, Params]:
+    """Inside shard_map (manual over ``axis``): PowerSGD all-reduce.
+
+    Returns (mean-reduced grads, new error feedback).
+    """
+    n_dev = jax.lax.axis_size(axis)
+    key = jax.random.PRNGKey(seed)
+
+    def leaf(path, g, e):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return g, e
+        g32 = g.astype(jnp.float32)
+        if g.size < min_size or g.ndim < 2:
+            out = jax.lax.pmean(g32, axis)
+            return out.astype(g.dtype), e
+        gm, shape = _as_matrix(g32 + e.astype(jnp.float32))
+        m, n = gm.shape
+        r = min(rank, m, n)
+        kleaf = jax.random.fold_in(key, hash(str(path)) % (2 ** 31))
+        q = jax.random.normal(kleaf, (n, r), jnp.float32)
+        p = gm @ q                                  # (m, r)
+        p = jax.lax.psum(p, axis) / n_dev           # collective: r*m
+        p = _orthonormalise(p)
+        qq = gm.T @ p                               # (n, r)
+        qq = jax.lax.psum(qq, axis) / n_dev         # collective: r*n
+        g_hat = (p @ qq.T).reshape(shape)
+        new_e = (g32 + e.astype(jnp.float32) - g_hat)
+        return g_hat.astype(g.dtype), new_e.astype(e.dtype)
+
+    flat = jax.tree_util.tree_map_with_path(leaf, grads, err)
+    out_g = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    out_e = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return out_g, out_e
+
+
+def compression_ratio(params: Params, rank: int = 4,
+                      min_size: int = 65536) -> float:
+    """Estimated collective-bytes ratio (compressed / uncompressed)."""
+    full = 0
+    comp = 0
+    for p in jax.tree.leaves(params):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            continue
+        full += p.size
+        if p.size < min_size or p.ndim < 2:
+            comp += p.size
+        else:
+            m = 1
+            for s in p.shape[:-1]:
+                m *= s
+            n = p.shape[-1]
+            r = min(rank, m, n)
+            comp += r * (m + n)
+    return comp / max(full, 1)

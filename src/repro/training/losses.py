@@ -1,0 +1,37 @@
+"""Shared loss functions beyond the per-model ones: sampled softmax with
+logQ correction (two-tower retrieval training at large catalogue scale) and
+plain helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sampled_softmax_logq(pos_scores: jax.Array, neg_scores: jax.Array,
+                         neg_logq: jax.Array,
+                         pos_logq: Optional[jax.Array] = None) -> jax.Array:
+    """Sampled softmax with logQ correction [Bengio & Senécal'08; Yi+
+    RecSys'19]: subtract log-proposal from sampled logits so the gradient
+    is unbiased under non-uniform (e.g. popularity) negative sampling.
+
+    pos_scores (B,), neg_scores (B, n), neg_logq (B, n) or (n,).
+    """
+    if pos_logq is not None:
+        pos_scores = pos_scores - pos_logq
+    neg = neg_scores - neg_logq
+    logits = jnp.concatenate([pos_scores[:, None], neg], axis=1)
+    return (jax.scipy.special.logsumexp(logits, -1) - logits[:, 0]).mean()
+
+
+def bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return -(labels * jax.nn.log_sigmoid(logits)
+             + (1 - labels) * jax.nn.log_sigmoid(-logits)).mean()
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.scipy.special.logsumexp(logits.astype(jnp.float32), -1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()

@@ -1,0 +1,247 @@
+"""Optimizers built from scratch (no optax in this environment):
+AdamW with configurable moment dtype (bf16 at 340B scale), global-norm
+clipping, and warmup-cosine / warmup-rsqrt schedules.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"        # cosine | rsqrt | constant
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "rsqrt":
+        decay = jax.lax.rsqrt(jnp.maximum(step, cfg.warmup_steps) /
+                              max(cfg.warmup_steps, 1))
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def abstract_adamw(params: Params, cfg: AdamWConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct state for dry-runs (no allocation)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, mdt)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def _is_float(x) -> bool:
+    return (hasattr(x, "dtype") and x.dtype != jax.dtypes.float0
+            and jnp.issubdtype(x.dtype, jnp.inexact))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if _is_float(x)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float,
+                        ) -> Tuple[Params, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(
+        lambda g: ((g.astype(jnp.float32) * scale).astype(g.dtype)
+                   if _is_float(g) else g), grads), gn
+
+
+def adamw_update(grads: Params, state: Dict[str, Any], params: Params,
+                 cfg: AdamWConfig, *, frozen: Optional[Callable[[str], bool]] = None,
+                 ) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  ``frozen(path)`` -> True freezes a leaf (e.g. PQ
+    ``codes`` buffers, which are integer constants, are always frozen)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    if cfg.clip_norm > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    from repro.distributed.sharding import path_str
+
+    def leaf(path, p, g, m, v):
+        pstr = path_str(path)
+        if not jnp.issubdtype(p.dtype, jnp.floating) or (
+                frozen is not None and frozen(pstr)):
+            return p, m, v
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree_util.tree_map_with_path(
+        leaf, params, grads, state["m"], state["v"])
+    # Unzip the 3-tuples.
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}
+
+
+def default_frozen(path: str) -> bool:
+    """Integer PQ codes and any explicitly frozen buffers."""
+    return path.endswith("codes")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor [Shazeer & Stern, arXiv:1804.04235] — factored second moments:
+# O(m+n) optimizer state per (m, n) matrix instead of Adam's O(2mn); the
+# realistic choice at 340B scale when even bf16 moments are too heavy.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8           # beta2_t = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "rsqrt"
+
+    def as_adamw(self) -> AdamWConfig:
+        return AdamWConfig(lr=self.lr, warmup_steps=self.warmup_steps,
+                           total_steps=self.total_steps,
+                           schedule=self.schedule)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Params, cfg: AdafactorConfig) -> Dict[str, Any]:
+    def leaf(p):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return {"_": jnp.zeros((), jnp.float32)}
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(leaf, params)}
+
+
+def abstract_adafactor(params: Params, cfg: AdafactorConfig):
+    return jax.eval_shape(lambda p: adafactor_init(p, cfg), params)
+
+
+def adafactor_update(grads: Params, state: Dict[str, Any], params: Params,
+                     cfg: AdafactorConfig, *,
+                     frozen: Optional[Callable[[str], bool]] = None,
+                     ) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    from repro.distributed.sharding import path_str
+    step = state["step"] + 1
+    lr = schedule_lr(cfg.as_adamw(), step)
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+    gn = global_norm(grads)
+
+    def leaf(path, p, g, v):
+        pstr = path_str(path)
+        if not jnp.issubdtype(p.dtype, jnp.floating) or (
+                frozen is not None and frozen(pstr)):
+            return p, v
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+            denom = (vr / jnp.maximum(vr.mean(-1, keepdims=True), cfg.eps)
+                     )[..., None] * vc[..., None, :]
+            upd = g32 * jax.lax.rsqrt(jnp.maximum(denom, cfg.eps))
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            upd = g32 * jax.lax.rsqrt(jnp.maximum(vv, cfg.eps))
+            new_v = {"v": vv}
+        # Update clipping (RMS <= clip_threshold).
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + cfg.eps)
+        upd = upd / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_v
+
+    # State leaves are dicts ({"vr","vc"} / {"v"}) — map via a manual zip
+    # over flattened leaves rather than tree_map.
+    is_state = lambda t: isinstance(t, dict) and (
+        "v" in t or "vr" in t or "_" in t)
+    p_leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    v_leaves = jax.tree_util.tree_leaves(
+        state["v"], is_leaf=is_state)
+    new_p, new_vs = [], []
+    for (path, p), g, v in zip(p_leaves, g_leaves, v_leaves):
+        np_, nv = leaf(path, p, g, v)
+        new_p.append(np_)
+        new_vs.append(nv)
+    params_out = jax.tree_util.tree_unflatten(treedef, new_p)
+    v_treedef = jax.tree_util.tree_structure(state["v"], is_leaf=is_state)
+    v_out = jax.tree_util.tree_unflatten(v_treedef, new_vs)
+    return params_out, {"step": step, "v": v_out}, {"grad_norm": gn, "lr": lr}
+
+
+def adafactor_state_bytes(params: Params) -> int:
+    """Factored-state footprint — compare against Adam's 2x param bytes."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            continue
+        if _factored(p.shape):
+            total += 4 * (int(np.prod(p.shape[:-1]))
+                          + int(np.prod(p.shape[:-2] + p.shape[-1:])))
+        else:
+            total += 4 * p.size
+    return total

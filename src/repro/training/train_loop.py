@@ -1,0 +1,114 @@
+"""Train-step factory: value_and_grad + microbatch gradient accumulation +
+optional cross-pod PowerSGD compression (partial-auto shard_map over the
+``pod`` axis) + AdamW update.  Pure function of (params, opt_state, batch)
+— jitted and donated by the launcher.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.training import compression, optimizer as opt_lib
+
+LossFn = Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+
+
+def make_train_step(loss_fn: LossFn, opt_cfg: opt_lib.AdamWConfig, *,
+                    grad_accum: int = 1,
+                    frozen=opt_lib.default_frozen,
+                    powersgd_axis: Optional[str] = None,
+                    powersgd_rank: int = 4,
+                    mesh=None,
+                    grad_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).
+
+    ``grad_accum`` > 1 splits the batch leading dim into microbatches and
+    accumulates grads with a scan (memory ~ 1/grad_accum activations).
+    ``powersgd_axis`` turns on compressed cross-axis gradient reduction
+    (error-feedback state lives in opt_state["ef"]).
+    """
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(params, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc, = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32)
+                if g.dtype != jax.dtypes.float0 else a, acc, grads)
+            return (acc,), (loss, metrics)
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                *x.shape[1:]), batch)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape if jnp.issubdtype(p.dtype, jnp.inexact)
+                                else (), jnp.float32), params)
+        (acc,), (losses, metrics) = jax.lax.scan(micro, (zero,), mbs)
+        grads = jax.tree.map(lambda g: g / grad_accum, acc)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return losses.mean(), metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if powersgd_axis is not None:
+            assert mesh is not None, "powersgd needs the mesh"
+
+            def local_fn(params_, batch_, ef_):
+                # Manual over the pod axis: grads here are pod-local
+                # (the pod dim of the batch is this shard's slice); the
+                # only cross-pod traffic is the compressed P/Q factors.
+                loss_, metrics_, grads_ = compute_grads(params_, batch_)
+                grads_, new_ef_ = compression.compressed_psum(
+                    grads_, ef_, powersgd_axis, rank=powersgd_rank)
+                loss_ = jax.lax.pmean(loss_, powersgd_axis)
+                metrics_ = jax.tree.map(
+                    lambda m: jax.lax.pmean(m, powersgd_axis), metrics_)
+                return loss_, metrics_, grads_, new_ef_
+
+            sharded = jax.shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(P(), P(powersgd_axis), P()),
+                out_specs=(P(), P(), P(), P()),
+                check_vma=False, axis_names={powersgd_axis})
+            loss, metrics, grads, new_ef = sharded(
+                params, batch, opt_state["ef"])
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+            new_ef = opt_state.get("ef")
+        if grad_shardings is not None:
+            # Pin grads to the parameter layout: XLA lowers the cross-shard
+            # reduction as reduce-scatter(s) instead of a full all-reduce.
+            grads = jax.tree.map(
+                lambda g, s: g if g.dtype == jax.dtypes.float0
+                else jax.lax.with_sharding_constraint(g, s),
+                grads, grad_shardings)
+        inner = {k: v for k, v in opt_state.items() if k != "ef"}
+        params, inner, om = opt_lib.adamw_update(grads, inner, params,
+                                                 opt_cfg, frozen=frozen)
+        if new_ef is not None:
+            inner["ef"] = new_ef
+        metrics = dict(metrics, loss=loss, **om)
+        return params, inner, metrics
+
+    return train_step
+
+
+def init_opt_state(params, opt_cfg: opt_lib.AdamWConfig, *,
+                   powersgd: bool = False, abstract: bool = False):
+    mk = opt_lib.abstract_adamw if abstract else opt_lib.adamw_init
+    state = mk(params, opt_cfg)
+    if powersgd:
+        ef = (compression.abstract_error_feedback(params) if abstract
+              else compression.init_error_feedback(params))
+        state["ef"] = ef
+    return state

@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests see 1 device
+# (only launch/dryrun.py forces 512 placeholder devices, per the brief).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,123 @@
+"""Distribution-layer unit tests: sharding rules, plan stripping, variant
+equivalences added during the §Perf iterations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def test_param_rules_match_lm_paths():
+    rules = shd.lm_param_rules(scan_layers=True)
+    mesh = jax.make_mesh((1,), ("model",))
+    # stacked MLP weight: (L, d_in, d_out) -> (None, data->dropped, model)
+    spec = shd._match(rules, "layers/mlp/up/w", 3)
+    assert spec == P(None, "data", "model")
+    spec = shd._match(rules, "layers/moe/up", 3 + 1)
+    assert spec == P(None, "model", "data", None)
+    assert shd._match(rules, "pq_head/codes", 2) == P("model", None)
+    assert shd._match(rules, "final_norm/scale", 1) == P()
+
+
+def test_param_shardings_drop_nondividing_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = {"embed": {"table": jax.ShapeDtypeStruct((7, 5), jnp.float32)}}
+    out = shd.param_shardings(mesh, params, shd.lm_param_rules())
+    # 7 % 1 == 0 so both axes are kept on a 1x1 mesh
+    assert out["embed"]["table"].spec == P("model", "data")
+
+
+def test_strip_axis():
+    mesh = jax.make_mesh((1,), ("model",))
+    plan = shd.ShardingPlan(mesh, {
+        "a": P(("pod", "data"), "model", None),
+        "b": P("pod", None),
+        "c": P(("pod",), "model"),
+    })
+    out = shd.strip_axis(plan, "pod")
+    assert out.specs["a"] == P("data", "model", None)
+    assert out.specs["b"] == P(None, None)
+    assert out.specs["c"] == P(None, "model")
+
+
+def test_constrain_noop_without_plan():
+    x = jnp.ones((4, 4))
+    assert shd.constrain(x, "hidden") is x
+
+
+def test_constrain_applies_inside_plan():
+    mesh = jax.make_mesh((1,), ("model",))
+    plan = shd.ShardingPlan(mesh, {"hidden": P("model", None)})
+    with shd.activation_plan(plan):
+        y = jax.jit(lambda x: shd.constrain(x, "hidden"))(jnp.ones((4, 4)))
+    assert np.asarray(y).sum() == 16
+
+
+@pytest.mark.parametrize("impl", ["dense", "sort"])
+def test_moe_impls_equivalent_no_drops(impl):
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as M
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, capacity_factor=16.0)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg, 8, gated=False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))
+    ref, _ = M.moe_ffn(p, cfg, x, "relu", impl="dense")
+    out, _ = M.moe_ffn(p, cfg, x, "relu", impl=impl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_moe_sort_capacity_drops_consistent():
+    """With tight capacity both impls drop tokens; outputs stay finite and
+    bounded by the no-drop output."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as M
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, capacity_factor=0.5)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg, 8, gated=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8))
+    for impl in ("dense", "sort"):
+        out, aux = M.moe_ffn(p, cfg, x, "silu", impl=impl)
+        assert np.isfinite(np.asarray(out)).all()
+        assert np.isfinite(float(aux))
+
+
+def test_serve_topk_sharded_matches_plain():
+    from repro.configs import get_reduced
+    from repro.models import seqrec as S
+    mesh = jax.make_mesh((1,), ("model",))
+    cfg = get_reduced("sasrec-recjpq").model
+    params = S.init_seqrec(jax.random.PRNGKey(0), cfg)
+    seqs = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 1,
+                              cfg.n_items + 1)
+    ids1, vals1 = S.serve_topk(params, seqs, cfg, k=5)
+    ids2, vals2 = S.serve_topk(params, seqs, cfg, k=5, sharded_mesh=mesh)
+    np.testing.assert_allclose(np.asarray(vals1), np.asarray(vals2),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
+
+
+def test_sharded_topk_pads_nondivisible_items():
+    """1,271,639 rows (Gowalla + pad id) over a 2-shard axis."""
+    from repro.configs.base import PQConfig
+    from repro.core import retrieval_head
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("model",))
+    params = retrieval_head.init(jax.random.PRNGKey(0), 101, 16,
+                                 PQConfig(m=4, b=8))
+    phi = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    v1, i1 = retrieval_head.top_items(params, phi, 7)
+    v2, i2 = retrieval_head.top_items_sharded(params, phi, 7, mesh)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5)
+    assert (np.asarray(i2) < 101).all()
+
+
+def test_grad_cast_identity_fwd_bf16_bwd():
+    from repro.models.transformer import _grad_cast
+    x = jnp.ones((3,), jnp.bfloat16)
+    y, vjp = jax.vjp(lambda t: _grad_cast(t, jnp.bfloat16), x)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(x, np.float32))
+    (g,) = vjp(jnp.ones((3,), jnp.bfloat16))
+    assert g.dtype == jnp.bfloat16

@@ -1,0 +1,105 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracle in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag import ops as eb_ops, ref as eb_ref
+from repro.kernels.pqtopk import ops as pq_ops, ref as pq_ref
+
+
+@pytest.mark.parametrize("n,m,b,bq,tile", [
+    (4096, 8, 256, 4, 1024),
+    (4096, 8, 256, 1, 2048),
+    (5000, 4, 64, 2, 1024),     # N not a tile multiple -> padding path
+    (300, 2, 16, 8, 256),
+    (128, 1, 8, 1, 128),
+    (8192, 16, 128, 3, 512),
+])
+def test_pq_scores_kernel_vs_ref(n, m, b, bq, tile):
+    codes = jax.random.randint(jax.random.PRNGKey(0), (n, m), 0, b,
+                               dtype=jnp.int32)
+    s = jax.random.normal(jax.random.PRNGKey(1), (bq, m, b), jnp.float32)
+    r_ref = pq_ref.pq_scores(codes, s)
+    r_ker = pq_ops.pq_scores(codes, s, tile=tile)
+    np.testing.assert_allclose(np.asarray(r_ker), np.asarray(r_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int8])
+def test_pq_scores_kernel_code_dtypes(dtype):
+    codes = jax.random.randint(jax.random.PRNGKey(0), (1024, 4), 0, 100
+                               ).astype(dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 128), jnp.float32)
+    r_ref = pq_ref.pq_scores(codes.astype(jnp.int32), s)
+    r_ker = pq_ops.pq_scores(codes, s, tile=256)
+    np.testing.assert_allclose(np.asarray(r_ker), np.asarray(r_ref),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("k", [1, 10, 100])
+def test_pq_topk_fused_kernel(k):
+    codes = jax.random.randint(jax.random.PRNGKey(2), (4096, 8), 0, 64,
+                               dtype=jnp.int32)
+    s = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 64), jnp.float32)
+    v_ref, i_ref = pq_ref.pq_topk(codes, s, k)
+    v_ker, i_ker = pq_ops.pq_topk(codes, s, k, tile=512)
+    np.testing.assert_allclose(np.asarray(v_ker), np.asarray(v_ref),
+                               rtol=1e-6)
+    # indices must produce identical scores
+    r = np.asarray(pq_ref.pq_scores(codes, s))
+    np.testing.assert_allclose(
+        np.take_along_axis(r, np.asarray(i_ker), 1), np.asarray(v_ref),
+        rtol=1e-6)
+
+
+@pytest.mark.parametrize("v,d,n_bags,bag,mode,weighted", [
+    (512, 16, 32, 4, "sum", False),
+    (1000, 32, 17, 6, "mean", True),     # odd bag count -> padding path
+    (64, 8, 8, 3, "sum", True),
+    (2048, 64, 64, 8, "mean", False),
+    (128, 128, 9, 1, "sum", False),
+])
+def test_embedding_bag_kernel_vs_ref(v, d, n_bags, bag, mode, weighted):
+    table = jax.random.normal(jax.random.PRNGKey(0), (v, d))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (n_bags, bag), -1, v)
+    w = (jax.random.uniform(jax.random.PRNGKey(2), (n_bags, bag))
+         if weighted else None)
+    out_ref = eb_ref.embedding_bag(table, idx, w, mode)
+    out_ker = eb_ops.embedding_bag(table, idx, w, mode=mode)
+    np.testing.assert_allclose(np.asarray(out_ker), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_embedding_bag_all_padding_bag():
+    table = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    idx = jnp.full((4, 3), -1, jnp.int32)
+    out = eb_ops.embedding_bag(table, idx, mode="mean")
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+def test_pq_scores_kernel_bf16_subid_scores():
+    """bf16 S input with fp32 accumulation inside the kernel."""
+    codes = jax.random.randint(jax.random.PRNGKey(4), (2048, 8), 0, 256,
+                               dtype=jnp.int32)
+    s32 = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 256), jnp.float32)
+    s16 = s32.astype(jnp.bfloat16)
+    r_ref = pq_ref.pq_scores(codes, s32)
+    r_ker = pq_ops.pq_scores(codes, s16.astype(jnp.float32), tile=512)
+    # bf16-rounded inputs: tolerance per kernel-taxonomy Part E
+    np.testing.assert_allclose(np.asarray(r_ker), np.asarray(r_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_pq_topk_kernel_tile_sweep():
+    """Exactness across tile sizes (tile-local winners are supersets of
+    global winners for k <= tile)."""
+    codes = jax.random.randint(jax.random.PRNGKey(6), (4096, 4), 0, 64,
+                               dtype=jnp.int32)
+    s = jax.random.normal(jax.random.PRNGKey(7), (1, 4, 64))
+    v_ref, _ = pq_ref.pq_topk(codes, s, 16)
+    for tile in (128, 256, 1024, 4096):
+        v, _ = pq_ops.pq_topk(codes, s, 16, tile=tile)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                                   rtol=1e-6)

@@ -1,0 +1,92 @@
+"""PQ embedding + codebook builder invariants (hypothesis where useful)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import PQConfig
+from repro.core import codebook, pq
+
+
+def test_reconstruct_concat_matches_manual():
+    cfg = PQConfig(m=4, b=8)
+    params = pq.init_pq_embedding(jax.random.PRNGKey(0), cfg, 20, 16)
+    ids = jnp.asarray([0, 7, 19])
+    w = pq.reconstruct(params, ids)
+    assert w.shape == (3, 16)
+    codes = np.asarray(params["codes"])
+    sub = np.asarray(params["sub_emb"])
+    for r, i in enumerate([0, 7, 19]):
+        manual = np.concatenate([sub[k, codes[i, k]] for k in range(4)])
+        np.testing.assert_allclose(np.asarray(w[r]), manual, rtol=1e-6)
+
+
+def test_compression_ratio_formula():
+    cfg = PQConfig(m=8, b=256)
+    # Gowalla-like: 1.27M items, d=512 -> paper reports up to ~50x for
+    # RecJPQ-scale settings; with int32 codes the ratio is ~47x here.
+    r = pq.compression_ratio(cfg, 1_271_638, 512)
+    assert r > 40, r
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 200), m=st.sampled_from([2, 4]),
+       b=st.sampled_from([4, 16]), seed=st.integers(0, 1000))
+def test_random_codebook_in_range(n, m, b, seed):
+    cfg = PQConfig(m=m, b=b, assign="random")
+    codes, cents = codebook.build_codebook(cfg, n, seed=seed)
+    assert codes.shape == (n, m)
+    assert codes.min() >= 0 and codes.max() < b
+    assert cents is None
+
+
+def test_kmeans_codebook_reconstruction_quality():
+    """PQ on clusterable data: k-means reconstruction must beat random."""
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 5, (8, 32))
+    data = (centers[rng.integers(0, 8, 500)]
+            + rng.normal(0, 0.1, (500, 32))).astype(np.float32)
+    cfg = PQConfig(m=4, b=8, assign="kmeans")
+    codes, cents = codebook.build_codebook(cfg, 500, embeddings=data)
+    recon = np.concatenate(
+        [cents[k][codes[:, k]] for k in range(4)], axis=1)
+    err_pq = np.mean((recon - data) ** 2)
+    rand_codes = codebook.build_random(500, cfg)
+    recon_r = np.concatenate(
+        [cents[k][rand_codes[:, k]] for k in range(4)], axis=1)
+    err_rand = np.mean((recon_r - data) ** 2)
+    assert err_pq < 0.5 * err_rand, (err_pq, err_rand)
+
+
+def test_svd_codebook_groups_cooccurring_items():
+    """RecJPQ SVD assignment: items with identical interaction patterns
+    should land in the same sub-id cells more often than random pairs."""
+    rng = np.random.default_rng(0)
+    n_users, n_items = 200, 60
+    # Two disjoint item communities.
+    users, items = [], []
+    for u in range(n_users):
+        com = u % 2
+        its = rng.integers(0, 30, 10) + com * 30
+        users += [u] * len(its)
+        items += list(its)
+    cfg = PQConfig(m=4, b=4, assign="svd")
+    codes, _ = codebook.build_codebook(
+        cfg, n_items, d_model=32,
+        interactions=(np.asarray(users), np.asarray(items), n_users))
+    same_com, diff_com = [], []
+    for a in range(0, 30, 3):
+        for b_ in range(a + 1, 30, 7):
+            same_com.append((codes[a] == codes[b_]).mean())
+            diff_com.append((codes[a] == codes[b_ + 30]).mean())
+    assert np.mean(same_com) > np.mean(diff_com)
+
+
+def test_abstract_matches_concrete_shapes():
+    cfg = PQConfig(m=4, b=16)
+    abs_p = pq.abstract_pq_embedding(cfg, 100, 32)
+    con_p = pq.init_pq_embedding(jax.random.PRNGKey(0), cfg, 100, 32)
+    for a, c in zip(jax.tree.leaves(abs_p), jax.tree.leaves(con_p)):
+        assert a.shape == c.shape and a.dtype == c.dtype
