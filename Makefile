@@ -1,0 +1,10 @@
+.PHONY: test bench serve
+
+test:
+	bash scripts/ci.sh
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+serve:
+	PYTHONPATH=src python -m repro.launch.serve --reduced --method pqtopk_fused

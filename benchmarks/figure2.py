@@ -19,15 +19,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.timing import time_fn
+from repro import compat
 from repro.core import scoring
+from repro.kernels.pqtopk import ops as pq_ops
 
 D_MODEL = 512
 K = 10
 DENSE_MEM_BUDGET = 8e9    # bytes of W we allow the dense baseline (CPU host)
+# Largest catalogue the fused Pallas kernel is timed at in interpret mode
+# (CPU containers emulate the kernel; past this it measures the emulator).
+FUSED_INTERPRET_CAP = 100_000
 
 
 def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
-                methods=("dense", "recjpq", "pqtopk")):
+                methods=("dense", "recjpq", "pqtopk", "pqtopk_fused")):
     rng = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
     phi = jax.random.normal(key, (1, D_MODEL), jnp.float32)
@@ -44,6 +49,12 @@ def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
                 scoring.score_dense(w_, p_), K))
             out[method] = time_fn(lambda: fn(w, phi), repeats=repeats)
             del w
+        elif method == "pqtopk_fused":
+            if not compat.on_tpu() and n_items > FUSED_INTERPRET_CAP:
+                out[method] = None    # interpret-mode guard (see cap above)
+                continue
+            out[method] = time_fn(lambda: pq_ops.pq_topk(codes, s, K),
+                                  repeats=repeats)
         else:
             alg = {"recjpq": scoring.score_recjpq,
                    "pqtopk": scoring.score_pqtopk,
@@ -76,10 +87,14 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
     rows = run(args.full, args.repeats)
-    print(f"{'m':>3s} {'n_items':>11s} {'method':8s} {'scoring_ms':>11s}")
+    print(f"{'m':>3s} {'n_items':>11s} {'method':12s} {'scoring_ms':>11s}")
     for r in rows:
-        ms = "OOM-guard" if r["scoring_ms"] is None else f"{r['scoring_ms']:.2f}"
-        print(f"{r['m']:3d} {r['n_items']:11,d} {r['method']:8s} {ms:>11s}")
+        if r["scoring_ms"] is None:
+            ms = ("interp-guard" if r["method"] == "pqtopk_fused"
+                  else "OOM-guard")
+        else:
+            ms = f"{r['scoring_ms']:.2f}"
+        print(f"{r['m']:3d} {r['n_items']:11,d} {r['method']:12s} {ms:>12s}")
     return rows
 
 

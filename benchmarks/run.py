@@ -45,8 +45,10 @@ def main(argv=None) -> None:
         rows = figure2.run(full=args.full, repeats=args.repeats)
         for r in rows:
             us = None if r["scoring_ms"] is None else r["scoring_ms"] * 1e3
+            guard = ("interp-guard" if r["method"] == "pqtopk_fused"
+                     else "mem-wall")
             _emit(f"figure2/m{r['m']}/n{r['n_items']}/{r['method']}", us,
-                  "mem-wall" if us is None else "")
+                  guard if us is None else "")
 
     if "kernel" not in args.skip:
         import jax
@@ -65,6 +67,23 @@ def main(argv=None) -> None:
             t = time_fn(lambda: fn(codes, s), repeats=args.repeats)
             _emit(f"kernel/pq_scoring_262k/{name}", t["median_s"] * 1e6,
                   f"items_per_s={n / t['median_s']:.3e}")
+        # Retrieval (scoring + top-k) comparison: XLA two-stage vs the fused
+        # Pallas kernel, whose HBM output is O(B*K*N/TN) not O(B*N).
+        from repro import compat
+        from repro.core import topk as topk_lib
+        from repro.kernels.pqtopk import ops as pq_ops
+        k = 10
+        fn = jax.jit(lambda c_, s_: topk_lib.tiled_topk(
+            scoring.score_pqtopk(c_, s_), k))
+        t = time_fn(lambda: fn(codes, s), repeats=args.repeats)
+        _emit(f"kernel/pq_retrieval_262k/pqtopk", t["median_s"] * 1e6,
+              f"items_per_s={n / t['median_s']:.3e}")
+        t = time_fn(lambda: pq_ops.pq_topk(codes, s, k), repeats=args.repeats)
+        # Off TPU the fused kernel runs in interpret mode — the number times
+        # the emulator, not the kernel; tag it so it can't be read as perf.
+        tag = "" if compat.on_tpu() else ";interpret-mode"
+        _emit(f"kernel/pq_retrieval_262k/pqtopk_fused", t["median_s"] * 1e6,
+              f"items_per_s={n / t['median_s']:.3e}{tag}")
 
     if "roofline" not in args.skip:
         import os

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint: install dev deps (best-effort — offline containers
+# rely on the importorskip guards), then run the suite.  pytest exits
+# non-zero on collection errors, so a broken import fails CI rather than
+# silently shrinking the suite.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+    pip install -r requirements-dev.txt 2>/dev/null \
+        || echo "WARN: could not install dev deps; property tests will skip"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -147,6 +147,9 @@ class SeqRecConfig:
     # gBCE negative sampling (gSASRec / gBERT4Rec training)
     n_negatives: int = 256
     gbce_t: float = 0.75
+    # Default scoring route for serving (retrieval_head.TOP_ITEMS_METHODS);
+    # "pqtopk_fused" = the Pallas fused score+top-k kernel.
+    serve_method: str = "pqtopk"
 
 
 # ---------------------------------------------------------------------------

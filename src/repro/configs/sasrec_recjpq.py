@@ -20,6 +20,7 @@ CONFIG = ArchConfig(
         d_ff=512,
         max_seq_len=200,
         pq=PQConfig(m=8, b=512, assign="svd"),
+        serve_method="pqtopk_fused",
     ),
     shapes=seqrec_shapes(N_ITEMS),
     source="RecSys'24 (this paper) + RecJPQ [WSDM'24]",
@@ -34,5 +35,6 @@ def reduced() -> ArchConfig:
         n_items=1000, d_model=32, n_blocks=2, n_heads=2, d_ff=32,
         max_seq_len=16, n_negatives=16,
         pq=PQConfig(m=4, b=16, assign="svd"),
+        serve_method="pqtopk_fused",
     )
     return replace(CONFIG, model=model)

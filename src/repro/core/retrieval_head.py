@@ -22,8 +22,15 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import PQConfig
 from repro.core import pq as pq_lib
 from repro.core import scoring, topk as topk_lib
+from repro.distributed.sharding import manual_axis_map
 
 Params = Dict[str, Any]
+
+#: Methods accepted by ``top_items``/``serve_topk`` — the paper's three
+#: algorithms plus the two Pallas routes (scores-only kernel, fused
+#: score+top-k kernel).
+TOP_ITEMS_METHODS = ("dense", "recjpq", "pqtopk", "pqtopk_onehot",
+                     "pqtopk_kernel", "pqtopk_fused")
 
 
 # ---------------------------------------------------------------------------
@@ -97,13 +104,31 @@ def score_candidates(params: Params, phi: jax.Array, item_ids: jax.Array,
         return scoring.score_dense(w.astype(phi.dtype), phi)
     s = scoring.subid_scores(params["sub_emb"].astype(jnp.float32),
                              phi.astype(jnp.float32))
+    if method in ("pqtopk_kernel", "pqtopk_fused"):
+        # Fused-path subset scoring: gather V's codes, run the one-hot MXU
+        # kernel over just those rows (no per-tile top-k — V is small).
+        from repro.kernels.pqtopk import ops as kernel_ops
+        return kernel_ops.pq_scores(params["codes"][item_ids], s)
     return scoring.score_pqtopk(params["codes"][item_ids], s)
 
 
 def top_items(params: Params, phi: jax.Array, k: int,
               method: str = "pqtopk", tile: int = 8192,
               ) -> Tuple[jax.Array, jax.Array]:
-    """TopK(score, K) — returns (values (B,k), item ids (B,k))."""
+    """TopK(score, K) — returns (values (B,k), item ids (B,k)).
+
+    ``method="pqtopk_fused"`` routes through the fused Pallas kernel: scores
+    and per-tile winners stay in VMEM and only (B, n_tiles, k) candidates
+    reach HBM — O(B*K*N/TN) output traffic instead of the O(B*N) score
+    matrix that every score_all + tiled_topk route materialises.
+    """
+    if method == "pqtopk_fused":
+        if not is_pq(params):
+            raise ValueError("method 'pqtopk_fused' requires a PQ head")
+        s = scoring.subid_scores(params["sub_emb"].astype(jnp.float32),
+                                 phi.astype(jnp.float32))
+        from repro.kernels.pqtopk import ops as kernel_ops
+        return kernel_ops.pq_topk(params["codes"], s, k)
     r = score_all(params, phi, method)
     return topk_lib.tiled_topk(r, k, tile)
 
@@ -130,27 +155,62 @@ def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))
     n_local = (n + pad) // n_shards
-    scorer = {"pqtopk": scoring.score_pqtopk,
-              "pqtopk_onehot": scoring.score_pqtopk_onehot,
-              "recjpq": scoring.score_recjpq}[method]
+
+    if method == "pqtopk_fused":
+        shard_fn = _fused_shard_fn(k, n, n_local, pad, axis)
+    else:
+        scorer = {"pqtopk": scoring.score_pqtopk,
+                  "pqtopk_onehot": scoring.score_pqtopk_onehot,
+                  "pqtopk_kernel": scoring.score_pqtopk,
+                  "recjpq": scoring.score_recjpq}[method]
+
+        def shard_fn(codes_local, sub_emb, phi_):
+            s = scoring.subid_scores(sub_emb.astype(jnp.float32),
+                                     phi_.astype(jnp.float32))
+            r_local = scorer(codes_local, s)
+            offset = jax.lax.axis_index(axis) * n_local
+            # Mask padding rows (global id >= n) out of the top-k.
+            gid = offset + jnp.arange(n_local)
+            r_local = jnp.where(gid[None, :] < n, r_local, -jnp.inf)
+            return topk_lib.local_then_merge_topk(r_local, k, axis, offset)
+
+    fn = manual_axis_map(
+        shard_fn, mesh,
+        in_specs=(P(axis, None), P(), P()),
+        out_specs=(P(), P()),   # outputs are replicated post-all_gather
+    )
+    return fn(codes, params["sub_emb"], phi)
+
+
+def _fused_shard_fn(k: int, n: int, n_local: int, pad: int, axis: str):
+    """Shard body for the fused route: the Pallas kernel produces this
+    shard's top-k directly (per-tile winners merged in the wrapper — the
+    (B, N_local) score matrix never exists), then the cross-shard merge is
+    the same O(k * shards) all-gather as every other method.
+
+    Shard-level padding rows (zero codes, only on the last shard) are real
+    rows to the kernel, so we oversample the local top-(k + pad): at most
+    ``pad`` winners can be padding, which we mask to -inf after mapping to
+    global ids — the surviving candidates still contain the true local
+    top-k, keeping the route exact.
+    """
+    from repro.kernels.pqtopk import ops as kernel_ops
+    k_local = min(k + pad, n_local)
 
     def shard_fn(codes_local, sub_emb, phi_):
         s = scoring.subid_scores(sub_emb.astype(jnp.float32),
                                  phi_.astype(jnp.float32))
-        r_local = scorer(codes_local, s)
+        lv, li = kernel_ops.pq_topk(codes_local, s, k_local)
         offset = jax.lax.axis_index(axis) * n_local
-        # Mask padding rows (global id >= n) out of the top-k.
-        gid = offset + jnp.arange(n_local)
-        r_local = jnp.where(gid[None, :] < n, r_local, -jnp.inf)
-        return topk_lib.local_then_merge_topk(r_local, k, axis, offset)
+        gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
+        lv = jnp.where(gid < n, lv, -jnp.inf)
+        if pad:
+            # Re-rank after masking so each shard contributes its best k.
+            lv, sel = jax.lax.top_k(lv, min(k, k_local))
+            gid = jnp.take_along_axis(gid, sel, axis=1)
+        return topk_lib.merge_local_topk(lv, gid, k, axis)
 
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis, None), P(), P()),
-        out_specs=(P(), P()),
-        check_vma=False,   # outputs are replicated post-all_gather
-    )
-    return fn(codes, params["sub_emb"], phi)
+    return shard_fn
 
 
 def _dense_top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
@@ -164,10 +224,9 @@ def _dense_top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
         return topk_lib.local_then_merge_topk(
             r_local.astype(jnp.float32), k, axis, offset)
 
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh,
+    fn = manual_axis_map(
+        shard_fn, mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(), P()),
-        check_vma=False,
     )
     return fn(params["table"], phi)

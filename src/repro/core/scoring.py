@@ -27,6 +27,25 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_sum(parts):
+    """Balanced-tree reduction of a list of arrays.
+
+    This is THE accumulation order for per-split partial scores: Algorithm 1
+    (:func:`score_pqtopk`), the jnp kernel oracle (``kernels/pqtopk/ref.py``)
+    and the Pallas tile kernel (``kernels/pqtopk/kernel.py``) all reduce
+    through this function, so their f32 rounding is bit-identical — parity
+    tests compare them at atol=0.  Also avoids materialising a (B, m, N)
+    stack and keeps the adds parallelisable (no loop-carried accumulator).
+    """
+    parts = list(parts)
+    while len(parts) > 1:
+        nxt = [parts[i] + parts[i + 1] for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
+
+
 def score_dense(w: jax.Array, phi: jax.Array) -> jax.Array:
     """Default matmul scoring r = W phi. w: (N, d), phi: (B, d) -> (B, N)."""
     return jnp.einsum("bd,nd->bn", phi, w, preferred_element_type=jnp.float32)
@@ -58,12 +77,7 @@ def score_pqtopk(codes: jax.Array, s: jax.Array) -> jax.Array:
     parts = [jnp.take(s[:, k, :].astype(jnp.float32),
                       codes[:, k].astype(jnp.int32), axis=1)
              for k in range(m)]                        # m x (B, N)
-    while len(parts) > 1:                              # balanced tree-sum
-        nxt = [parts[i] + parts[i + 1] for i in range(0, len(parts) - 1, 2)]
-        if len(parts) % 2:
-            nxt.append(parts[-1])
-        parts = nxt
-    return parts[0]
+    return tree_sum(parts)
 
 
 def score_recjpq(codes: jax.Array, s: jax.Array) -> jax.Array:

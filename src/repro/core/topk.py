@@ -40,6 +40,22 @@ def tiled_topk(scores: jax.Array, k: int, tile: int = 8192,
     return fv, jnp.take_along_axis(cand_i, fi, axis=1)
 
 
+def merge_local_topk(local_vals: jax.Array, local_ids: jax.Array, k: int,
+                     axis_name: str) -> Tuple[jax.Array, jax.Array]:
+    """Inside ``shard_map``: merge per-shard top-k candidates.
+
+    local_vals/local_ids: (B, k_local) shard-local winners with *global*
+    item ids.  Collective: O(k_local * n_shards) values + indices,
+    independent of N — the merge half of the item-sharded retrieval path,
+    shared by the XLA scorers and the fused Pallas kernel (whose shard-local
+    top-k already happened tile-by-tile in VMEM).
+    """
+    all_v = jax.lax.all_gather(local_vals, axis_name, axis=1, tiled=True)
+    all_i = jax.lax.all_gather(local_ids, axis_name, axis=1, tiled=True)
+    fv, fi = jax.lax.top_k(all_v, k)                   # (B, S*k_local) -> k
+    return fv, jnp.take_along_axis(all_i, fi, axis=1)
+
+
 def local_then_merge_topk(scores_local: jax.Array, k: int, axis_name: str,
                           shard_offset: jax.Array,
                           ) -> Tuple[jax.Array, jax.Array]:
@@ -51,10 +67,7 @@ def local_then_merge_topk(scores_local: jax.Array, k: int, axis_name: str,
     """
     lv, li = jax.lax.top_k(scores_local, min(k, scores_local.shape[-1]))
     gi = li.astype(jnp.int32) + shard_offset.astype(jnp.int32)
-    all_v = jax.lax.all_gather(lv, axis_name, axis=1, tiled=True)   # (B, S*k)
-    all_i = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
-    fv, fi = jax.lax.top_k(all_v, k)
-    return fv, jnp.take_along_axis(all_i, fi, axis=1)
+    return merge_local_topk(lv, gi, k, axis_name)
 
 
 def approx_topk_maxblock(scores: jax.Array, k: int,

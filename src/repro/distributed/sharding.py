@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 # ---------------------------------------------------------------------------
 # Activation plan: name -> PartitionSpec, plus the active mesh.
 # ---------------------------------------------------------------------------
@@ -82,6 +84,21 @@ def constrain(x: jax.Array, name: str) -> jax.Array:
 
 def current_plan() -> Optional[ShardingPlan]:
     return _PLAN.get()
+
+
+def manual_axis_map(fn, mesh: Mesh, in_specs, out_specs, *,
+                    axis_names: Optional[set] = None):
+    """The repo's standard manual-collective region: ``shard_map`` with
+    replication checking off (our regions end in all-gathers whose outputs
+    are replicated by construction, which the checker cannot prove).
+
+    Goes through :mod:`repro.compat` so every shard_mapped path — item-
+    sharded retrieval, PowerSGD gradient exchange — picks up the right
+    ``shard_map``/keyword spelling for the installed JAX.
+    """
+    return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False,
+                            axis_names=axis_names)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 DEFAULT_BAGS_PER_STEP = 8
 
 
@@ -85,7 +87,7 @@ def embedding_bag_call(table: jax.Array, indices: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bags_per_step, bag), lambda i, idx: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=compat.ANY),
         ],
         out_specs=pl.BlockSpec((bags_per_step, d), lambda i, idx: (i, 0)),
         scratch_shapes=[

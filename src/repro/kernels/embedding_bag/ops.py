@@ -6,14 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.embedding_bag import kernel as _k
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "bags_per_step",
@@ -23,7 +17,7 @@ def embedding_bag(table: jax.Array, indices: jax.Array,
                   bags_per_step: int = _k.DEFAULT_BAGS_PER_STEP,
                   interpret: bool | None = None) -> jax.Array:
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not compat.on_tpu()
     n_bags, bag = indices.shape
     mask = (indices >= 0).astype(jnp.float32)
     w = mask if weights is None else weights.astype(jnp.float32) * mask

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.scoring import tree_sum
+
 DEFAULT_TILE = 2048
 NEG_INF = float("-inf")
 
@@ -44,16 +46,18 @@ def _tile_scores(codes_ref, s_ref):
     tn, m = codes.shape
     b = s.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, (tn, b), 1)
-    acc = None
+    parts = []
     for k in range(m):                                # m static -> unrolled
         onehot = (codes[:, k][:, None] == iota).astype(jnp.float32)  # (TN, b)
-        part = jax.lax.dot_general(
+        parts.append(jax.lax.dot_general(
             s[:, k, :], onehot,
             dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        )                                             # (B, TN)
-        acc = part if acc is None else acc + part
-    return acc
+        ))                                            # (B, TN)
+    # Each one-hot matmul is exact in f32 (a single nonzero per row), so the
+    # only rounding happens in the cross-split reduction — tree_sum keeps it
+    # bit-identical to score_pqtopk / the jnp oracle (see scoring.tree_sum).
+    return tree_sum(parts)
 
 
 def pq_scores_kernel(codes_ref, s_ref, out_ref):

@@ -10,14 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.pqtopk import kernel as _k
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
 
 
 def _pad_codes(codes: jax.Array, tile: int) -> jax.Array:
@@ -33,7 +27,7 @@ def pq_scores(codes: jax.Array, s: jax.Array, *, tile: int = _k.DEFAULT_TILE,
               interpret: bool | None = None) -> jax.Array:
     """PQ scores for all items. codes (N,m), s (B,m,b) -> (B,N) f32."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not compat.on_tpu()
     n = codes.shape[0]
     tile = min(tile, _round_up(n, 128))
     padded = _pad_codes(codes, tile)
@@ -47,7 +41,7 @@ def pq_topk(codes: jax.Array, s: jax.Array, k: int, *,
     """Fused PQ scoring + hierarchical top-k.  Exact (tile-local winners
     contain all global winners when k <= tile). -> (vals (B,k), ids (B,k))."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not compat.on_tpu()
     n = codes.shape[0]
     tile = min(tile, _round_up(n, 128))
     if k > tile:

@@ -4,11 +4,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.scoring import tree_sum
+
 
 def pq_scores(codes: jax.Array, s: jax.Array) -> jax.Array:
-    """r[q, i] = sum_k s[q, k, codes[i, k]].  codes (N,m), s (B,m,b) -> (B,N)."""
-    idx = codes.T[None].astype(jnp.int32)              # (1, m, N)
-    return jnp.take_along_axis(s.astype(jnp.float32), idx, axis=2).sum(axis=1)
+    """r[q, i] = sum_k s[q, k, codes[i, k]].  codes (N,m), s (B,m,b) -> (B,N).
+
+    Per-split gathers reduced via tree_sum — the same f32 add order as the
+    Pallas kernel and score_pqtopk, so kernel-vs-oracle parity is bit-exact
+    (an XLA ``.sum(axis=1)`` reduce picks its own order and drifts by ulps).
+    """
+    m = codes.shape[1]
+    idx = codes.astype(jnp.int32)
+    return tree_sum([jnp.take(s[:, k, :].astype(jnp.float32), idx[:, k],
+                              axis=1) for k in range(m)])
 
 
 def pq_topk(codes: jax.Array, s: jax.Array, k: int):

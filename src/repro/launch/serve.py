@@ -20,8 +20,11 @@ def main(argv=None):
     ap.add_argument("--arch", default="sasrec-recjpq")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--method", default="pqtopk",
-                    choices=["dense", "recjpq", "pqtopk", "pqtopk_onehot"])
+    ap.add_argument("--method", default=None,
+                    choices=["dense", "recjpq", "pqtopk", "pqtopk_onehot",
+                             "pqtopk_kernel", "pqtopk_fused"],
+                    help="scoring route; default: the arch config's "
+                         "serve_method")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=64)
     args = ap.parse_args(argv)
@@ -32,11 +35,9 @@ def main(argv=None):
     from repro.models import seqrec as m
     params = m.init_seqrec(jax.random.PRNGKey(0), cfg)
 
-    def serve_fn(seqs, k):
-        return m.serve_topk(params, seqs, cfg, k=k, method=args.method)
-
-    engine = RetrievalEngine(serve_fn, seq_len=cfg.max_seq_len, k=args.k,
-                             max_batch=args.max_batch)
+    engine = RetrievalEngine.for_seqrec(params, cfg, k=args.k,
+                                        max_batch=args.max_batch,
+                                        method=args.method)
     rng = np.random.default_rng(0)
     # Warm the jit caches (per padding bucket) before the timed stream.
     for b in (1, args.max_batch):
@@ -55,7 +56,7 @@ def main(argv=None):
     wall = time.monotonic() - t0
     stats = engine.stats()
     print(f"served {len(results)} requests in {wall:.2f}s "
-          f"({len(results) / wall:.1f} req/s) method={args.method}")
+          f"({len(results) / wall:.1f} req/s) method={engine.method}")
     print(f"mRT={stats['mRT_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
           f"timeouts={int(stats['timeouts'])}")
     return results

@@ -174,7 +174,8 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     tok_abs = S((bsz,), jnp.int32)
     pos_abs = S((), jnp.int32)
     head = {"pqtopk_head": "pqtopk", "dense_head": "dense",
-            "onehot_head": "pqtopk_onehot"}.get(variant, "pqtopk")
+            "onehot_head": "pqtopk_onehot",
+            "fused_head": "pqtopk_fused"}.get(variant, "pqtopk")
 
     def decode(p, tok, pos, caches):
         return T.lm_decode_step(p, tok, pos, caches, cfg, k=64,
@@ -230,9 +231,11 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     bsz, seq = shape.dims["global_batch"], shape.dims["seq_len"]
     method = {"dense_head": "dense", "recjpq_head": "recjpq",
               "onehot_head": "pqtopk_onehot",
+              "fused_head": "pqtopk_fused",
               "sharded_head": "pqtopk",
               "sharded_head_bm": "pqtopk",
-              "sharded_onehot": "pqtopk_onehot"}.get(variant, "pqtopk")
+              "sharded_onehot": "pqtopk_onehot",
+              "sharded_fused": "pqtopk_fused"}.get(variant, "pqtopk")
     sharded = variant.startswith("sharded_")
     serve_b_axes = b_axes
     if variant.endswith("_bm"):
@@ -324,7 +327,8 @@ def _recsys_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     # retrieval_cand: PQTopK over the candidate catalogue.
     n_cand = shape.dims["n_candidates"]
     method = {"dense_head": "dense", "recjpq_head": "recjpq",
-              "onehot_head": "pqtopk_onehot"}.get(variant, "pqtopk")
+              "onehot_head": "pqtopk_onehot",
+              "fused_head": "pqtopk_fused"}.get(variant, "pqtopk")
     batch_abs = _recsys_batch_abs(cfg, bsz)
     batch_shard = _tree_shardings(
         mesh, batch_abs,

@@ -250,6 +250,11 @@ def lm_decode_step(params: Params, token: jax.Array, pos: jax.Array,
         scores = jnp.einsum("bd,vd->bv", phi, w.astype(jnp.float32))
         scores = constrain(scores, "scores")
         vals, ids = jax.lax.top_k(scores, k)
+    elif head_method == "pqtopk_fused":
+        # Fused kernel: the (B, vocab) score matrix never materialises, so
+        # there is no "scores" activation to constrain.
+        vals, ids = retrieval_head.top_items(params["pq_head"], phi, k,
+                                             method=head_method)
     else:
         scores = retrieval_head.score_all(params["pq_head"], phi, head_method)
         scores = constrain(scores, "scores")

@@ -74,14 +74,40 @@ class RetrievalEngine:
     """Paper-mode serving: top-K item retrieval for user sequences."""
 
     def __init__(self, serve_fn: Callable[[jax.Array, int], Tuple[jax.Array, jax.Array]],
-                 *, seq_len: int, k: int = 10, max_batch: int = 64):
-        """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores)."""
+                 *, seq_len: int, k: int = 10, max_batch: int = 64,
+                 method: Optional[str] = None):
+        """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores).
+
+        ``method`` is informational here (the scoring route is baked into
+        ``serve_fn``); use :meth:`for_seqrec` to have the engine build the
+        serve function for a named route itself.
+        """
         self._fn = jax.jit(serve_fn, static_argnums=(1,))
         self.seq_len = seq_len
         self.k = k
+        self.method = method
         self.batcher = MicroBatcher(max_batch=max_batch)
         self.latencies_ms: List[float] = []
         self.timeouts = 0
+
+    @classmethod
+    def for_seqrec(cls, params, cfg, *, k: int = 10, max_batch: int = 64,
+                   method: Optional[str] = None,
+                   sharded_mesh=None) -> "RetrievalEngine":
+        """Stand up an engine on a seqrec model with an explicit scoring
+        route.  ``method=None`` falls back to ``cfg.serve_method`` — the
+        production configs default to ``"pqtopk_fused"`` (the Pallas fused
+        score+top-k kernel)."""
+        from repro.models import seqrec as seqrec_lib
+        method = method or getattr(cfg, "serve_method", "pqtopk")
+
+        def serve_fn(seqs, kk):
+            return seqrec_lib.serve_topk(params, seqs, cfg, k=kk,
+                                         method=method,
+                                         sharded_mesh=sharded_mesh)
+
+        return cls(serve_fn, seq_len=cfg.max_seq_len, k=k,
+                   max_batch=max_batch, method=method)
 
     def submit(self, req: Request):
         self.batcher.submit(req)

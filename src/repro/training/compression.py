@@ -17,6 +17,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 Params = Any
 
@@ -59,7 +62,7 @@ def compressed_psum(grads: Params, err: Params, axis: str, *, rank: int = 4,
 
     Returns (mean-reduced grads, new error feedback).
     """
-    n_dev = jax.lax.axis_size(axis)
+    n_dev = compat.axis_size(axis)
     key = jax.random.PRNGKey(seed)
 
     def leaf(path, g, e):
@@ -89,6 +92,22 @@ def compressed_psum(grads: Params, err: Params, axis: str, *, rank: int = 4,
     out_e = jax.tree.map(lambda t: t[1], flat,
                          is_leaf=lambda t: isinstance(t, tuple))
     return out_g, out_e
+
+
+def compressed_psum_sharded(grads: Params, err: Params, mesh, axis: str, *,
+                            rank: int = 4, min_size: int = 65536,
+                            ) -> Tuple[Params, Params]:
+    """Standalone shard_mapped wrapper around :func:`compressed_psum` for
+    callers (and tests) that are not already inside a Manual region.  Grads
+    and error feedback are replicated over ``axis``; the train loop shards
+    the batch instead and builds its own region (see train_loop.py)."""
+
+    def f(g, e):
+        return compressed_psum(g, e, axis, rank=rank, min_size=min_size)
+
+    return compat.shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False, axis_names={axis})(grads, err)
 
 
 def compression_ratio(params: Params, rank: int = 4,

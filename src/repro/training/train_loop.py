@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.training import compression, optimizer as opt_lib
 
 LossFn = Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
@@ -75,7 +76,7 @@ def make_train_step(loss_fn: LossFn, opt_cfg: opt_lib.AdamWConfig, *,
                     lambda m: jax.lax.pmean(m, powersgd_axis), metrics_)
                 return loss_, metrics_, grads_, new_ef_
 
-            sharded = jax.shard_map(
+            sharded = compat.shard_map(
                 local_fn, mesh=mesh,
                 in_specs=(P(), P(powersgd_axis), P()),
                 out_specs=(P(), P(), P(), P()),

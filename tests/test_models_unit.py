@@ -1,5 +1,8 @@
 """Unit tests for model building blocks: attention (chunked vs naive,
 windows, GQA), MoE routing, norms, RoPE, embedding bag substrate, AUGRU."""
+import pytest
+
+pytest.importorskip("hypothesis")  # keep tier-1 collection green without dev deps
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,7 @@
 """PQ embedding + codebook builder invariants (hypothesis where useful)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # keep tier-1 collection green without dev deps
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

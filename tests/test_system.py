@@ -16,7 +16,11 @@ from repro.training import optimizer as O, train_loop as TL
 
 def _ndcg_at_k(ranks: np.ndarray, k: int = 10) -> float:
     """ranks: 0-based rank of the held-out item per user (or -1 if miss)."""
-    gains = np.where((ranks >= 0) & (ranks < k), 1.0 / np.log2(ranks + 2), 0.0)
+    hit = (ranks >= 0) & (ranks < k)
+    gains = np.zeros(ranks.shape, np.float64)
+    # Gains only on valid ranks: np.where evaluates 1/log2(ranks+2) for the
+    # misses too (ranks=-1 -> 1/log2(1) = 1/0) and warns on the division.
+    gains[hit] = 1.0 / np.log2(ranks[hit] + 2)
     return float(gains.mean())
 
 

@@ -146,13 +146,9 @@ def test_powersgd_compression_properties():
     g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32))}
     e = compression.init_error_feedback(g)
     mesh = jax.make_mesh((1,), ("pod",))
-    from jax.sharding import PartitionSpec as P
 
-    def f(gg, ee):
-        return compression.compressed_psum(gg, ee, "pod", rank=4, min_size=1)
-
-    out_g, out_e = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                                 out_specs=(P(), P()), check_vma=False)(g, e)
+    out_g, out_e = compression.compressed_psum_sharded(
+        g, e, mesh, "pod", rank=4, min_size=1)
     # decompressed + error == original gradient
     np.testing.assert_allclose(
         np.asarray(out_g["w"] + out_e["w"]), np.asarray(g["w"]),
