@@ -20,7 +20,7 @@ import numpy as np
 
 from benchmarks.timing import time_fn
 from repro import compat
-from repro.core import scoring
+from repro.core import pruning, scoring
 from repro.kernels.pqtopk import ops as pq_ops
 
 D_MODEL = 512
@@ -29,10 +29,17 @@ DENSE_MEM_BUDGET = 8e9    # bytes of W we allow the dense baseline (CPU host)
 # Largest catalogue the fused Pallas kernel is timed at in interpret mode
 # (CPU containers emulate the kernel; past this it measures the emulator).
 FUSED_INTERPRET_CAP = 100_000
+PRUNE_TILE = 1024         # pruning granularity for the cascaded route
 
 
 def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
-                methods=("dense", "recjpq", "pqtopk", "pqtopk_fused")):
+                methods=("dense", "recjpq", "pqtopk", "pqtopk_fused",
+                         "pqtopk_pruned")):
+    """One (n_items, m) cell.  Returns {method: timing-dict-or-None};
+    the pruned route's timing dict additionally carries
+    ``survival_fraction`` (figure2 uses uniform random codes, so every tile
+    tends to contain every sub-id and the bound prunes little — the
+    kernel-section skewed sweep shows the favourable regime)."""
     rng = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
     phi = jax.random.normal(key, (1, D_MODEL), jnp.float32)
@@ -55,6 +62,14 @@ def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
                 continue
             out[method] = time_fn(lambda: pq_ops.pq_topk(codes, s, K),
                                   repeats=repeats)
+        elif method == "pqtopk_pruned":
+            _, _, stats = pruning.cascade_topk(codes, s, K, tile=PRUNE_TILE,
+                                               return_stats=True)
+            t = time_fn(lambda: pruning.cascade_topk(codes, s, K,
+                                                     tile=PRUNE_TILE),
+                        repeats=repeats)
+            t["survival_fraction"] = stats["survival_fraction"]
+            out[method] = t
         else:
             alg = {"recjpq": scoring.score_recjpq,
                    "pqtopk": scoring.score_pqtopk,
@@ -77,6 +92,8 @@ def run(full: bool = False, repeats: int = 5):
                     "n_items": n, "m": m, "method": method,
                     "scoring_ms": None if t is None
                     else t["median_s"] * 1e3,
+                    **({"survival_fraction": t["survival_fraction"]}
+                       if t and "survival_fraction" in t else {}),
                 })
     return rows
 
@@ -87,14 +104,17 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
     rows = run(args.full, args.repeats)
-    print(f"{'m':>3s} {'n_items':>11s} {'method':12s} {'scoring_ms':>11s}")
+    print(f"{'m':>3s} {'n_items':>11s} {'method':14s} {'scoring_ms':>11s}")
     for r in rows:
         if r["scoring_ms"] is None:
             ms = ("interp-guard" if r["method"] == "pqtopk_fused"
                   else "OOM-guard")
         else:
             ms = f"{r['scoring_ms']:.2f}"
-        print(f"{r['m']:3d} {r['n_items']:11,d} {r['method']:12s} {ms:>12s}")
+        surv = (f"  surv={r['survival_fraction']:.2f}"
+                if "survival_fraction" in r else "")
+        print(f"{r['m']:3d} {r['n_items']:11,d} {r['method']:14s} "
+              f"{ms:>12s}{surv}")
     return rows
 
 

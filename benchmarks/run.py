@@ -3,20 +3,22 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   table3/*    — scoring + total mRT per (dataset, backbone, method) [Table 3]
   figure2/*   — scoring latency vs catalogue size, m in {8, 64}   [Fig. 2]
-  kernel/*    — PQ scoring algorithm micro-bench (XLA paths)
+  kernel/*    — PQ scoring algorithm micro-bench (XLA paths) + the
+                pruned-vs-exhaustive retrieval sweep on skewed data
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
+
+and also writes a machine-readable ``BENCH_pr2.json`` (``--json PATH``) so
+the perf trajectory is tracked across PRs: every row carries its section,
+method tag, median us/call, items/s where defined, and extra tags (survival
+fraction for the pruned route, interpret-mode markers, ...).
 
 Full-scale sweeps (10^7+ items) are behind ``--full`` (CI keeps <= 10^6).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
-
-
-def _emit(name: str, us: float | None, derived: str = ""):
-    us_s = f"{us:.1f}" if us is not None else "nan"
-    print(f"{name},{us_s},{derived}")
 
 
 def main(argv=None) -> None:
@@ -25,7 +27,20 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_pr2.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
+
+    rows = []
+
+    def _emit(section: str, name: str, us: float | None, derived: str = "",
+              *, method: str = "", items_per_s: float | None = None,
+              tags: dict | None = None):
+        us_s = f"{us:.1f}" if us is not None else "nan"
+        print(f"{name},{us_s},{derived}")
+        rows.append({"section": section, "name": name, "method": method,
+                     "median_us": us, "items_per_s": items_per_s,
+                     "tags": tags or {}})
 
     print("name,us_per_call,derived")
 
@@ -34,28 +49,41 @@ def main(argv=None) -> None:
         datasets = ("booking", "gowalla") if args.full else ("booking",)
         # CI default keeps the 1.27M-item Gowalla build out (slow dense
         # reconstruction on host); --full reproduces the whole table.
-        rows = table3.run(repeats=args.repeats, datasets=datasets)
-        for r in rows:
-            _emit(f"table3/{r['dataset']}/{r['backbone']}/{r['method']}/scoring",
+        t3 = table3.run(repeats=args.repeats, datasets=datasets)
+        for r in t3:
+            _emit("table3",
+                  f"table3/{r['dataset']}/{r['backbone']}/{r['method']}/scoring",
                   r["scoring_ms"] * 1e3,
-                  f"total_ms={r['total_ms']:.2f};backbone_ms={r['backbone_ms']:.2f}")
+                  f"total_ms={r['total_ms']:.2f};backbone_ms={r['backbone_ms']:.2f}",
+                  method=r["method"],
+                  tags={"total_ms": r["total_ms"],
+                        "backbone_ms": r["backbone_ms"]})
 
     if "figure2" not in args.skip:
         from benchmarks import figure2
-        rows = figure2.run(full=args.full, repeats=args.repeats)
-        for r in rows:
+        f2 = figure2.run(full=args.full, repeats=args.repeats)
+        for r in f2:
             us = None if r["scoring_ms"] is None else r["scoring_ms"] * 1e3
-            guard = ("interp-guard" if r["method"] == "pqtopk_fused"
-                     else "mem-wall")
-            _emit(f"figure2/m{r['m']}/n{r['n_items']}/{r['method']}", us,
-                  guard if us is None else "")
+            tags = {"n_items": r["n_items"], "m": r["m"]}
+            derived = ""
+            if us is None:
+                derived = ("interp-guard" if r["method"] == "pqtopk_fused"
+                           else "mem-wall")
+                tags["guard"] = derived
+            if "survival_fraction" in r:
+                tags["survival_fraction"] = r["survival_fraction"]
+                derived = f"survival={r['survival_fraction']:.3f}"
+            _emit("figure2", f"figure2/m{r['m']}/n{r['n_items']}/{r['method']}",
+                  us, derived, method=r["method"],
+                  items_per_s=(None if us is None else r["n_items"] / us * 1e6),
+                  tags=tags)
 
     if "kernel" not in args.skip:
         import jax
         import jax.numpy as jnp
         import numpy as np
         from benchmarks.timing import time_fn
-        from repro.core import scoring
+        from repro.core import pruning, scoring, topk as topk_lib
         rng = np.random.default_rng(0)
         n, m, b = 262_144, 8, 256
         codes = jnp.asarray(rng.integers(0, b, (n, m)), jnp.int32)
@@ -65,25 +93,67 @@ def main(argv=None) -> None:
                           ("onehot", scoring.score_pqtopk_onehot)]:
             fn = jax.jit(alg)
             t = time_fn(lambda: fn(codes, s), repeats=args.repeats)
-            _emit(f"kernel/pq_scoring_262k/{name}", t["median_s"] * 1e6,
-                  f"items_per_s={n / t['median_s']:.3e}")
+            _emit("kernel", f"kernel/pq_scoring_262k/{name}",
+                  t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}",
+                  method=name, items_per_s=n / t["median_s"],
+                  tags={"n_items": n})
         # Retrieval (scoring + top-k) comparison: XLA two-stage vs the fused
         # Pallas kernel, whose HBM output is O(B*K*N/TN) not O(B*N).
         from repro import compat
-        from repro.core import topk as topk_lib
         from repro.kernels.pqtopk import ops as pq_ops
         k = 10
         fn = jax.jit(lambda c_, s_: topk_lib.tiled_topk(
             scoring.score_pqtopk(c_, s_), k))
         t = time_fn(lambda: fn(codes, s), repeats=args.repeats)
-        _emit(f"kernel/pq_retrieval_262k/pqtopk", t["median_s"] * 1e6,
-              f"items_per_s={n / t['median_s']:.3e}")
-        t = time_fn(lambda: pq_ops.pq_topk(codes, s, k), repeats=args.repeats)
+        _emit("kernel", "kernel/pq_retrieval_262k/pqtopk",
+              t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}",
+              method="pqtopk", items_per_s=n / t["median_s"],
+              tags={"n_items": n})
+        t = time_fn(lambda: pq_ops.pq_topk(codes, s, k),
+                    repeats=args.repeats)
         # Off TPU the fused kernel runs in interpret mode — the number times
         # the emulator, not the kernel; tag it so it can't be read as perf.
-        tag = "" if compat.on_tpu() else ";interpret-mode"
-        _emit(f"kernel/pq_retrieval_262k/pqtopk_fused", t["median_s"] * 1e6,
-              f"items_per_s={n / t['median_s']:.3e}{tag}")
+        interp = not compat.on_tpu()
+        tag = ";interpret-mode" if interp else ""
+        _emit("kernel", "kernel/pq_retrieval_262k/pqtopk_fused",
+              t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}{tag}",
+              method="pqtopk_fused", items_per_s=n / t["median_s"],
+              tags={"n_items": n, "interpret_mode": interp})
+        # Cascaded pruned retrieval on skewed-score synthetic data
+        # (N = 2^20): codes clustered by catalogue position (as after a
+        # popularity-ordered RecJPQ assignment) + heavy-tailed sub-id
+        # scores, the regime arXiv:2505.00560 targets.  Exhaustive XLA
+        # route vs the two-pass cascade; derived reports the fraction of
+        # tiles that survived the bound.
+        n_sk, tile_sk = 1 << 20, 1024
+        centers = (np.arange(n_sk) / n_sk * b).astype(np.int64)
+        codes_sk = jnp.asarray(
+            (centers[:, None] + rng.integers(-1, 2, (n_sk, m))) % b,
+            jnp.int32)
+        g = rng.standard_normal((1, m, b))
+        s_sk = jnp.asarray(np.sign(g) * np.abs(g) ** 3, jnp.float32)
+        fn_ex = jax.jit(lambda c_, s_: topk_lib.tiled_topk(
+            scoring.score_pqtopk(c_, s_), k))
+        t = time_fn(lambda: fn_ex(codes_sk, s_sk), repeats=args.repeats)
+        _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk",
+              t["median_s"] * 1e6, f"items_per_s={n_sk / t['median_s']:.3e}",
+              method="pqtopk", items_per_s=n_sk / t["median_s"],
+              tags={"n_items": n_sk, "skewed": True})
+        _, _, stats = pruning.cascade_topk(codes_sk, s_sk, k, tile=tile_sk,
+                                           return_stats=True)
+        t = time_fn(lambda: pruning.cascade_topk(codes_sk, s_sk, k,
+                                                 tile=tile_sk),
+                    repeats=args.repeats)
+        _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk_pruned",
+              t["median_s"] * 1e6,
+              f"items_per_s={n_sk / t['median_s']:.3e};"
+              f"survival={stats['survival_fraction']:.4f};"
+              f"tiles={stats['n_survived']}/{stats['n_tiles']}",
+              method="pqtopk_pruned", items_per_s=n_sk / t["median_s"],
+              tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
+                    "survival_fraction": stats["survival_fraction"],
+                    "n_survived": stats["n_survived"],
+                    "n_tiles": stats["n_tiles"]})
 
     if "roofline" not in args.skip:
         import os
@@ -92,15 +162,31 @@ def main(argv=None) -> None:
         if os.path.isdir(art):
             for r in roofline.table(art):
                 if "error" in r:
-                    _emit(f"roofline/{r['arch']}/{r['shape']}", None,
-                          f"error={r['error'][:50]}")
+                    _emit("roofline", f"roofline/{r['arch']}/{r['shape']}",
+                          None, f"error={r['error'][:50]}")
                     continue
                 rf = r.get("roofline_frac")
-                _emit(f"roofline/{r['arch']}/{r['shape']}",
+                _emit("roofline", f"roofline/{r['arch']}/{r['shape']}",
                       r["bound_s"] * 1e6,
                       f"dominant={r['dominant']};"
                       f"roofline_frac={rf:.3f}" if rf else
-                      f"dominant={r['dominant']}")
+                      f"dominant={r['dominant']}",
+                      tags={"dominant": r["dominant"]})
+
+    if args.json:
+        import platform
+
+        import jax as _jax
+        doc = {
+            "pr": 2,
+            "backend": _jax.default_backend(),
+            "platform": platform.platform(),
+            "repeats": args.repeats,
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -13,4 +13,12 @@ if ! python -c "import hypothesis" 2>/dev/null; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
+# pruned cascade, figure2 sweep) end to end so kernel-path breakage
+# surfaces in CI, not just in unit tests.  table3/roofline stay out (slow
+# dataset builds / artifact-dependent); --json '' keeps the smoke from
+# overwriting the recorded BENCH_pr2.json perf artifact.
+python -m benchmarks.run --skip table3 --skip roofline --repeats 1 \
+    --json '' > /dev/null

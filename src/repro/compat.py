@@ -105,6 +105,18 @@ def tpu_memory_space():
     return _MEMORY_SPACE
 
 
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch, grid, in_specs,
+                              out_specs):
+    """``pltpu.PrefetchScalarGridSpec`` — the TPU grid spec whose scalar
+    operands are available to BlockSpec index maps (the mechanism behind
+    the compacted tile-index grid of the pruned retrieval route)."""
+    if _pltpu is None:                                 # pragma: no cover
+        raise ImportError("jax.experimental.pallas.tpu is unavailable")
+    return _pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+        in_specs=in_specs, out_specs=out_specs)
+
+
 # ---------------------------------------------------------------------------
 # Backend probe shared by the kernel wrappers.
 # ---------------------------------------------------------------------------

@@ -19,7 +19,7 @@ CONFIG = ArchConfig(
         n_heads=8,
         d_ff=2048,
         max_seq_len=200,
-        pq=PQConfig(m=8, b=256, assign="svd"),
+        pq=PQConfig(m=8, b=256, assign="svd", code_dtype="uint8"),
         serve_method="pqtopk_fused",
     ),
     shapes=seqrec_shapes(N_ITEMS),
@@ -34,7 +34,7 @@ def reduced() -> ArchConfig:
         backbone="bert4rec",
         n_items=1000, d_model=32, n_blocks=2, n_heads=2, d_ff=64,
         max_seq_len=16, n_negatives=16,
-        pq=PQConfig(m=4, b=16, assign="svd"),
+        pq=PQConfig(m=4, b=16, assign="svd", code_dtype="uint8"),
         serve_method="pqtopk_fused",
     )
     return replace(CONFIG, model=model)

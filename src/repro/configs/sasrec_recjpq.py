@@ -19,7 +19,7 @@ CONFIG = ArchConfig(
         n_heads=8,
         d_ff=512,
         max_seq_len=200,
-        pq=PQConfig(m=8, b=512, assign="svd"),
+        pq=PQConfig(m=8, b=512, assign="svd", code_dtype="uint16"),
         serve_method="pqtopk_fused",
     ),
     shapes=seqrec_shapes(N_ITEMS),

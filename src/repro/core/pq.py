@@ -70,8 +70,16 @@ def pq_vmem_bytes(pq: PQConfig, d_model: int) -> int:
     return pq.m * pq.b * sub * 4 + pq.m * pq.b * 4
 
 
+def code_nbytes(pq: PQConfig) -> int:
+    """Bytes per sub-id in storage (1 for int8/uint8 when b <= 256) — the
+    per-split HBM traffic of every code read in the retrieval head."""
+    return jnp.dtype(pq.code_dtype).itemsize
+
+
 def compression_ratio(pq: PQConfig, n_items: int, d_model: int,
-                      dense_bytes: int = 4, code_bytes: int = 4) -> float:
+                      dense_bytes: int = 4,
+                      code_bytes: Optional[int] = None) -> float:
+    cb = code_nbytes(pq) if code_bytes is None else code_bytes
     dense = n_items * d_model * dense_bytes
-    compressed = n_items * pq.m * code_bytes + pq.m * pq.b * (d_model // pq.m) * dense_bytes
+    compressed = n_items * pq.m * cb + pq.m * pq.b * (d_model // pq.m) * dense_bytes
     return dense / compressed

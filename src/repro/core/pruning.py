@@ -1,0 +1,225 @@
+"""Per-tile score upper bounds for cascaded (pruned) PQ retrieval.
+
+Follow-up to PQTopK: "Efficient Recommendation with Millions of Items by
+Dynamic Pruning of Sub-Item Embeddings" (arXiv:2505.00560) observes that
+per-split score decomposition admits cheap *upper bounds*: for any item i
+in tile t,
+
+    r_i = sum_k S[k, G[i,k]]  <=  sum_k max_{j in C(t,k)} S[k, j] =: ub_t
+
+where C(t,k) is the set of sub-ids that actually occur in split k of tile
+t.  A retriever that knows a threshold theta with at least K items scoring
+>= theta can skip every tile with ub_t < theta *without changing the exact
+top-K* — no skipped item can reach theta (see docs/PRUNING.md for the full
+argument, including ties).
+
+This module holds the query-independent half (per-tile code-presence
+metadata, built once per catalogue at head-build time) and the
+query-dependent half (bounds, theta seeding, survival mask), all pure jnp
+so they can run inside jit (pass 1 of the cascade) or under shard_map
+(per-shard bounds with a pmax-shared theta).
+"""
+from __future__ import annotations
+
+import weakref
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import tree_sum
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# query-independent metadata (built at head-build time, cached per catalogue)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TileMeta:
+    """Code-range metadata for one catalogue at one tile size.
+
+    present[t, k, j] == True iff sub-id j occurs in split k among the items
+    of tile t (items t*tile .. (t+1)*tile-1; the last tile may be partial).
+    Cost: n_tiles * m * b bools — e.g. 1 MiB for N=2^20, tile=2048, m=8,
+    b=256.  Tiles beyond the catalogue are absent; a tile-split with no
+    items present bounds to -inf and is auto-pruned.
+    """
+
+    tile: int
+    n_tiles: int
+    n_items: int
+    present: jax.Array   # (n_tiles, m, b) bool
+
+
+@partial(jax.jit, static_argnames=("b", "tile"))
+def _build_present(codes: jax.Array, b: int, tile: int) -> jax.Array:
+    n, m = codes.shape
+    n_tiles = -(-n // tile)
+    t_ids = (jnp.arange(n, dtype=jnp.int32) // tile).astype(jnp.int32)
+    present = jnp.zeros((n_tiles, m, b), jnp.bool_)
+    for k in range(m):
+        present = present.at[t_ids, k, codes[:, k].astype(jnp.int32)].set(True)
+    return present
+
+
+def build_tile_metadata(codes: jax.Array, b: int, tile: int) -> TileMeta:
+    """O(N*m) scatter over the codebook — head-build-time work."""
+    n = codes.shape[0]
+    return TileMeta(tile=tile, n_tiles=-(-n // tile), n_items=n,
+                    present=_build_present(codes, b, tile))
+
+
+# Per-catalogue cache keyed by the identity of the codes array; a weakref
+# finalizer evicts entries when the array is collected so an id() reuse can
+# never serve stale metadata.
+_META_CACHE: dict = {}
+
+
+def get_tile_metadata(codes: jax.Array, b: int, tile: int) -> TileMeta:
+    key = (id(codes), b, tile)
+    meta = _META_CACHE.get(key)
+    if meta is not None:
+        return meta
+    meta = build_tile_metadata(codes, b, tile)
+    try:
+        weakref.finalize(codes, _META_CACHE.pop, key, None)
+        _META_CACHE[key] = meta
+    except TypeError:   # array type not weakref-able: recompute per call
+        pass
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# query-dependent: bounds -> theta -> survival mask (pass 1 of the cascade)
+# ---------------------------------------------------------------------------
+
+
+def tile_upper_bounds(present: jax.Array, s: jax.Array) -> jax.Array:
+    """ub[q, t] = sum_k max_{j: present[t,k,j]} s[q,k,j].
+
+    present (T, m, b) bool, s (B, m, b) f32 -> (B, T) f32.  Cost
+    O(B*T*m*b) = O(B*N*m*b/tile) — a factor tile/b cheaper than scoring.
+    """
+    m = present.shape[1]
+    parts = [jnp.where(present[None, :, k, :], s[:, None, k, :], NEG_INF)
+             .max(axis=-1) for k in range(m)]          # m x (B, T)
+    # Same balanced-tree add order as scoring so a single-item tile's bound
+    # is bit-identical to that item's score (bound tightness tests rely on
+    # exact equality there).
+    return tree_sum(parts)
+
+
+def theta_from_seed(codes: jax.Array, s: jax.Array, bounds: jax.Array,
+                    k: int, *, tile: int, n_seed: int,
+                    n_items: Optional[int] = None,
+                    id_offset=0) -> jax.Array:
+    """Greedy exact pass over the ``n_seed`` most promising tiles.
+
+    Scores the tiles with the largest (batch-max) upper bounds exactly and
+    returns theta (B,) = each query's k-th best seeded score — a certified
+    threshold: at least k items score >= theta, so any tile with
+    ub < theta cannot contribute to the top-k.
+
+    ``id_offset``/``n_items`` mask rows whose *global* id falls outside the
+    true catalogue (tile-alignment padding, shard padding); on a shard,
+    pass the shard's global offset and the global item count.
+    """
+    from repro.kernels.pqtopk import ref as pq_ref
+
+    n, m = codes.shape
+    n_tiles = -(-n // tile)
+    n_seed = min(max(n_seed, -(-k // tile)), n_tiles)
+    pad = n_tiles * tile - n
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    seed_tiles = jax.lax.top_k(bounds.max(axis=0), n_seed)[1]     # (n_seed,)
+    seed_codes = codes.reshape(n_tiles, tile, m)[seed_tiles]
+    scores = pq_ref.pq_scores(seed_codes.reshape(n_seed * tile, m), s)
+    local_id = (seed_tiles[:, None] * tile
+                + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
+    limit = n if n_items is None else n_items
+    valid = (id_offset + local_id < limit) & (local_id < n)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    kk = min(k, n_seed * tile)
+    return jax.lax.top_k(scores, kk)[0][:, -1]
+
+
+def survival_mask(bounds: jax.Array, theta: jax.Array) -> jax.Array:
+    """Tile survives iff ANY query in the batch still needs it.
+
+    bounds (B, T), theta (B,) -> (T,) bool.  ``>=`` (not ``>``) keeps
+    exactness under ties: an item scoring exactly theta must stay visible.
+    """
+    return (bounds >= theta[:, None]).any(axis=0)
+
+
+def pruned_pass1(codes: jax.Array, present: jax.Array, s: jax.Array, k: int,
+                 *, tile: int, n_seed: int,
+                 n_items: Optional[int] = None,
+                 id_offset=0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bounds + theta + survival mask in one jit-friendly call.
+
+    Returns (mask (T,) bool, bounds (B, T), theta (B,)).
+    """
+    bounds = tile_upper_bounds(present, s)
+    theta = theta_from_seed(codes, s, bounds, k, tile=tile, n_seed=n_seed,
+                            n_items=n_items, id_offset=id_offset)
+    return survival_mask(bounds, theta), bounds, theta
+
+
+# ---------------------------------------------------------------------------
+# the full two-pass cascade (host-orchestrated)
+# ---------------------------------------------------------------------------
+
+_pass1_jit = jax.jit(pruned_pass1, static_argnames=("k", "tile", "n_seed"))
+
+
+def slot_bucket(n_survived: int, k: int, tile: int) -> int:
+    """Pad the survivor list to a power-of-two slot count so pass-2 jit
+    recompiles stay bounded; always at least enough slots to hold k."""
+    need = max(1, n_survived, -(-k // tile))
+    return 1 << (need - 1).bit_length()
+
+
+def cascade_topk(codes: jax.Array, s: jax.Array, k: int, *, tile: int,
+                 seed_tiles: int = 2, meta: Optional[TileMeta] = None,
+                 use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 return_stats: bool = False):
+    """Exact top-k via the two-pass cascade, given the S matrix.
+
+    Pass 1 (jitted): bounds -> theta -> survival mask.  Host sync: compact
+    the surviving tile indices (power-of-two slot bucket, sentinel-padded).
+    Pass 2 (jitted per bucket size): fused scoring + top-k over surviving
+    tiles only.  Bit-identical to ``score_pqtopk`` + ``tiled_topk``; NOT
+    jit-compatible (the compaction is a device->host sync) — inside jit use
+    the masked in-graph variant in ``retrieval_head``.
+    """
+    import numpy as np
+
+    from repro.kernels.pqtopk import ops as kernel_ops
+
+    n = codes.shape[0]
+    tile = min(tile, n)
+    if meta is None:
+        meta = get_tile_metadata(codes, int(s.shape[-1]), tile)
+    mask, _, _ = _pass1_jit(codes, meta.present, s, k, tile=tile,
+                            n_seed=seed_tiles)
+    survivors = np.nonzero(np.asarray(mask))[0]
+    n_slots = slot_bucket(len(survivors), k, tile)
+    tile_idx = np.full(n_slots, kernel_ops.sentinel_tile(n, tile), np.int32)
+    tile_idx[:len(survivors)] = survivors
+    vals, ids = kernel_ops.pq_topk_tiles(
+        codes, s, k, jnp.asarray(tile_idx), tile=tile,
+        use_kernel=use_kernel, interpret=interpret)
+    if not return_stats:
+        return vals, ids
+    stats = {"n_tiles": meta.n_tiles, "n_survived": int(len(survivors)),
+             "n_scored": int(n_slots),
+             "survival_fraction": len(survivors) / max(meta.n_tiles, 1)}
+    return vals, ids, stats

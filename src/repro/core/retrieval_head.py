@@ -12,25 +12,35 @@ kernel path and the item-sharded distributed path.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import PQConfig
 from repro.core import pq as pq_lib
-from repro.core import scoring, topk as topk_lib
+from repro.core import pruning, scoring, topk as topk_lib
 from repro.distributed.sharding import manual_axis_map
 
 Params = Dict[str, Any]
 
 #: Methods accepted by ``top_items``/``serve_topk`` — the paper's three
-#: algorithms plus the two Pallas routes (scores-only kernel, fused
-#: score+top-k kernel).
+#: algorithms plus the Pallas routes (scores-only kernel, fused
+#: score+top-k kernel), the cascaded pruned route, and the approximate
+#: block-max route.
 TOP_ITEMS_METHODS = ("dense", "recjpq", "pqtopk", "pqtopk_onehot",
-                     "pqtopk_kernel", "pqtopk_fused")
+                     "pqtopk_kernel", "pqtopk_fused", "pqtopk_pruned",
+                     "pqtopk_approx")
+
+#: Methods whose full cascade needs host orchestration (a device->host sync
+#: between the bound pass and the compacted scoring pass).  Inside jit,
+#: ``top_items`` falls back to an in-graph masked variant that is exact but
+#: scores all tiles; ``top_items_pruned`` is the real two-dispatch cascade.
+HOST_CASCADE_METHODS = ("pqtopk_pruned",)
 
 
 # ---------------------------------------------------------------------------
@@ -129,8 +139,179 @@ def top_items(params: Params, phi: jax.Array, k: int,
                                  phi.astype(jnp.float32))
         from repro.kernels.pqtopk import ops as kernel_ops
         return kernel_ops.pq_topk(params["codes"], s, k)
+    if method == "pqtopk_pruned":
+        if not is_pq(params):
+            raise ValueError("method 'pqtopk_pruned' requires a PQ head")
+        return _top_items_pruned_ingraph(params, phi, k, tile)
+    if method == "pqtopk_approx":
+        if not is_pq(params):
+            raise ValueError("method 'pqtopk_approx' requires a PQ head")
+        r = score_all(params, phi, "pqtopk")
+        return topk_lib.approx_topk_maxblock(r, k)
     r = score_all(params, phi, method)
     return topk_lib.tiled_topk(r, k, tile)
+
+
+# ---------------------------------------------------------------------------
+# cascaded pruned retrieval (upper-bound tile skipping, docs/PRUNING.md)
+# ---------------------------------------------------------------------------
+
+DEFAULT_PRUNE_TILE = 2048
+DEFAULT_SEED_TILES = 2
+
+
+_subid_scores_jit = jax.jit(
+    lambda sub_emb, phi: scoring.subid_scores(sub_emb.astype(jnp.float32),
+                                              phi.astype(jnp.float32)))
+
+
+def _top_items_pruned_ingraph(params, phi, k, tile,
+                              seed_tiles: int = DEFAULT_SEED_TILES):
+    """Jit-compatible pruned variant: mask, don't compact.
+
+    Runs the full bound cascade in-graph and masks pruned tiles' scores to
+    -inf before the top-k, so the result is bit-identical to the compacted
+    route (and the exhaustive oracle) but every tile is still scored — use
+    :func:`top_items_pruned` outside jit for the real O(N_survive) pass 2.
+    """
+    codes, sub_emb = params["codes"], params["sub_emb"]
+    b = sub_emb.shape[1]
+    n = codes.shape[0]
+    prune_tile = min(DEFAULT_PRUNE_TILE, n)
+    present = pruning._build_present(codes, b, prune_tile)
+    s = scoring.subid_scores(sub_emb.astype(jnp.float32),
+                             phi.astype(jnp.float32))
+    mask, _, _ = pruning.pruned_pass1(codes, present, s, k, tile=prune_tile,
+                                      n_seed=seed_tiles)
+    r = scoring.score_pqtopk(codes, s)
+    item_tile = jnp.arange(n, dtype=jnp.int32) // prune_tile
+    r = jnp.where(mask[item_tile][None, :], r, -jnp.inf)
+    return topk_lib.tiled_topk(r, k, tile)
+
+
+def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
+                     tile: int = DEFAULT_PRUNE_TILE,
+                     seed_tiles: int = DEFAULT_SEED_TILES,
+                     use_kernel: Optional[bool] = None,
+                     interpret: Optional[bool] = None,
+                     return_stats: bool = False):
+    """Two-pass cascaded retrieval (``method="pqtopk_pruned"``), host mode.
+
+    Pass 1 (jitted): per-tile upper bounds from cached code-presence
+    metadata, theta from a greedy exact pass over the ``seed_tiles`` most
+    promising tiles, survival mask.  Host sync: compact surviving tile
+    indices (power-of-two slot bucket, sentinel-padded).  Pass 2 (jitted
+    per bucket size): fused scoring + top-k over surviving tiles only.
+
+    Exact: every skipped tile's bound is below theta, and at least k items
+    score >= theta, so the top-k (values AND ids, ties included) matches
+    the exhaustive oracle bit-for-bit.  With ``return_stats`` also returns
+    {"n_tiles", "n_survived", "n_scored", "survival_fraction"}.
+    """
+    if not is_pq(params):
+        raise ValueError("top_items_pruned requires a PQ head")
+    s = _subid_scores_jit(params["sub_emb"], phi)
+    return pruning.cascade_topk(params["codes"], s, k, tile=tile,
+                                seed_tiles=seed_tiles, use_kernel=use_kernel,
+                                interpret=interpret,
+                                return_stats=return_stats)
+
+
+def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
+                             axis: str = "model", *,
+                             tile: int = DEFAULT_PRUNE_TILE,
+                             seed_tiles: int = DEFAULT_SEED_TILES,
+                             use_kernel: Optional[bool] = None,
+                             interpret: Optional[bool] = None,
+                             return_stats: bool = False):
+    """Item-sharded cascade: per-shard pruning with a shared theta.
+
+    Pass 1 (one shard_map): each shard bounds its local tiles, seeds a
+    local theta from its own most promising tiles, then the global theta is
+    the pmax over shards — each local theta certifies >= k items somewhere,
+    so the max is still certified and is the tightest such bound.  Local
+    bound blocks are all-gathered (out-spec concatenation along the tile
+    axis) so the host computes one global survivor mask.  Pass 2 (second
+    shard_map): each shard scores its own compacted survivor list (padded
+    to the max per-shard count for SPMD uniformity) and contributes k
+    candidates to the same O(k * shards) merge as every other route.
+    """
+    if not is_pq(params):
+        raise ValueError("top_items_pruned_sharded requires a PQ head")
+    from repro.kernels.pqtopk import ops as kernel_ops
+    codes, sub_emb = params["codes"], params["sub_emb"]
+    n = codes.shape[0]
+    n_shards = mesh.shape[axis]
+    pad = (-n) % n_shards
+    codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
+    n_local = (n + pad) // n_shards
+    # Pass 2 oversamples the local top-(k + pad) so shard-padding rows can
+    # be masked out afterwards; the tile must be able to hold that many
+    # winners (k <= tile is required everywhere, k + pad only here).
+    tile = min(max(tile, k + pad), n_local)
+    t_local = -(-n_local // tile)
+    b = sub_emb.shape[1]
+    if use_kernel is None:
+        from repro import compat
+        use_kernel = compat.on_tpu()
+    if interpret is None:
+        from repro import compat
+        interpret = not compat.on_tpu()
+
+    def pass1_shard(codes_local, sub_emb_, phi_):
+        s = scoring.subid_scores(sub_emb_.astype(jnp.float32),
+                                 phi_.astype(jnp.float32))
+        present = pruning._build_present(codes_local, b, tile)
+        offset = jax.lax.axis_index(axis) * n_local
+        bounds = pruning.tile_upper_bounds(present, s)
+        theta_local = pruning.theta_from_seed(
+            codes_local, s, bounds, k, tile=tile, n_seed=seed_tiles,
+            n_items=n, id_offset=offset)
+        theta = jax.lax.pmax(theta_local, axis)
+        return bounds, theta, s
+
+    fn1 = manual_axis_map(
+        pass1_shard, mesh,
+        in_specs=(P(axis, None), P(), P()),
+        out_specs=(P(None, axis), P(), P()))
+    bounds, theta, s = fn1(codes_p, sub_emb, phi)
+
+    mask = np.asarray(pruning.survival_mask(bounds, theta))
+    per_shard = mask.reshape(n_shards, t_local)
+    counts = per_shard.sum(axis=1)
+    n_slots = pruning.slot_bucket(int(counts.max()), k, tile)
+    sentinel = kernel_ops.sentinel_tile(n_local, tile)
+    idx_all = np.full((n_shards, n_slots), sentinel, np.int32)
+    for sh in range(n_shards):
+        local = np.nonzero(per_shard[sh])[0]
+        idx_all[sh, :len(local)] = local
+    k_local = min(k + pad, n_local)
+
+    def pass2_shard(codes_local, s_, idx_local):
+        lv, li = kernel_ops._pq_topk_tiles(
+            codes_local, s_, k_local, idx_local, tile=tile,
+            batch_tile=kernel_ops._k.DEFAULT_BATCH_TILE,
+            use_kernel=use_kernel, interpret=interpret)
+        offset = jax.lax.axis_index(axis) * n_local
+        gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
+        lv = jnp.where(gid < n, lv, -jnp.inf)
+        if k_local > k:
+            lv, sel = jax.lax.top_k(lv, k)
+            gid = jnp.take_along_axis(gid, sel, axis=1)
+        return topk_lib.merge_local_topk(lv, gid, k, axis)
+
+    fn2 = manual_axis_map(
+        pass2_shard, mesh,
+        in_specs=(P(axis, None), P(), P(axis)),
+        out_specs=(P(), P()))
+    vals, ids = fn2(codes_p, s, jnp.asarray(idx_all.reshape(-1)))
+    if not return_stats:
+        return vals, ids
+    total = int(mask.size)
+    stats = {"n_tiles": total, "n_survived": int(mask.sum()),
+             "n_scored": int(n_shards * n_slots),
+             "survival_fraction": float(mask.sum()) / max(total, 1)}
+    return vals, ids, stats
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +329,8 @@ def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
     """
     if not is_pq(params):
         return _dense_top_items_sharded(params, phi, k, mesh, axis)
+    if method == "pqtopk_pruned":
+        return top_items_pruned_sharded(params, phi, k, mesh, axis)
     n = params["codes"].shape[0]
     n_shards = mesh.shape[axis]
     pad = (-n) % n_shards

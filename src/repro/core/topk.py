@@ -25,11 +25,18 @@ def tiled_topk(scores: jax.Array, k: int, tile: int = 8192,
     """Two-stage exact top-k: per-tile top-k, then top-k over winners.
 
     Exact because every global top-k element is a top-k element of its tile.
+    Non-dividing N is padded with ``-inf`` (padding can never win, and ties
+    among real elements keep their lowest-index order), so odd catalogue
+    sizes stay on the tiled path instead of falling back to a full
+    ``lax.top_k`` sort over N.
     """
     b, n = scores.shape
-    if n <= tile or n % tile:
+    if n <= tile:
         return jax.lax.top_k(scores, k)
-    n_tiles = n // tile
+    if n % tile:
+        scores = jnp.pad(scores, ((0, 0), (0, (-n) % tile)),
+                         constant_values=NEG_INF)
+    n_tiles = scores.shape[1] // tile
     kk = min(k, tile)
     tiles = scores.reshape(b, n_tiles, tile)
     tv, ti = jax.lax.top_k(tiles, kk)                  # (B, T, kk)

@@ -4,25 +4,43 @@ Two kernels:
 
 * ``pq_scores_kernel``     — scores only: for a tile of TN items, expand each
   split's codes to one-hot via iota comparison (in VMEM, never in HBM) and
-  accumulate ``S_k @ onehot_k^T`` on the MXU.  HBM traffic: m bytes/item of
-  codes (vs 2*d bytes/item for dense scoring).
+  accumulate ``S_k @ onehot_k^T`` on the MXU.  HBM traffic: 1 byte/item/split
+  for int8/uint8 codes (4 for int32) vs 2*d bytes/item for dense scoring.
 
-* ``pq_topk_fused_kernel`` — additionally reduces each tile to its local
-  top-K (iterative max-extract in VMEM) so only (B, n_tiles, K) candidates
-  ever reach HBM; the final merge over tile winners happens outside.  This
-  is the hierarchical top-k of DESIGN.md §3: HBM output drops from
-  O(B*N) to O(B*K*N/TN).
+* ``pq_topk_fused_kernel`` — additionally reduces each (batch tile × item
+  tile) block to its local top-K so only (B, n_slots, K) candidates ever
+  reach HBM; the final merge over tile winners happens outside.  Rebuilt
+  for PR 2 around three hardware-level wins:
 
-Block layout (grid over item tiles):
-  codes (N, m) int32/int8  -> block (TN, m)      @ row i
-  s     (B, m, b) f32      -> block (B, m, b)    (whole, replicated per step)
-  out   (B, N) f32         -> block (B, TN)      @ col i     [pq_scores]
-  out_v (B, T, K) f32      -> block (B, 1, K)    @ tile i    [fused]
-  out_i (B, T, K) i32      -> block (B, 1, K)    @ tile i    [fused]
+  1. **Batch tiling** — grid is (tile slot, batch tile), so B is unbounded:
+     each step sees a (TB, m, b) slice of S instead of the whole batch.
+  2. **Single-pass top-k** — the old K-pass iterative max-extract re-scanned
+     the whole VMEM tile K times.  Now a two-phase reduction: one pass
+     computes per-block partial top-q over C = k-oversampled blocks
+     (``approx_topk``'s block-max structure, made exact by keeping
+     q = min(k, TN/C) per block — every global winner is a within-block
+     winner under the same value-then-index order), then an in-VMEM rerank
+     merges the C*q candidates.  Data is touched once; the rerank works on
+     the reduced candidate set.
+  3. **Compacted tile indices** — the item-tile axis is indirected through a
+     scalar-prefetched index array (``PrefetchScalarGridSpec``), so the
+     pruned retrieval route can run the same kernel over only the tiles
+     that survive the upper-bound cascade: codes HBM traffic drops from
+     O(N*m) to O(N_survive*m).  The exhaustive route passes the identity
+     map.  Slots mapping to the sentinel tile (fully past ``n_items``)
+     emit -inf candidates and never reach the final top-k.
 
-VMEM working set per step (TN=2048, b=256, B<=128, f32):
-  onehot 2048*256*4 = 2 MiB, acc B*TN*4 <= 1 MiB, S m*b*B*4 <= 1 MiB.
-MXU shapes: (B, b) @ (b, TN) — b=256 and TN multiples of 128 line up with
+Block layout (grid = (n_slots, n_batch_tiles), batch innermost so each
+codes tile is fetched once):
+  tile_idx (n_slots,) i32     -> scalar prefetch (SMEM)
+  codes (N, m) i8/u8/i32      -> block (TN, m)       @ row tile_idx[i]
+  s     (B, m, b) f32         -> block (TB, m, b)    @ batch tile j
+  out_v (B, n_slots, K) f32   -> block (TB, 1, K)    @ (j, i)
+  out_i (B, n_slots, K) i32   -> block (TB, 1, K)    @ (j, i)
+
+VMEM working set per step (TN=2048, b=256, TB=128, f32):
+  onehot 2048*256*4 = 2 MiB, scores TB*TN*4 = 1 MiB, S m*b*TB*4 <= 1 MiB.
+MXU shapes: (TB, b) @ (b, TN) — b=256 and TN multiples of 128 line up with
 the 128x128 systolic array.
 """
 from __future__ import annotations
@@ -33,16 +51,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
 from repro.core.scoring import tree_sum
 
 DEFAULT_TILE = 2048
+DEFAULT_BATCH_TILE = 128
+DEFAULT_OVERSAMPLE = 2
 NEG_INF = float("-inf")
 
 
 def _tile_scores(codes_ref, s_ref):
-    """Shared body: one-hot MXU scoring of one item tile. -> (B, TN) f32."""
+    """Shared body: one-hot MXU scoring of one item tile. -> (TB, TN) f32.
+
+    ``codes_ref`` may be int8/uint8 (b <= 128 / 256) or int32; the widen to
+    int32 happens in VMEM, so the 8-bit dtypes cut HBM code traffic 4x.
+    """
     codes = codes_ref[...].astype(jnp.int32)          # (TN, m)
-    s = s_ref[...].astype(jnp.float32)                # (B, m, b)
+    s = s_ref[...].astype(jnp.float32)                # (TB, m, b)
     tn, m = codes.shape
     b = s.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, (tn, b), 1)
@@ -53,7 +78,7 @@ def _tile_scores(codes_ref, s_ref):
             s[:, k, :], onehot,
             dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ))                                            # (B, TN)
+        ))                                            # (TB, TN)
     # Each one-hot matmul is exact in f32 (a single nonzero per row), so the
     # only rounding happens in the cross-split reduction — tree_sum keeps it
     # bit-identical to score_pqtopk / the jnp oracle (see scoring.tree_sum).
@@ -64,26 +89,60 @@ def pq_scores_kernel(codes_ref, s_ref, out_ref):
     out_ref[...] = _tile_scores(codes_ref, s_ref)
 
 
-def pq_topk_fused_kernel(codes_ref, s_ref, out_v_ref, out_i_ref, *,
-                         k: int, tile: int, n_items: int):
-    i = pl.program_id(0)
-    scores = _tile_scores(codes_ref, s_ref)           # (B, TN)
-    bq, tn = scores.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (bq, tn), 1)
-    # Mask padding beyond the true catalogue size.
-    global_col = col + i * tile
+def pick_blocks(tn: int, k: int, oversample: int = DEFAULT_OVERSAMPLE) -> int:
+    """Number of reduction blocks C for the two-phase tile top-k.
+
+    k-oversampled (C >= k*oversample) so the per-block depth q = min(k, TN/C)
+    stays shallow, capped at 128 (one lane register) and clamped to divide
+    TN (TN is always a multiple of 128 after wrapper rounding, so any
+    power-of-two C <= 128 divides it; tiny tiles fall back to C = TN).
+    """
+    c = 1
+    while c < max(1, k) * oversample:
+        c *= 2
+    c = min(c, 128)
+    while tn % c:
+        c //= 2
+    return max(c, 1)
+
+
+def _tile_topk(scores, k: int, blocks: int):
+    """Exact top-k of one VMEM-resident score tile, single data pass.
+
+    Phase 1: per-block partial top-q (q = min(k, W)) over C contiguous
+    blocks of width W = TN/C — the only pass over the (TB, TN) data.
+    Phase 2: rerank the (TB, C*q) candidates.  Exact: any global top-k
+    element ranks above < k items globally, hence above < k items within
+    its own block (same value-then-lowest-index order), hence appears among
+    its block's top-q.  Candidate order (block-major, rank-minor) preserves
+    ascending-column order among equal values, so ties break identically to
+    ``lax.top_k`` over the full tile.
+    """
+    tb, tn = scores.shape
+    w = tn // blocks
+    q = min(k, w)
+    cube = scores.reshape(tb, blocks, w)
+    bv, bw = jax.lax.top_k(cube, q)                   # (TB, C, q)
+    base = (jnp.arange(blocks, dtype=jnp.int32) * w)[None, :, None]
+    cand_v = bv.reshape(tb, blocks * q)
+    cand_i = (bw.astype(jnp.int32) + base).reshape(tb, blocks * q)
+    v, sel = jax.lax.top_k(cand_v, k)
+    return v, jnp.take_along_axis(cand_i, sel, axis=1)
+
+
+def pq_topk_fused_kernel(idx_ref, codes_ref, s_ref, out_v_ref, out_i_ref, *,
+                         k: int, tile: int, n_items: int, blocks: int):
+    tile_id = idx_ref[pl.program_id(0)]
+    scores = _tile_scores(codes_ref, s_ref)           # (TB, TN)
+    tb, tn = scores.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (tb, tn), 1)
+    # Mask padding beyond the true catalogue size; sentinel tiles (the
+    # pruned route's slot padding) land entirely here.
+    global_col = col + tile_id * tile
     scores = jnp.where(global_col < n_items, scores, NEG_INF)
-    # Iterative max-extract: K passes over the VMEM-resident tile.
-    vals = jnp.full((bq, k), NEG_INF, jnp.float32)
-    idxs = jnp.zeros((bq, k), jnp.int32)
-    for j in range(k):                                # k static -> unrolled
-        v = scores.max(axis=1)                        # (B,)
-        a = scores.argmax(axis=1).astype(jnp.int32)   # (B,)
-        vals = vals.at[:, j].set(v)
-        idxs = idxs.at[:, j].set(a + i * tile)
-        scores = jnp.where(col == a[:, None], NEG_INF, scores)
+    vals, cols = _tile_topk(scores, k, blocks)
     out_v_ref[...] = vals[:, None, :]
-    out_i_ref[...] = idxs[:, None, :]
+    out_i_ref[...] = (cols + tile_id * tile)[:, None, :]
 
 
 def pq_scores_call(codes: jax.Array, s: jax.Array, *, tile: int = DEFAULT_TILE,
@@ -108,29 +167,45 @@ def pq_scores_call(codes: jax.Array, s: jax.Array, *, tile: int = DEFAULT_TILE,
 
 
 def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
-                       n_items: int, tile: int = DEFAULT_TILE,
+                       tile_idx: jax.Array, n_items: int,
+                       tile: int = DEFAULT_TILE,
+                       batch_tile: int = DEFAULT_BATCH_TILE,
+                       oversample: int = DEFAULT_OVERSAMPLE,
                        interpret: bool = False):
-    """-> (vals (B, T, K), ids (B, T, K)) per-tile winners; merge outside."""
+    """-> (vals (B, n_slots, K), ids (B, n_slots, K)) per-slot winners with
+    *global* item ids; merge outside.
+
+    ``tile_idx`` (n_slots,) int32 selects which codes tile each grid slot
+    scores (identity for the exhaustive route, a compacted survivor list for
+    the pruned route).  ``codes`` rows must cover every indexed tile;
+    ``s``'s batch must divide by ``batch_tile``.
+    """
     n, m = codes.shape
     bq, m2, b = s.shape
     assert m == m2 and n % tile == 0
-    n_tiles = n // tile
+    assert bq % batch_tile == 0, (bq, batch_tile)
+    n_slots = tile_idx.shape[0]
+    blocks = pick_blocks(tile, k, oversample)
     kern = functools.partial(pq_topk_fused_kernel, k=k, tile=tile,
-                             n_items=n_items)
-    return pl.pallas_call(
-        kern,
-        grid=(n_tiles,),
+                             n_items=n_items, blocks=blocks)
+    grid_spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(n_slots, bq // batch_tile),
         in_specs=[
-            pl.BlockSpec((tile, m), lambda i: (i, 0)),
-            pl.BlockSpec((bq, m, b), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tile, m), lambda i, j, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((batch_tile, m, b), lambda i, j, idx_ref: (j, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bq, 1, k), lambda i: (0, i, 0)),
-            pl.BlockSpec((bq, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((batch_tile, 1, k), lambda i, j, idx_ref: (j, i, 0)),
+            pl.BlockSpec((batch_tile, 1, k), lambda i, j, idx_ref: (j, i, 0)),
         ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((bq, n_tiles, k), jnp.float32),
-            jax.ShapeDtypeStruct((bq, n_tiles, k), jnp.int32),
+            jax.ShapeDtypeStruct((bq, n_slots, k), jnp.float32),
+            jax.ShapeDtypeStruct((bq, n_slots, k), jnp.int32),
         ],
         interpret=interpret,
-    )(codes, s)
+    )(tile_idx.astype(jnp.int32), codes, s)

@@ -1,7 +1,16 @@
 """Jitted public wrappers around the pqtopk Pallas kernels.
 
-Handles padding to the tile size, interpret-mode selection (CPU containers
-run the kernel body in Python), and the final cross-tile top-k merge.
+Handles padding (item tiles, batch tiles, the pruned route's sentinel
+tile), interpret-mode selection (CPU containers run the kernel body in
+Python), and the final cross-tile top-k merge.
+
+``pq_topk_tiles`` is the pass-2 entry of the cascaded pruned route: it
+scores only the tiles named by a compacted ``tile_idx`` list.  On TPU it
+runs the scalar-prefetch Pallas kernel; off TPU it lowers to an XLA
+gather + ``pq_scores`` + ``tiled_topk`` pipeline with identical numerics
+(shared ``tree_sum`` accumulation order, same value-then-lowest-id tie
+break), so CPU hosts get real compute savings instead of timing the
+Pallas interpreter.
 """
 from __future__ import annotations
 
@@ -11,15 +20,51 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.kernels.pqtopk import kernel as _k
+from repro.core import topk as topk_lib
+from repro.kernels.pqtopk import kernel as _k, ref as _ref
+
+NEG_INF = jnp.float32(-jnp.inf)
 
 
-def _pad_codes(codes: jax.Array, tile: int) -> jax.Array:
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def n_tiles(n: int, tile: int) -> int:
+    """Number of item tiles covering an N-item catalogue."""
+    return -(-n // tile)
+
+
+def sentinel_tile(n: int, tile: int) -> int:
+    """Tile index used to pad a compacted survivor list: one all-padding
+    tile appended past the catalogue, whose every global id is >= n and is
+    therefore masked to -inf inside the kernel."""
+    return n_tiles(n, tile)
+
+
+def _pad_codes(codes: jax.Array, tile: int, *, sentinel: bool = False
+               ) -> jax.Array:
     n = codes.shape[0]
-    pad = (-n) % tile
+    pad = (-n) % tile + (tile if sentinel else 0)
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))
     return codes
+
+
+def _pad_batch(s: jax.Array, batch_tile: int) -> jax.Array:
+    pad = (-s.shape[0]) % batch_tile
+    if pad:
+        s = jnp.pad(s, ((0, pad), (0, 0), (0, 0)))
+    return s
+
+
+def _merge_slot_winners(tv: jax.Array, ti: jax.Array, k: int):
+    """(B, n_slots, K) per-slot winners -> global (B, k).  Slots are in
+    ascending tile order, so the stable ``lax.top_k`` over the flattened
+    candidates breaks ties by lowest global id, matching the oracle."""
+    bq, slots, kk = tv.shape
+    fv, fi = jax.lax.top_k(tv.reshape(bq, slots * kk), k)
+    return fv, jnp.take_along_axis(ti.reshape(bq, slots * kk), fi, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
@@ -35,26 +80,83 @@ def pq_scores(codes: jax.Array, s: jax.Array, *, tile: int = _k.DEFAULT_TILE,
     return out[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "tile", "batch_tile",
+                                             "interpret"))
 def pq_topk(codes: jax.Array, s: jax.Array, k: int, *,
-            tile: int = _k.DEFAULT_TILE, interpret: bool | None = None):
-    """Fused PQ scoring + hierarchical top-k.  Exact (tile-local winners
-    contain all global winners when k <= tile). -> (vals (B,k), ids (B,k))."""
+            tile: int = _k.DEFAULT_TILE,
+            batch_tile: int = _k.DEFAULT_BATCH_TILE,
+            interpret: bool | None = None):
+    """Fused PQ scoring + hierarchical top-k over the whole catalogue.
+    Exact (tile-local winners contain all global winners when k <= tile).
+    Batch-tiled: any B; the grid covers ceil(B/batch_tile) batch tiles.
+    -> (vals (B,k), ids (B,k))."""
     if interpret is None:
         interpret = not compat.on_tpu()
     n = codes.shape[0]
+    bq = s.shape[0]
     tile = min(tile, _round_up(n, 128))
     if k > tile:
         raise ValueError(f"k={k} > tile={tile}")
     padded = _pad_codes(codes, tile)
-    tv, ti = _k.pq_topk_fused_call(padded, s, k, n_items=n, tile=tile,
-                                   interpret=interpret)
-    bq, n_tiles, _ = tv.shape
-    cand_v = tv.reshape(bq, n_tiles * k)
-    cand_i = ti.reshape(bq, n_tiles * k)
-    fv, fi = jax.lax.top_k(cand_v, k)
-    return fv, jnp.take_along_axis(cand_i, fi, axis=1)
+    idx = jnp.arange(padded.shape[0] // tile, dtype=jnp.int32)
+    bt = min(batch_tile, _round_up(bq, 8))
+    tv, ti = _k.pq_topk_fused_call(padded, _pad_batch(s, bt), k,
+                                   tile_idx=idx, n_items=n, tile=tile,
+                                   batch_tile=bt, interpret=interpret)
+    return _merge_slot_winners(tv[:bq], ti[:bq], k)
 
 
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
+                   tile_idx: jax.Array, *, tile: int, batch_tile: int,
+                   use_kernel: bool, interpret: bool):
+    """Non-jitted core of :func:`pq_topk_tiles` (shard_map bodies call this
+    directly so the jit boundary stays at the outer dispatch)."""
+    n, m = codes.shape
+    bq = s.shape[0]
+    tile = min(tile, _round_up(n, 128))
+    if k > tile:
+        raise ValueError(f"k={k} > tile={tile}")
+    padded = _pad_codes(codes, tile, sentinel=True)
+    if use_kernel:
+        bt = min(batch_tile, _round_up(bq, 8))
+        tv, ti = _k.pq_topk_fused_call(padded, _pad_batch(s, bt), k,
+                                       tile_idx=tile_idx, n_items=n,
+                                       tile=tile, batch_tile=bt,
+                                       interpret=interpret)
+        return _merge_slot_winners(tv[:bq], ti[:bq], k)
+    # XLA path: gather the surviving tiles' codes, score them with the
+    # shared-accumulation-order oracle, top-k over the compacted axis and
+    # map positions back to global ids.  tile_idx is ascending (plus
+    # trailing sentinels), so position order == global id order and ties
+    # resolve identically to the exhaustive oracle.
+    n_slots = tile_idx.shape[0]
+    sel = padded.reshape(-1, tile, m)[tile_idx]             # (L, tile, m)
+    scores = _ref.pq_scores(sel.reshape(n_slots * tile, m), s)
+    gid = (tile_idx[:, None] * tile
+           + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
+    scores = jnp.where(gid[None, :] < n, scores, NEG_INF)
+    fv, pos = topk_lib.tiled_topk(scores, k)
+    return fv, jnp.take(gid, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "batch_tile",
+                                             "use_kernel", "interpret"))
+def pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
+                  tile_idx: jax.Array, *, tile: int = _k.DEFAULT_TILE,
+                  batch_tile: int = _k.DEFAULT_BATCH_TILE,
+                  use_kernel: bool | None = None,
+                  interpret: bool | None = None):
+    """Fused scoring + top-k over a compacted tile list (cascade pass 2).
+
+    codes (N, m) raw catalogue codes; tile_idx (n_slots,) int32 ascending
+    tile indices, padded with ``sentinel_tile(N, tile)`` entries.  Work is
+    O(n_slots * tile * m) instead of O(N * m).  -> (vals (B,k), ids (B,k)),
+    bit-identical to the exhaustive routes for surviving items.
+    """
+    if use_kernel is None:
+        use_kernel = compat.on_tpu()
+    if interpret is None:
+        interpret = not compat.on_tpu()
+    return _pq_topk_tiles(codes, s, k, tile_idx.astype(jnp.int32),
+                          tile=tile, batch_tile=batch_tile,
+                          use_kernel=use_kernel, interpret=interpret)

@@ -22,9 +22,12 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--method", default=None,
                     choices=["dense", "recjpq", "pqtopk", "pqtopk_onehot",
-                             "pqtopk_kernel", "pqtopk_fused"],
+                             "pqtopk_kernel", "pqtopk_fused",
+                             "pqtopk_pruned", "pqtopk_approx"],
                     help="scoring route; default: the arch config's "
-                         "serve_method")
+                         "serve_method.  pqtopk_pruned = the two-pass "
+                         "cascade (upper-bound tile skipping); "
+                         "pqtopk_approx = block-max approximate top-k")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=64)
     args = ap.parse_args(argv)

@@ -173,9 +173,14 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
                                caches_abs)
     tok_abs = S((bsz,), jnp.int32)
     pos_abs = S((), jnp.int32)
+    # No "pruned_head" here: inside a decode loop the in-graph pruned
+    # fallback rebuilds tile metadata every step and skips nothing — a pure
+    # pessimization of the hot path (the real cascade needs the serving
+    # engine's host orchestration).
     head = {"pqtopk_head": "pqtopk", "dense_head": "dense",
             "onehot_head": "pqtopk_onehot",
-            "fused_head": "pqtopk_fused"}.get(variant, "pqtopk")
+            "fused_head": "pqtopk_fused",
+            "approx_head": "pqtopk_approx"}.get(variant, "pqtopk")
 
     def decode(p, tok, pos, caches):
         return T.lm_decode_step(p, tok, pos, caches, cfg, k=64,
@@ -232,6 +237,11 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     method = {"dense_head": "dense", "recjpq_head": "recjpq",
               "onehot_head": "pqtopk_onehot",
               "fused_head": "pqtopk_fused",
+              # In-graph pruned variant (masked, not compacted): the bound
+              # cascade traces into one jittable step; the real two-pass
+              # compaction lives in the serving engine, outside jit.
+              "pruned_head": "pqtopk_pruned",
+              "approx_head": "pqtopk_approx",
               "sharded_head": "pqtopk",
               "sharded_head_bm": "pqtopk",
               "sharded_onehot": "pqtopk_onehot",

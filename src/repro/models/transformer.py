@@ -250,9 +250,10 @@ def lm_decode_step(params: Params, token: jax.Array, pos: jax.Array,
         scores = jnp.einsum("bd,vd->bv", phi, w.astype(jnp.float32))
         scores = constrain(scores, "scores")
         vals, ids = jax.lax.top_k(scores, k)
-    elif head_method == "pqtopk_fused":
-        # Fused kernel: the (B, vocab) score matrix never materialises, so
-        # there is no "scores" activation to constrain.
+    elif head_method in ("pqtopk_fused", "pqtopk_pruned", "pqtopk_approx"):
+        # Fused kernel / in-graph pruned cascade / block-max approx: the
+        # (B, vocab) score matrix is not the route's public activation, so
+        # there is no "scores" constraint to apply.
         vals, ids = retrieval_head.top_items(params["pq_head"], phi, k,
                                              method=head_method)
     else:

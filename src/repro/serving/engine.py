@@ -75,14 +75,18 @@ class RetrievalEngine:
 
     def __init__(self, serve_fn: Callable[[jax.Array, int], Tuple[jax.Array, jax.Array]],
                  *, seq_len: int, k: int = 10, max_batch: int = 64,
-                 method: Optional[str] = None):
+                 method: Optional[str] = None, jit_serve: bool = True):
         """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores).
 
         ``method`` is informational here (the scoring route is baked into
         ``serve_fn``); use :meth:`for_seqrec` to have the engine build the
-        serve function for a named route itself.
+        serve function for a named route itself.  ``jit_serve=False`` is
+        for host-orchestrated routes (the cascaded ``pqtopk_pruned``
+        retrieval has a device->host sync between its two passes, so the
+        serve function manages its own jit boundaries).
         """
-        self._fn = jax.jit(serve_fn, static_argnums=(1,))
+        self._fn = (jax.jit(serve_fn, static_argnums=(1,)) if jit_serve
+                    else serve_fn)
         self.seq_len = seq_len
         self.k = k
         self.method = method
@@ -97,9 +101,29 @@ class RetrievalEngine:
         """Stand up an engine on a seqrec model with an explicit scoring
         route.  ``method=None`` falls back to ``cfg.serve_method`` — the
         production configs default to ``"pqtopk_fused"`` (the Pallas fused
-        score+top-k kernel)."""
+        score+top-k kernel).  ``method="pqtopk_pruned"`` runs the real
+        two-pass cascade: backbone + bound pass jitted, survivor compaction
+        on host, compacted scoring pass jitted per slot bucket."""
+        from repro.core import retrieval_head
         from repro.models import seqrec as seqrec_lib
         method = method or getattr(cfg, "serve_method", "pqtopk")
+
+        if method in retrieval_head.HOST_CASCADE_METHODS:
+            phi_fn = jax.jit(
+                lambda seqs: seqrec_lib.sequence_embedding(params, seqs, cfg))
+
+            def serve_fn(seqs, kk):
+                phi = phi_fn(seqs)
+                if sharded_mesh is not None:
+                    vals, ids = retrieval_head.top_items_pruned_sharded(
+                        params["item_emb"], phi, kk, sharded_mesh)
+                else:
+                    vals, ids = retrieval_head.top_items_pruned(
+                        params["item_emb"], phi, kk)
+                return ids, vals
+
+            return cls(serve_fn, seq_len=cfg.max_seq_len, k=k,
+                       max_batch=max_batch, method=method, jit_serve=False)
 
         def serve_fn(seqs, kk):
             return seqrec_lib.serve_topk(params, seqs, cfg, k=kk,
@@ -121,7 +145,12 @@ class RetrievalEngine:
         for i, r in enumerate(reqs):
             s = np.asarray(r.payload)[-self.seq_len:]
             seqs[i, -len(s):] = s
-        ids, scores = self._fn(jnp.asarray(seqs), self.k)
+        # Requests in one batch may disagree on k: score once at the batch
+        # max (a jit recompile per distinct max, like the padding buckets)
+        # and slice each request's prefix — top-k prefixes nest, so every
+        # request sees exactly its own top-k.
+        kk = max(max(r.k for r in reqs), self.k)
+        ids, scores = self._fn(jnp.asarray(seqs), kk)
         ids, scores = np.asarray(ids), np.asarray(scores)
         now = time.monotonic()
         out = []
