@@ -12,8 +12,6 @@ kernel path and the item-sharded distributed path.
 """
 from __future__ import annotations
 
-import functools
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -76,6 +76,14 @@ def parse_collectives(hlo_text: str) -> dict:
     return out
 
 
+def _normalize_cost(cost) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on recent JAX but a
+    one-element list of dicts on older versions; normalize to a dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 def _measure(bundle):
     """Lower+compile a bundle; return (flops, bytes, collective_bytes,
     collectives dict) per device."""
@@ -83,7 +91,7 @@ def _measure(bundle):
                      donate_argnums=bundle.donate)
     lowered = jitted.lower(*bundle.args)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _normalize_cost(compiled.cost_analysis())
     colls = parse_collectives(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -164,11 +172,11 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, variant: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _normalize_cost(compiled.cost_analysis())
         if verbose:
             print(f"--- {arch_id} / {shape_name} / {mesh_kind} / {variant}")
             print(mem)
-            print({k: v for k, v in (cost or {}).items()
+            print({k: v for k, v in cost.items()
                    if k in ("flops", "bytes accessed", "utilization operand")})
         hlo = compiled.as_text()
         colls = parse_collectives(hlo)
@@ -178,8 +186,8 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, variant: str,
                   "temp_size_in_bytes", "alias_size_in_bytes",
                   "generated_code_size_in_bytes"):
             mem_d[f] = getattr(mem, f, None)
-        flops = float((cost or {}).get("flops", 0.0))
-        bytes_acc = float((cost or {}).get("bytes accessed", 0.0))
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
         coll_bytes = sum(v["bytes"] for v in colls.values())
 
         result.update({
@@ -214,8 +222,11 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, variant: str,
                 f.write(hlo)
             result["hlo_path"] = hlo_path
     except Exception as e:  # noqa: BLE001 — record the failure in the artifact
+        repo_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
         result["error"] = f"{type(e).__name__}: {e}"
-        result["traceback"] = traceback.format_exc()[-4000:]
+        result["traceback"] = (traceback.format_exc()[-4000:]
+                               .replace(repo_root + os.sep, ""))
         if verbose:
             print(f"FAILED {arch_id}/{shape_name}/{mesh_kind}: {result['error']}")
     os.makedirs(out_dir, exist_ok=True)

@@ -74,8 +74,9 @@ class RetrievalEngine:
     """Paper-mode serving: top-K item retrieval for user sequences."""
 
     def __init__(self, serve_fn: Callable[[jax.Array, int], Tuple[jax.Array, jax.Array]],
-                 *, seq_len: int, k: int = 10, max_batch: int = 64,
-                 method: Optional[str] = None, jit_serve: bool = True):
+                 *, seq_len: int, k: int = 10, max_k: Optional[int] = None,
+                 max_batch: int = 64, method: Optional[str] = None,
+                 jit_serve: bool = True):
         """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores).
 
         ``method`` is informational here (the scoring route is baked into
@@ -84,11 +85,21 @@ class RetrievalEngine:
         for host-orchestrated routes (the cascaded ``pqtopk_pruned``
         retrieval has a device->host sync between its two passes, so the
         serve function manages its own jit boundaries).
+
+        ``max_k`` caps client-supplied ``Request.k`` — oversized k must not
+        reach ``serve_fn`` (the fused kernel rejects k > tile, and any
+        route fails at k > N), where it would abort every request in the
+        batch.  Callers raising it above ``k`` are asserting that
+        ``serve_fn`` can serve up to ``max_k`` winners (i.e. max_k <=
+        min(N, kernel tile) for the baked-in route — :meth:`for_seqrec`
+        derives this bound itself); the default is ``k``, which is always
+        safe because ``serve_fn`` must support the engine's own k.
         """
         self._fn = (jax.jit(serve_fn, static_argnums=(1,)) if jit_serve
                     else serve_fn)
         self.seq_len = seq_len
         self.k = k
+        self.max_k = k if max_k is None else max(max_k, k)
         self.method = method
         self.batcher = MicroBatcher(max_batch=max_batch)
         self.latencies_ms: List[float] = []
@@ -105,8 +116,15 @@ class RetrievalEngine:
         two-pass cascade: backbone + bound pass jitted, survivor compaction
         on host, compacted scoring pass jitted per slot bucket."""
         from repro.core import retrieval_head
+        from repro.kernels.pqtopk import kernel as pqtopk_kernel
         from repro.models import seqrec as seqrec_lib
         method = method or getattr(cfg, "serve_method", "pqtopk")
+        # Largest k any route built here can serve: bounded by the
+        # catalogue, and for the fused-kernel-backed routes also by the
+        # kernel's item tile (pq_topk / pq_topk_tiles reject k > tile).
+        max_k = cfg.n_items
+        if method in ("pqtopk_fused", "pqtopk_pruned"):
+            max_k = min(max_k, pqtopk_kernel.DEFAULT_TILE)
 
         if method in retrieval_head.HOST_CASCADE_METHODS:
             phi_fn = jax.jit(
@@ -122,7 +140,7 @@ class RetrievalEngine:
                         params["item_emb"], phi, kk)
                 return ids, vals
 
-            return cls(serve_fn, seq_len=cfg.max_seq_len, k=k,
+            return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
                        max_batch=max_batch, method=method, jit_serve=False)
 
         def serve_fn(seqs, kk):
@@ -130,7 +148,7 @@ class RetrievalEngine:
                                          method=method,
                                          sharded_mesh=sharded_mesh)
 
-        return cls(serve_fn, seq_len=cfg.max_seq_len, k=k,
+        return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
                    max_batch=max_batch, method=method)
 
     def submit(self, req: Request):
@@ -146,10 +164,14 @@ class RetrievalEngine:
             s = np.asarray(r.payload)[-self.seq_len:]
             seqs[i, -len(s):] = s
         # Requests in one batch may disagree on k: score once at the batch
-        # max (a jit recompile per distinct max, like the padding buckets)
-        # and slice each request's prefix — top-k prefixes nest, so every
-        # request sees exactly its own top-k.
-        kk = max(max(r.k for r in reqs), self.k)
+        # max and slice each request's prefix — top-k prefixes nest, so
+        # every request sees exactly its own top-k.  Client k is clamped
+        # into [1, max_k] (an unvalidated oversized k would abort the whole
+        # batch inside serve_fn) and the batch k is bucketed to a power of
+        # two so distinct client values cannot drive unbounded jit
+        # recompiles — same policy as the batch-size padding buckets.
+        kk = max(max(min(r.k, self.max_k) for r in reqs), self.k, 1)
+        kk = MicroBatcher.bucket(kk, self.max_k)
         ids, scores = self._fn(jnp.asarray(seqs), kk)
         ids, scores = np.asarray(ids), np.asarray(scores)
         now = time.monotonic()
@@ -159,7 +181,8 @@ class RetrievalEngine:
             timed_out = lat > r.deadline_ms
             self.timeouts += int(timed_out)
             self.latencies_ms.append(lat)
-            out.append(Result(r.request_id, ids[i, :r.k], scores[i, :r.k],
+            rk = max(1, min(r.k, kk))
+            out.append(Result(r.request_id, ids[i, :rk], scores[i, :rk],
                               lat, timed_out))
         return out
 

@@ -338,6 +338,42 @@ def test_engine_mixed_k_batch():
         np.testing.assert_array_equal(res[i].scores, ref[i].scores[:kk])
 
 
+def test_engine_clamps_and_buckets_client_k():
+    """Client-supplied Request.k is untrusted: oversized k must be clamped
+    to max_k (not forwarded to serve_fn, where it would abort the whole
+    batch), k<1 must not produce empty/negative slices, and distinct
+    in-range values must collapse onto power-of-two buckets so adversarial
+    or merely diverse traffic cannot drive unbounded jit recompiles."""
+    calls = []
+
+    def serve_fn(seqs, kk):
+        calls.append(kk)
+        ids = jnp.tile(jnp.arange(kk, dtype=jnp.int32)[None],
+                       (seqs.shape[0], 1))
+        return ids, jnp.zeros((seqs.shape[0], kk), jnp.float32)
+
+    eng = RetrievalEngine(serve_fn, seq_len=4, k=2, max_k=16,
+                          jit_serve=False)
+    eng.submit(Request(0, np.asarray([1]), k=5000))
+    eng.submit(Request(1, np.asarray([1]), k=0))
+    res = {r.request_id: r for r in eng.run_once()}
+    assert calls == [16]                    # clamped, batch not aborted
+    assert res[0].items.shape == (16,)      # oversized k -> max_k winners
+    assert res[1].items.shape == (1,)       # degenerate k -> 1 winner
+    for i, kk in enumerate((5, 6, 7, 8)):   # one batch per distinct k
+        eng.submit(Request(10 + i, np.asarray([1]), k=kk))
+        eng.run_once()
+    assert calls[1:] == [8, 8, 8, 8]        # one bucket, one compile
+    # Without an explicit max_k the cap defaults to the engine's own k —
+    # the only k a bare serve_fn is guaranteed to support (e.g. small
+    # catalogues where 1024 winners don't exist).
+    calls.clear()
+    eng2 = RetrievalEngine(serve_fn, seq_len=4, k=3, jit_serve=False)
+    eng2.submit(Request(0, np.asarray([1]), k=999))
+    res2 = eng2.run_once()
+    assert calls == [3] and res2[0].items.shape == (3,)
+
+
 def test_engine_pruned_route_matches_pqtopk():
     rng = np.random.default_rng(1)
     seqs = [rng.integers(1, 1000, 8) for _ in range(4)]
