@@ -37,9 +37,12 @@ def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
                          "pqtopk_pruned")):
     """One (n_items, m) cell.  Returns {method: timing-dict-or-None};
     the pruned route's timing dict additionally carries
-    ``survival_fraction`` (figure2 uses uniform random codes, so every tile
-    tends to contain every sub-id and the bound prunes little — the
-    kernel-section skewed sweep shows the favourable regime)."""
+    ``survival_fraction``/``n_seed_used`` (figure2 uses uniform random
+    codes, so every tile tends to contain every sub-id and the bound prunes
+    little — the kernel-section skewed sweep shows the favourable regime).
+    Rows measured through the Pallas *interpreter* (the fused kernel on a
+    non-TPU host) carry ``"interpret": True`` — they time the emulator, not
+    the kernel, and must be excluded from items/s trend comparisons."""
     rng = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
     phi = jax.random.normal(key, (1, D_MODEL), jnp.float32)
@@ -60,15 +63,21 @@ def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
             if not compat.on_tpu() and n_items > FUSED_INTERPRET_CAP:
                 out[method] = None    # interpret-mode guard (see cap above)
                 continue
-            out[method] = time_fn(lambda: pq_ops.pq_topk(codes, s, K),
-                                  repeats=repeats)
-        elif method == "pqtopk_pruned":
-            _, _, stats = pruning.cascade_topk(codes, s, K, tile=PRUNE_TILE,
-                                               return_stats=True)
-            t = time_fn(lambda: pruning.cascade_topk(codes, s, K,
-                                                     tile=PRUNE_TILE),
+            t = time_fn(lambda: pq_ops.pq_topk(codes, s, K),
                         repeats=repeats)
-            t["survival_fraction"] = stats["survival_fraction"]
+            t["interpret"] = not compat.on_tpu()
+            out[method] = t
+        elif method == "pqtopk_pruned":
+            # Single-dispatch in-graph cascade; metadata built once here
+            # (in serving it rides in the param tree).
+            state = pruning.build_pruned_state(codes, b, PRUNE_TILE)
+            fn = jax.jit(lambda c_, s_: pruning.cascade_topk_ingraph(
+                c_, s_, K, state))
+            _, _, stats = pruning.cascade_topk_ingraph(codes, s, K, state,
+                                                       return_stats=True)
+            t = time_fn(lambda: fn(codes, s), repeats=repeats)
+            t["survival_fraction"] = float(stats["survival_fraction"])
+            t["n_seed_used"] = int(stats["n_seed_used"])
             out[method] = t
         else:
             alg = {"recjpq": scoring.score_recjpq,
@@ -88,13 +97,15 @@ def run(full: bool = False, repeats: int = 5):
         for n in sizes:
             res = bench_point(n, m, repeats=repeats)
             for method, t in res.items():
-                rows.append({
+                row = {
                     "n_items": n, "m": m, "method": method,
                     "scoring_ms": None if t is None
                     else t["median_s"] * 1e3,
-                    **({"survival_fraction": t["survival_fraction"]}
-                       if t and "survival_fraction" in t else {}),
-                })
+                }
+                for tag in ("survival_fraction", "n_seed_used", "interpret"):
+                    if t and tag in t:
+                        row[tag] = t[tag]
+                rows.append(row)
     return rows
 
 

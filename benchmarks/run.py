@@ -7,10 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 pruned-vs-exhaustive retrieval sweep on skewed data
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr2.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr3.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
-fraction for the pruned route, interpret-mode markers, ...).
+fraction + seed size for the pruned route, interpret-mode markers, ...).
+Rows measured through the Pallas interpreter (``"interpret": true``) time
+the emulator, not the kernel — their ``items_per_s`` is null so they can
+never enter throughput trend comparisons (see README §Benchmarks).
 
 Full-scale sweeps (10^7+ items) are behind ``--full`` (CI keeps <= 10^6).
 """
@@ -27,7 +30,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr2.json",
+    ap.add_argument("--json", default="BENCH_pr3.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -73,9 +76,21 @@ def main(argv=None) -> None:
             if "survival_fraction" in r:
                 tags["survival_fraction"] = r["survival_fraction"]
                 derived = f"survival={r['survival_fraction']:.3f}"
+            if "n_seed_used" in r:
+                tags["n_seed_used"] = r["n_seed_used"]
+            # Interpret-mode rows time the Pallas emulator, not the kernel
+            # (the PR 2 figure2/m8/n10000/pqtopk_fused "anomaly" — 108 ms vs
+            # 0.57 ms plain pqtopk, a 200x artefact of interpretation):
+            # tag them and null items/s so trend tooling can never compare
+            # them against compiled rows.
+            interp = bool(r.get("interpret", False))
+            if interp:
+                tags["interpret"] = True
+                derived = (derived + ";" if derived else "") + "interpret-mode"
             _emit("figure2", f"figure2/m{r['m']}/n{r['n_items']}/{r['method']}",
                   us, derived, method=r["method"],
-                  items_per_s=(None if us is None else r["n_items"] / us * 1e6),
+                  items_per_s=(None if us is None or interp
+                               else r["n_items"] / us * 1e6),
                   tags=tags)
 
     if "kernel" not in args.skip:
@@ -112,19 +127,24 @@ def main(argv=None) -> None:
         t = time_fn(lambda: pq_ops.pq_topk(codes, s, k),
                     repeats=args.repeats)
         # Off TPU the fused kernel runs in interpret mode — the number times
-        # the emulator, not the kernel; tag it so it can't be read as perf.
+        # the emulator, not the kernel; tag it and null items/s so it can't
+        # enter throughput comparisons (README §Benchmarks).
         interp = not compat.on_tpu()
         tag = ";interpret-mode" if interp else ""
         _emit("kernel", "kernel/pq_retrieval_262k/pqtopk_fused",
               t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}{tag}",
-              method="pqtopk_fused", items_per_s=n / t["median_s"],
-              tags={"n_items": n, "interpret_mode": interp})
-        # Cascaded pruned retrieval on skewed-score synthetic data
+              method="pqtopk_fused",
+              items_per_s=None if interp else n / t["median_s"],
+              tags={"n_items": n, "interpret": interp})
+        # Pruned-vs-exhaustive retrieval on skewed-score synthetic data
         # (N = 2^20): codes clustered by catalogue position (as after a
         # popularity-ordered RecJPQ assignment) + heavy-tailed sub-id
-        # scores, the regime arXiv:2505.00560 targets.  Exhaustive XLA
-        # route vs the two-pass cascade; derived reports the fraction of
-        # tiles that survived the bound.
+        # scores, the regime arXiv:2505.00560 targets.  Three exact
+        # competitors: the exhaustive XLA route, the exhaustive fused route
+        # (Pallas on TPU / its XLA lowering off TPU — compiled either way,
+        # never the interpreter), and the single-dispatch in-graph cascade.
+        # The PR 2 host two-pass cascade is kept as a fourth row so the
+        # dispatch-fusion win is visible in the same file.
         n_sk, tile_sk = 1 << 20, 1024
         centers = (np.arange(n_sk) / n_sk * b).astype(np.int64)
         codes_sk = jnp.asarray(
@@ -139,21 +159,56 @@ def main(argv=None) -> None:
               t["median_s"] * 1e6, f"items_per_s={n_sk / t['median_s']:.3e}",
               method="pqtopk", items_per_s=n_sk / t["median_s"],
               tags={"n_items": n_sk, "skewed": True})
-        _, _, stats = pruning.cascade_topk(codes_sk, s_sk, k, tile=tile_sk,
-                                           return_stats=True)
-        t = time_fn(lambda: pruning.cascade_topk(codes_sk, s_sk, k,
-                                                 tile=tile_sk),
-                    repeats=args.repeats)
+        # Exhaustive fused: identity tile list through pq_topk_tiles — the
+        # same compacted-scoring entry the cascade uses, with zero pruning.
+        ident = jnp.arange(pq_ops.n_tiles(n_sk, tile_sk), dtype=jnp.int32)
+        fn_fx = jax.jit(lambda c_, s_: pq_ops.pq_topk_tiles(
+            c_, s_, k, ident, tile=tile_sk))
+        t = time_fn(lambda: fn_fx(codes_sk, s_sk), repeats=args.repeats)
+        _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk_fused",
+              t["median_s"] * 1e6, f"items_per_s={n_sk / t['median_s']:.3e}",
+              method="pqtopk_fused", items_per_s=n_sk / t["median_s"],
+              tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
+                    "lowering": "pallas" if compat.on_tpu() else "xla"})
+        # Single-dispatch in-graph cascade (adaptive theta seeding, slot
+        # budget sized ~16x the expected survivor count; the in-graph
+        # lax.cond falls back to the exhaustive buffer on overflow so the
+        # route stays exact at any skew).
+        state = pruning.build_pruned_state(codes_sk, b, tile_sk)
+        budget = 64
+        fn_pr = jax.jit(lambda c_, s_: pruning.cascade_topk_ingraph(
+            c_, s_, k, state, seed_policy="adaptive", slot_budget=budget))
+        _, _, stats = pruning.cascade_topk_ingraph(
+            codes_sk, s_sk, k, state, seed_policy="adaptive",
+            slot_budget=budget, return_stats=True)
+        stats = {kk: vv.item() if hasattr(vv, "item") else vv
+                 for kk, vv in stats.items()}
+        t = time_fn(lambda: fn_pr(codes_sk, s_sk), repeats=args.repeats)
         _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk_pruned",
               t["median_s"] * 1e6,
               f"items_per_s={n_sk / t['median_s']:.3e};"
               f"survival={stats['survival_fraction']:.4f};"
-              f"tiles={stats['n_survived']}/{stats['n_tiles']}",
+              f"tiles={stats['n_survived']}/{stats['n_tiles']};"
+              f"seed={stats['n_seed_used']}",
               method="pqtopk_pruned", items_per_s=n_sk / t["median_s"],
               tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
                     "survival_fraction": stats["survival_fraction"],
                     "n_survived": stats["n_survived"],
-                    "n_tiles": stats["n_tiles"]})
+                    "n_tiles": stats["n_tiles"],
+                    "n_seed_used": stats["n_seed_used"],
+                    "seed_policy": "adaptive", "slot_budget": budget,
+                    "dispatches_per_query": 1,
+                    "meta_bytes_packed": state.nbytes,
+                    "meta_bytes_bool_pr2": state.bool_nbytes})
+        t = time_fn(lambda: pruning.cascade_topk(codes_sk, s_sk, k,
+                                                 tile=tile_sk),
+                    repeats=args.repeats)
+        _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk_pruned_host",
+              t["median_s"] * 1e6,
+              f"items_per_s={n_sk / t['median_s']:.3e};host-two-pass",
+              method="pqtopk_pruned_host", items_per_s=n_sk / t["median_s"],
+              tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
+                    "dispatches_per_query": 2})
 
     if "roofline" not in args.skip:
         import os
@@ -178,7 +233,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 2,
+            "pr": 3,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""CI guard: the pruned serve route is ONE device dispatch per query batch.
+
+Three independent checks on a reduced sasrec-recjpq engine with
+``method="pqtopk_pruned"``:
+
+1. **Traceability** — the whole serve function (backbone -> bounds -> theta
+   -> in-graph compaction -> compacted scoring) traces into a single jaxpr.
+   Any host orchestration (the PR 2 ``np.nonzero`` compaction) would blow
+   up here with a TracerArrayConversionError.
+2. **Dispatch counting** — wrap every memoised compiled serve variant in a
+   counter and serve a batch: exactly one entry must fire per ``run_once``.
+   The legacy cascade took 2+ dispatches (bound pass, then one compacted
+   pass per slot bucket) through a non-jitted serve fn.
+3. **Negative control** — the PR 2 host two-pass cascade must FAIL check 1
+   (its ``np.nonzero`` compaction cannot trace), proving the trace check
+   actually discriminates single-dispatch from host-orchestrated routes.
+   The serve step also runs under ``jax.transfer_guard("disallow")``,
+   which additionally catches implicit device->host syncs on accelerator
+   backends (on the CPU backend D2H is zero-copy and unguarded, so the
+   trace check is the load-bearing one there).
+
+Exits non-zero on any violation; ci.sh runs this before the bench smoke.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> int:
+    from repro.configs import get_reduced
+    from repro.models import seqrec as seqrec_lib
+    from repro.serving.engine import Request, RetrievalEngine
+
+    cfg = get_reduced("sasrec-recjpq").model
+    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg)
+    k = 5
+    eng = RetrievalEngine.for_seqrec(params, cfg, k=k, max_batch=8,
+                                     method="pqtopk_pruned")
+    assert eng._jit_serve, "pruned route must be a jitted serve fn"
+
+    # 1. single-jaxpr traceability
+    sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
+    jaxpr = jax.make_jaxpr(lambda seqs: eng._serve_fn(seqs, k))(sds)
+    n_eqns = len(jaxpr.jaxpr.eqns)
+    print(f"traceable: serve fn -> one jaxpr ({n_eqns} eqns)")
+
+    # 3. negative control: the legacy host cascade must NOT trace (its
+    # compaction is a device->host sync) — otherwise check 1 proves nothing.
+    from repro.core import retrieval_head
+
+    def host_cascade(seqs):
+        phi = seqrec_lib.sequence_embedding(params, seqs, cfg)
+        return retrieval_head.top_items_pruned(params["item_emb"], phi, k)
+
+    try:
+        jax.make_jaxpr(host_cascade)(sds)
+    except Exception as e:
+        print(f"negative control: host two-pass cascade fails tracing "
+              f"({type(e).__name__}) as expected")
+    else:
+        print("FAIL: host cascade traced — the check cannot discriminate")
+        return 1
+
+    # Warm the compile cache outside the guards.
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(i, rng.integers(1, cfg.n_items + 1, 8), k=k))
+    eng.drain()
+
+    # 2 + 3. count compiled-variant entries fired during one guarded batch
+    calls = []
+    for key, fn in list(eng._compiled.items()):
+        eng._compiled[key] = (
+            lambda seqs, _f=fn, _key=key: (calls.append(_key), _f(seqs))[1])
+    for i in range(4):
+        eng.submit(Request(10 + i, rng.integers(1, cfg.n_items + 1, 8), k=k))
+    with jax.transfer_guard("disallow"):
+        results = eng.run_once()
+    assert len(results) == 4, f"served {len(results)}/4"
+    assert len(calls) == 1, (
+        f"pruned route issued {len(calls)} dispatches per query batch "
+        f"(expected exactly 1): {calls}")
+    print(f"single dispatch: 1 compiled call per batch {calls[0]}, "
+          f"transfer guard clean, "
+          f"n_compiles={int(eng.stats()['n_compiles'])}")
+    print("OK: pqtopk_pruned serve path is a single in-graph dispatch")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,10 +15,16 @@ fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 
+# The pruned serve route must be ONE device dispatch per query batch
+# (single-jaxpr trace + compiled-call counting + a negative control on the
+# legacy host cascade) — the structural guarantee behind the PR 3 cascade.
+python scripts/check_single_dispatch.py
+
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
-# pruned cascade, figure2 sweep) end to end so kernel-path breakage
-# surfaces in CI, not just in unit tests.  table3/roofline stay out (slow
-# dataset builds / artifact-dependent); --json '' keeps the smoke from
-# overwriting the recorded BENCH_pr2.json perf artifact.
+# single-dispatch pruned cascade, figure2 sweep) end to end so kernel-path
+# breakage surfaces in CI, not just in unit tests, and refreshes the
+# machine-readable BENCH_pr3.json (pruned-vs-exhaustive sweep at N=2^20
+# with survival-fraction and seed-size tags).  table3/roofline stay out
+# (slow dataset builds / artifact-dependent).
 python -m benchmarks.run --skip table3 --skip roofline --repeats 1 \
-    --json '' > /dev/null
+    --json BENCH_pr3.json > /dev/null

@@ -39,6 +39,16 @@ class PQConfig:
     b: int = 256        # distinct sub-ids per split (codebook width)
     assign: str = "svd"  # codebook builder: svd | kmeans | random
     code_dtype: str = "int32"
+    # theta-seeding policy for the pruned cascade (docs/PRUNING.md):
+    # "greedy" scores exactly ``seed_tiles`` tiles; "adaptive" grows the
+    # seed set geometrically (seed_tiles -> seed_max_tiles) until the
+    # estimated survival fraction moves by <= seed_stab_tol between stages.
+    # The growth loop is trace-static (fixed trip count), so either policy
+    # stays inside the single-dispatch in-graph cascade.
+    seed_policy: str = "greedy"
+    seed_tiles: int = 2
+    seed_max_tiles: int = 16
+    seed_stab_tol: float = 0.05
 
     def __post_init__(self):
         if self.b > 2 ** 16:
@@ -51,6 +61,15 @@ class PQConfig:
             raise ValueError(
                 f"b={self.b} does not fit code_dtype={self.code_dtype!r} "
                 f"(max {cap}); use {min_code_dtype(self.b)!r}")
+        if self.seed_policy not in ("greedy", "adaptive"):
+            raise ValueError(f"unknown seed_policy {self.seed_policy!r}; "
+                             "one of ('greedy', 'adaptive')")
+        if not 1 <= self.seed_tiles <= self.seed_max_tiles:
+            raise ValueError(
+                f"need 1 <= seed_tiles ({self.seed_tiles}) <= "
+                f"seed_max_tiles ({self.seed_max_tiles})")
+        if self.seed_stab_tol <= 0:
+            raise ValueError("seed_stab_tol must be positive")
 
 
 # ---------------------------------------------------------------------------

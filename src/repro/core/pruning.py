@@ -13,11 +13,23 @@ t.  A retriever that knows a threshold theta with at least K items scoring
 top-K* — no skipped item can reach theta (see docs/PRUNING.md for the full
 argument, including ties).
 
-This module holds the query-independent half (per-tile code-presence
-metadata, built once per catalogue at head-build time) and the
-query-dependent half (bounds, theta seeding, survival mask), all pure jnp
-so they can run inside jit (pass 1 of the cascade) or under shard_map
-(per-shard bounds with a pmax-shared theta).
+Two generations of the cascade live here:
+
+* **Single-dispatch in-graph cascade** (PR 3, the serving path):
+  :class:`PrunedHeadState` holds the query-independent metadata as
+  ``uint32`` presence *bitmasks* (8x smaller than the PR 2 bool array),
+  built once at head-build time and threaded through the param tree.
+  :func:`cascade_topk_ingraph` computes bounds, seeds theta (greedy or
+  adaptive), compacts the surviving tile indices with an in-graph cumsum
+  scatter into a ``-1``-padded slot buffer, and hands that buffer to the
+  fused kernel's scalar-prefetched tile-index axis — one jitted dispatch,
+  no device->host sync, safe inside ``jit`` / ``lm_decode_step`` /
+  ``shard_map``.
+
+* **Host two-pass cascade** (PR 2, kept as the reference/comparison
+  implementation): :func:`cascade_topk` — jitted bound pass, host
+  compaction, jitted compacted scoring pass.  Exact and occasionally
+  useful interactively, but every call pays a device->host sync.
 """
 from __future__ import annotations
 
@@ -31,7 +43,19 @@ import jax.numpy as jnp
 
 from repro.core.scoring import tree_sum
 
-NEG_INF = jnp.float32(-jnp.inf)
+# Plain Python float (see kernels/pqtopk/ops.py: lazily imported modules
+# must not materialise jnp constants at import time).
+NEG_INF = float("-inf")
+
+#: Default pruning granularity (items per tile) — matches the fused
+#: kernel's item tile so one surviving tile is one kernel grid slot.
+DEFAULT_PRUNE_TILE = 2048
+#: theta-seeding defaults (see PQConfig for the per-model knobs).
+DEFAULT_SEED_TILES = 2
+DEFAULT_SEED_MAX_TILES = 16
+DEFAULT_SEED_STAB_TOL = 0.05
+
+_WORD = 32   # presence bits per packed uint32 word
 
 
 # ---------------------------------------------------------------------------
@@ -41,13 +65,12 @@ NEG_INF = jnp.float32(-jnp.inf)
 
 @dataclass(frozen=True)
 class TileMeta:
-    """Code-range metadata for one catalogue at one tile size.
+    """Dense-bool code-range metadata (PR 2 layout; reference path only).
 
     present[t, k, j] == True iff sub-id j occurs in split k among the items
     of tile t (items t*tile .. (t+1)*tile-1; the last tile may be partial).
-    Cost: n_tiles * m * b bools — e.g. 1 MiB for N=2^20, tile=2048, m=8,
-    b=256.  Tiles beyond the catalogue are absent; a tile-split with no
-    items present bounds to -inf and is auto-pruned.
+    Cost: n_tiles * m * b bools — the bit-packed :class:`PrunedHeadState`
+    stores the same information in 1/8 the bytes.
     """
 
     tile: int
@@ -95,7 +118,131 @@ def get_tile_metadata(codes: jax.Array, b: int, tile: int) -> TileMeta:
 
 
 # ---------------------------------------------------------------------------
-# query-dependent: bounds -> theta -> survival mask (pass 1 of the cascade)
+# bit-packed presence: (T, m, b) bool -> (T, m, ceil(b/32)) uint32
+# ---------------------------------------------------------------------------
+
+
+def packed_words(b: int) -> int:
+    """uint32 words per (tile, split) presence row."""
+    return -(-b // _WORD)
+
+
+def pack_presence(present: jax.Array) -> jax.Array:
+    """(T, m, b) bool -> (T, m, ceil(b/32)) uint32, bit j of word w set iff
+    present[..., w*32 + j].  8x smaller than the bool array in HBM."""
+    t, m, b = present.shape
+    w = packed_words(b)
+    pad = w * _WORD - b
+    if pad:
+        present = jnp.pad(present, ((0, 0), (0, 0), (0, pad)))
+    bits = present.reshape(t, m, w, _WORD).astype(jnp.uint32)
+    weight = jnp.uint32(1) << jnp.arange(_WORD, dtype=jnp.uint32)
+    return (bits * weight).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_presence(packed: jax.Array, b: int) -> jax.Array:
+    """Inverse of :func:`pack_presence` -> (T, m, b) bool."""
+    t, m, w = packed.shape
+    bitpos = jnp.arange(_WORD, dtype=jnp.uint32)
+    bits = (packed[..., None] >> bitpos) & jnp.uint32(1)
+    return bits.reshape(t, m, w * _WORD)[..., :b] != 0
+
+
+@dataclass(frozen=True)
+class PrunedHeadState:
+    """Query-independent pruning metadata as a param-tree citizen.
+
+    Built once at head-build time (``retrieval_head.init``) and threaded
+    through the params dict, so the in-graph cascade is a pure function of
+    params — jittable, shardable, decode-loop safe, no per-call rebuild.
+
+    ``packed`` is the code-presence set as uint32 bitmasks (bit j of word w
+    in ``packed[t, k, w]`` == sub-id ``w*32+j`` occurs in split k of tile
+    t) — 8x smaller than the PR 2 (T, m, b) bool array.  The static layout
+    fields are pytree *metadata* (hashable, part of the treedef), so jit
+    specialises on them exactly like on a shape.
+
+    For the item-sharded route (``shards > 1``) the catalogue is padded to
+    ``shards * n_local`` rows and tiled *per shard*, so tile boundaries
+    never straddle shard boundaries and ``packed`` splits evenly over the
+    mesh axis (``P(axis, None, None)``).
+    """
+
+    packed: jax.Array    # (n_tiles_total, m, ceil(b/32)) uint32
+    tile: int            # items per tile
+    n_items: int         # true catalogue rows (pre-padding)
+    b: int               # codebook width
+    shards: int = 1      # shard count the tile layout is aligned to
+    n_local: int = 0     # items per shard (== n_items when shards == 1)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def tiles_per_shard(self) -> int:
+        return self.packed.shape[0] // self.shards
+
+    @property
+    def nbytes(self) -> int:
+        """HBM footprint of the packed metadata."""
+        t, m, w = self.packed.shape
+        return t * m * w * 4
+
+    @property
+    def bool_nbytes(self) -> int:
+        """What the PR 2 dense-bool layout would cost for this catalogue."""
+        t, m, _ = self.packed.shape
+        return t * m * self.b
+
+
+jax.tree_util.register_dataclass(
+    PrunedHeadState, data_fields=["packed"],
+    meta_fields=["tile", "n_items", "b", "shards", "n_local"])
+
+
+def build_pruned_state(codes: jax.Array, b: int,
+                       tile: int = DEFAULT_PRUNE_TILE, *,
+                       shards: int = 1) -> PrunedHeadState:
+    """Head-build-time constructor (also trace-safe: pure jnp, so a caller
+    without a threaded state can rebuild in-graph as a fallback)."""
+    n, m = codes.shape
+    if shards <= 1:
+        t = max(1, min(int(tile), n))
+        return PrunedHeadState(pack_presence(_build_present(codes, b, t)),
+                               tile=t, n_items=n, b=b, shards=1, n_local=n)
+    pad = (-n) % shards
+    n_local = (n + pad) // shards
+    t = max(1, min(int(tile), n_local))
+    codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
+    per_shard = codes_p.reshape(shards, n_local, m)
+    present = jax.vmap(partial(_build_present, b=b, tile=t))(per_shard)
+    packed = pack_presence(present.reshape(-1, m, b))
+    return PrunedHeadState(packed, tile=t, n_items=n, b=b, shards=shards,
+                           n_local=n_local)
+
+
+def abstract_pruned_state(n_items: int, m: int, b: int,
+                          tile: int = DEFAULT_PRUNE_TILE, *,
+                          shards: int = 1) -> PrunedHeadState:
+    """ShapeDtypeStruct stand-in matching :func:`build_pruned_state`."""
+    if shards <= 1:
+        t = max(1, min(int(tile), n_items))
+        shape = (-(-n_items // t), m, packed_words(b))
+        return PrunedHeadState(jax.ShapeDtypeStruct(shape, jnp.uint32),
+                               tile=t, n_items=n_items, b=b, shards=1,
+                               n_local=n_items)
+    pad = (-n_items) % shards
+    n_local = (n_items + pad) // shards
+    t = max(1, min(int(tile), n_local))
+    shape = (shards * -(-n_local // t), m, packed_words(b))
+    return PrunedHeadState(jax.ShapeDtypeStruct(shape, jnp.uint32),
+                           tile=t, n_items=n_items, b=b, shards=shards,
+                           n_local=n_local)
+
+
+# ---------------------------------------------------------------------------
+# query-dependent: bounds -> theta -> survival mask
 # ---------------------------------------------------------------------------
 
 
@@ -112,6 +259,18 @@ def tile_upper_bounds(present: jax.Array, s: jax.Array) -> jax.Array:
     # is bit-identical to that item's score (bound tightness tests rely on
     # exact equality there).
     return tree_sum(parts)
+
+
+def tile_upper_bounds_packed(packed: jax.Array, s: jax.Array) -> jax.Array:
+    """Bounds straight from the uint32 bitmasks: each split's presence row
+    is unpacked lane-wise against a broadcast bit table and the max over
+    sub-ids is taken under that mask.  Bit-identical to
+    :func:`tile_upper_bounds` on the unpacked array — only the stored
+    footprint changes (1/8), not the arithmetic.
+
+    packed (T, m, W) uint32, s (B, m, b) f32 -> (B, T) f32.
+    """
+    return tile_upper_bounds(unpack_presence(packed, s.shape[-1]), s)
 
 
 def theta_from_seed(codes: jax.Array, s: jax.Array, bounds: jax.Array,
@@ -149,6 +308,96 @@ def theta_from_seed(codes: jax.Array, s: jax.Array, bounds: jax.Array,
     return jax.lax.top_k(scores, kk)[0][:, -1]
 
 
+def seed_schedule(policy: str, n_seed: int, n_seed_max: int, k: int,
+                  tile: int, n_tiles: int) -> Tuple[int, ...]:
+    """Static seed-size schedule (tiles scored after each stage).
+
+    Greedy: one stage.  Adaptive: geometric doubling from ``n_seed`` up to
+    ``n_seed_max`` — the stage count is Python-static, so the whole policy
+    stays in-graph (each growth stage is a ``lax.cond`` that is skipped at
+    runtime once the survival estimate has stabilised).
+    """
+    floor = max(1, -(-k // tile))              # enough seed rows to hold k
+    first = min(max(n_seed, floor), n_tiles)
+    if policy == "greedy":
+        return (first,)
+    sizes = [first]
+    while sizes[-1] < min(max(n_seed_max, first), n_tiles):
+        sizes.append(min(sizes[-1] * 2, n_tiles, max(n_seed_max, first)))
+    return tuple(dict.fromkeys(sizes))
+
+
+def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
+                       k: int, *, tile: int,
+                       seed_policy: str = "greedy",
+                       seed_tiles: int = DEFAULT_SEED_TILES,
+                       seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
+                       seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
+                       n_items: Optional[int] = None,
+                       id_offset=0):
+    """In-graph theta seeding -> (theta (B,), n_seed_used i32, survival f32).
+
+    ``seed_policy="greedy"``: one exact pass over the ``seed_tiles`` most
+    promising tiles (bit-identical theta to :func:`theta_from_seed`).
+
+    ``seed_policy="adaptive"``: grow the seed set geometrically
+    (``seed_tiles`` -> ``seed_max_tiles``) until the estimated survival
+    fraction moves by <= ``seed_stab_tol`` between stages.  Every stage is
+    a ``lax.cond`` over a Python-static chunk, so the trip count is fixed
+    at trace time and skipped stages cost nothing at runtime — the policy
+    is decode-loop and shard_map safe.
+    """
+    from repro.kernels.pqtopk import ref as pq_ref
+
+    n, m = codes.shape
+    bq = s.shape[0]
+    n_tiles = bounds.shape[1]
+    sizes = seed_schedule(seed_policy, seed_tiles, seed_max_tiles, k, tile,
+                          n_tiles)
+    pad = n_tiles * tile - n
+    codes_pad = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
+    tiles3 = codes_pad.reshape(n_tiles, tile, m)
+    order = jax.lax.top_k(bounds.max(axis=0), sizes[-1])[1]   # (n_max,)
+    limit = n if n_items is None else n_items
+
+    def score_chunk(tile_ids):
+        """Exact, id-masked scores of the chunk's items -> (B, c*tile)."""
+        sc = pq_ref.pq_scores(tiles3[tile_ids].reshape(-1, m), s)
+        local = (tile_ids[:, None] * tile
+                 + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
+        valid = (id_offset + local < limit) & (local < n)
+        return jnp.where(valid[None, :], sc, NEG_INF)
+
+    def merge(vals, sc):
+        cand = jnp.concatenate(
+            [vals, jax.lax.top_k(sc, min(k, sc.shape[1]))[0]], axis=1)
+        return jax.lax.top_k(cand, k)[0]
+
+    def survival_est(theta):
+        return survival_mask(bounds, theta).mean()
+
+    vals = merge(jnp.full((bq, k), NEG_INF), score_chunk(order[:sizes[0]]))
+    theta = vals[:, -1]
+    sf = survival_est(theta)
+    n_used = jnp.int32(sizes[0])
+    done = jnp.bool_(False)
+    for prev, size in zip(sizes, sizes[1:]):
+        chunk = order[prev:size]
+
+        def grow(carry, chunk=chunk, size=size):
+            vals, _theta, sf_prev, n_used, _done = carry
+            vals = merge(vals, score_chunk(chunk))
+            theta = vals[:, -1]
+            sf = survival_est(theta)
+            stable = jnp.abs(sf - sf_prev) <= seed_stab_tol
+            return vals, theta, sf, jnp.int32(size), stable
+
+        carry = (vals, theta, sf, n_used, done)
+        vals, theta, sf, n_used, done = jax.lax.cond(
+            done, lambda c: c, grow, carry)
+    return theta, n_used, sf
+
+
 def survival_mask(bounds: jax.Array, theta: jax.Array) -> jax.Array:
     """Tile survives iff ANY query in the batch still needs it.
 
@@ -156,6 +405,28 @@ def survival_mask(bounds: jax.Array, theta: jax.Array) -> jax.Array:
     exactness under ties: an item scoring exactly theta must stay visible.
     """
     return (bounds >= theta[:, None]).any(axis=0)
+
+
+def compact_mask(mask: jax.Array, n_slots: Optional[int] = None,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """In-graph cumsum-scatter compaction of a survivor mask.
+
+    mask (T,) bool -> (slots (n_slots,) int32, count i32): surviving tile
+    indices in ascending order at the front, ``-1`` sentinels behind.  The
+    scatter destination of pruned tiles (and of survivors past the budget,
+    when ``n_slots < T``) is off the end of the buffer and dropped
+    (``mode="drop"``) — callers with a budget must branch to an exhaustive
+    fallback when ``count > n_slots`` to stay exact.  Pure jnp: safe under
+    jit / vmap / shard_map; this is the step that replaced the PR 2 host
+    ``np.nonzero`` round-trip.
+    """
+    t = mask.shape[0]
+    n_slots = t if n_slots is None else int(n_slots)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1          # dest of survivor i
+    dest = jnp.where(mask, pos, n_slots)                  # pruned -> dropped
+    slots = jnp.full((n_slots,), -1, jnp.int32).at[dest].set(
+        jnp.arange(t, dtype=jnp.int32), mode="drop")
+    return slots, mask.sum(dtype=jnp.int32)
 
 
 def pruned_pass1(codes: jax.Array, present: jax.Array, s: jax.Array, k: int,
@@ -173,7 +444,89 @@ def pruned_pass1(codes: jax.Array, present: jax.Array, s: jax.Array, k: int,
 
 
 # ---------------------------------------------------------------------------
-# the full two-pass cascade (host-orchestrated)
+# the single-dispatch in-graph cascade (PR 3 serving path)
+# ---------------------------------------------------------------------------
+
+
+def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
+                         state: Optional[PrunedHeadState] = None, *,
+                         tile: int = DEFAULT_PRUNE_TILE,
+                         seed_policy: str = "greedy",
+                         seed_tiles: int = DEFAULT_SEED_TILES,
+                         seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
+                         seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
+                         slot_budget: Optional[int] = None,
+                         use_kernel: Optional[bool] = None,
+                         interpret: Optional[bool] = None,
+                         return_stats: bool = False):
+    """Exact pruned top-k as ONE traced computation (no host sync).
+
+    bounds -> theta -> survival mask -> cumsum-scatter compaction into a
+    ``-1``-padded slot buffer -> fused scoring over the listed tiles.  On
+    TPU the fused kernel's grid stays static at ``n_slots`` and sentinel
+    slots take an ``@pl.when`` early-exit (~no DMA or compute); off TPU the
+    XLA lowering gathers ``n_slots`` tiles.
+
+    ``slot_budget`` caps the compacted buffer below the tile count: the
+    common case then scores only ``slot_budget`` tiles, and a ``lax.cond``
+    falls back to the exhaustive identity buffer in the (exactness-
+    preserving) overflow case — both branches live in the same dispatch.
+
+    Pure function of (codes, s, state): jittable, vmappable, decode-loop
+    and shard_map safe.  Bit-identical to ``score_pqtopk + tiled_topk``
+    (values AND ids, ties included).  With ``return_stats`` the stats
+    values are traced arrays (convert on host after the call).
+    """
+    from repro.kernels.pqtopk import ops as kernel_ops
+
+    if state is None:
+        state = build_pruned_state(codes, int(s.shape[-1]), tile)
+    if state.shards != 1:
+        # A shard-aligned state tiles the catalogue per shard (tile
+        # boundaries reset at each shard), so interpreting its packed rows
+        # as a flat global layout would produce bounds that do not dominate
+        # the flat tiles' scores — silently breaking exactness.  The flat
+        # route must rebuild (or be handed) a shards=1 state.
+        raise ValueError(
+            f"cascade_topk_ingraph needs a shards=1 state, got "
+            f"shards={state.shards}; use top_items_pruned_sharded for the "
+            f"sharded layout")
+    tile = state.tile
+    bounds = tile_upper_bounds_packed(state.packed, s)
+    theta, n_seed_used, seed_sf = theta_seed_ingraph(
+        codes, s, bounds, k, tile=tile, seed_policy=seed_policy,
+        seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
+        seed_stab_tol=seed_stab_tol)
+    mask = survival_mask(bounds, theta)
+    t_total = bounds.shape[1]
+    floor = min(max(1, -(-k // tile)), t_total)
+    n_slots = t_total if slot_budget is None else \
+        max(min(int(slot_budget), t_total), floor)
+    slots, count = compact_mask(mask, n_slots)
+
+    def scored(tile_idx):
+        return kernel_ops.pq_topk_tiles(codes, s, k, tile_idx, tile=tile,
+                                        use_kernel=use_kernel,
+                                        interpret=interpret)
+
+    if n_slots < t_total:
+        identity = jnp.arange(t_total, dtype=jnp.int32)
+        vals, ids = jax.lax.cond(count <= n_slots,
+                                 lambda: scored(slots),
+                                 lambda: scored(identity))
+    else:
+        vals, ids = scored(slots)
+    if not return_stats:
+        return vals, ids
+    stats = {"n_tiles": t_total, "n_survived": count, "n_scored": n_slots,
+             "survival_fraction": count / jnp.float32(max(t_total, 1)),
+             "n_seed_used": n_seed_used, "seed_survival_est": seed_sf,
+             "slot_overflow": count > n_slots}
+    return vals, ids, stats
+
+
+# ---------------------------------------------------------------------------
+# the host two-pass cascade (PR 2 reference implementation)
 # ---------------------------------------------------------------------------
 
 _pass1_jit = jax.jit(pruned_pass1, static_argnames=("k", "tile", "n_seed"))
@@ -191,14 +544,16 @@ def cascade_topk(codes: jax.Array, s: jax.Array, k: int, *, tile: int,
                  use_kernel: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  return_stats: bool = False):
-    """Exact top-k via the two-pass cascade, given the S matrix.
+    """Exact top-k via the PR 2 host-orchestrated two-pass cascade.
 
     Pass 1 (jitted): bounds -> theta -> survival mask.  Host sync: compact
     the surviving tile indices (power-of-two slot bucket, sentinel-padded).
     Pass 2 (jitted per bucket size): fused scoring + top-k over surviving
     tiles only.  Bit-identical to ``score_pqtopk`` + ``tiled_topk``; NOT
-    jit-compatible (the compaction is a device->host sync) — inside jit use
-    the masked in-graph variant in ``retrieval_head``.
+    jit-compatible (the compaction is a device->host sync) — the serving
+    path uses :func:`cascade_topk_ingraph`, which fuses both passes into a
+    single dispatch.  Kept as the reference implementation the in-graph
+    route is parity-tested against.
     """
     import numpy as np
 

@@ -16,7 +16,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import PQConfig
@@ -29,16 +28,12 @@ Params = Dict[str, Any]
 #: Methods accepted by ``top_items``/``serve_topk`` — the paper's three
 #: algorithms plus the Pallas routes (scores-only kernel, fused
 #: score+top-k kernel), the cascaded pruned route, and the approximate
-#: block-max route.
+#: block-max route.  Every method — including ``pqtopk_pruned``, whose
+#: cascade is a single in-graph dispatch since PR 3 — is a pure traced
+#: function of (params, phi): jittable, decode-loop and shard_map safe.
 TOP_ITEMS_METHODS = ("dense", "recjpq", "pqtopk", "pqtopk_onehot",
                      "pqtopk_kernel", "pqtopk_fused", "pqtopk_pruned",
                      "pqtopk_approx")
-
-#: Methods whose full cascade needs host orchestration (a device->host sync
-#: between the bound pass and the compacted scoring pass).  Inside jit,
-#: ``top_items`` falls back to an in-graph masked variant that is exact but
-#: scores all tiles; ``top_items_pruned`` is the real two-dispatch cascade.
-HOST_CASCADE_METHODS = ("pqtopk_pruned",)
 
 
 # ---------------------------------------------------------------------------
@@ -51,15 +46,25 @@ def init(key: jax.Array, n_items: int, d_model: int,
     if pq is None:
         table = jax.random.normal(key, (n_items, d_model), jnp.float32) * 0.02
         return {"table": table.astype(dtype)}
-    return pq_lib.init_pq_embedding(key, pq, n_items, d_model, codes,
-                                    centroids, dtype)
+    params = pq_lib.init_pq_embedding(key, pq, n_items, d_model, codes,
+                                      centroids, dtype)
+    # Query-independent pruning metadata (bit-packed code presence), built
+    # once here and carried in the param tree so the in-graph pruned
+    # cascade never rebuilds it — not even inside a decode loop.  A frozen
+    # integer buffer to the optimizer, like "codes".
+    params["pruned"] = pruning.build_pruned_state(
+        params["codes"], pq.b, DEFAULT_PRUNE_TILE)
+    return params
 
 
 def abstract(n_items: int, d_model: int, pq: Optional[PQConfig] = None,
              dtype: Any = jnp.float32) -> Params:
     if pq is None:
         return {"table": jax.ShapeDtypeStruct((n_items, d_model), dtype)}
-    return pq_lib.abstract_pq_embedding(pq, n_items, d_model, dtype)
+    params = pq_lib.abstract_pq_embedding(pq, n_items, d_model, dtype)
+    params["pruned"] = pruning.abstract_pruned_state(
+        n_items, pq.m, pq.b, DEFAULT_PRUNE_TILE)
+    return params
 
 
 def is_pq(params: Params) -> bool:
@@ -122,6 +127,7 @@ def score_candidates(params: Params, phi: jax.Array, item_ids: jax.Array,
 
 def top_items(params: Params, phi: jax.Array, k: int,
               method: str = "pqtopk", tile: int = 8192,
+              pq_cfg: Optional[PQConfig] = None,
               ) -> Tuple[jax.Array, jax.Array]:
     """TopK(score, K) — returns (values (B,k), item ids (B,k)).
 
@@ -129,6 +135,10 @@ def top_items(params: Params, phi: jax.Array, k: int,
     and per-tile winners stay in VMEM and only (B, n_tiles, k) candidates
     reach HBM — O(B*K*N/TN) output traffic instead of the O(B*N) score
     matrix that every score_all + tiled_topk route materialises.
+
+    ``method="pqtopk_pruned"`` runs the single-dispatch in-graph cascade
+    (bounds -> theta -> compaction -> compacted fused scoring, all in one
+    traced computation; ``pq_cfg`` supplies the theta-seeding policy knobs).
     """
     if method == "pqtopk_fused":
         if not is_pq(params):
@@ -140,7 +150,7 @@ def top_items(params: Params, phi: jax.Array, k: int,
     if method == "pqtopk_pruned":
         if not is_pq(params):
             raise ValueError("method 'pqtopk_pruned' requires a PQ head")
-        return _top_items_pruned_ingraph(params, phi, k, tile)
+        return _top_items_pruned_ingraph(params, phi, k, pq_cfg=pq_cfg)
     if method == "pqtopk_approx":
         if not is_pq(params):
             raise ValueError("method 'pqtopk_approx' requires a PQ head")
@@ -154,8 +164,8 @@ def top_items(params: Params, phi: jax.Array, k: int,
 # cascaded pruned retrieval (upper-bound tile skipping, docs/PRUNING.md)
 # ---------------------------------------------------------------------------
 
-DEFAULT_PRUNE_TILE = 2048
-DEFAULT_SEED_TILES = 2
+DEFAULT_PRUNE_TILE = pruning.DEFAULT_PRUNE_TILE
+DEFAULT_SEED_TILES = pruning.DEFAULT_SEED_TILES
 
 
 _subid_scores_jit = jax.jit(
@@ -163,28 +173,46 @@ _subid_scores_jit = jax.jit(
                                               phi.astype(jnp.float32)))
 
 
-def _top_items_pruned_ingraph(params, phi, k, tile,
-                              seed_tiles: int = DEFAULT_SEED_TILES):
-    """Jit-compatible pruned variant: mask, don't compact.
+def _seed_kwargs(pq_cfg: Optional[PQConfig]) -> Dict[str, Any]:
+    """theta-seeding knobs for the in-graph cascade, from PQConfig."""
+    if pq_cfg is None:
+        return {}
+    return {"seed_policy": pq_cfg.seed_policy,
+            "seed_tiles": pq_cfg.seed_tiles,
+            "seed_max_tiles": pq_cfg.seed_max_tiles,
+            "seed_stab_tol": pq_cfg.seed_stab_tol}
 
-    Runs the full bound cascade in-graph and masks pruned tiles' scores to
-    -inf before the top-k, so the result is bit-identical to the compacted
-    route (and the exhaustive oracle) but every tile is still scored — use
-    :func:`top_items_pruned` outside jit for the real O(N_survive) pass 2.
+
+def _pruned_state(params: Params) -> Optional[pruning.PrunedHeadState]:
+    st = params.get("pruned")
+    return st if isinstance(st, pruning.PrunedHeadState) else None
+
+
+def _top_items_pruned_ingraph(params, phi, k, *,
+                              pq_cfg: Optional[PQConfig] = None,
+                              slot_budget: Optional[int] = None):
+    """The single-dispatch pruned route: one traced computation.
+
+    Reads the bit-packed :class:`pruning.PrunedHeadState` threaded through
+    the param tree (rebuilding it in-graph only for legacy param dicts that
+    predate the state) and runs ``pruning.cascade_topk_ingraph`` — bounds,
+    theta seeding, cumsum-scatter compaction into a ``-1``-padded slot
+    buffer, and the compacted fused scoring, with no device->host sync.
+    Bit-identical to the exhaustive oracle; jit / decode-loop safe.
     """
     codes, sub_emb = params["codes"], params["sub_emb"]
-    b = sub_emb.shape[1]
-    n = codes.shape[0]
-    prune_tile = min(DEFAULT_PRUNE_TILE, n)
-    present = pruning._build_present(codes, b, prune_tile)
     s = scoring.subid_scores(sub_emb.astype(jnp.float32),
                              phi.astype(jnp.float32))
-    mask, _, _ = pruning.pruned_pass1(codes, present, s, k, tile=prune_tile,
-                                      n_seed=seed_tiles)
-    r = scoring.score_pqtopk(codes, s)
-    item_tile = jnp.arange(n, dtype=jnp.int32) // prune_tile
-    r = jnp.where(mask[item_tile][None, :], r, -jnp.inf)
-    return topk_lib.tiled_topk(r, k, tile)
+    state = _pruned_state(params)
+    if state is not None and state.shards != 1:
+        # A shard-aligned state (installed by ensure_sharded_pruned_state)
+        # tiles the catalogue per shard; the flat route needs the shards=1
+        # layout, so rebuild in-graph rather than misread the tiles.
+        state = None
+    return pruning.cascade_topk_ingraph(codes, s, k, state,
+                                        tile=DEFAULT_PRUNE_TILE,
+                                        slot_budget=slot_budget,
+                                        **_seed_kwargs(pq_cfg))
 
 
 def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
@@ -193,13 +221,19 @@ def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
                      use_kernel: Optional[bool] = None,
                      interpret: Optional[bool] = None,
                      return_stats: bool = False):
-    """Two-pass cascaded retrieval (``method="pqtopk_pruned"``), host mode.
+    """Two-pass cascaded retrieval, host mode (PR 2 reference path).
 
     Pass 1 (jitted): per-tile upper bounds from cached code-presence
     metadata, theta from a greedy exact pass over the ``seed_tiles`` most
     promising tiles, survival mask.  Host sync: compact surviving tile
     indices (power-of-two slot bucket, sentinel-padded).  Pass 2 (jitted
     per bucket size): fused scoring + top-k over surviving tiles only.
+
+    The serving path no longer uses this — ``method="pqtopk_pruned"``
+    through :func:`top_items` is the single-dispatch in-graph cascade.
+    Kept as the host-orchestrated reference the in-graph route is
+    parity-tested against (and for interactive use where a per-call
+    device->host sync is acceptable).
 
     Exact: every skipped tile's bound is below theta, and at least k items
     score >= theta, so the top-k (values AND ids, ties included) matches
@@ -215,24 +249,62 @@ def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
                                 return_stats=return_stats)
 
 
+def ensure_sharded_pruned_state(params: Params, mesh, axis: str = "model", *,
+                                k_hint: int = 64,
+                                tile: int = DEFAULT_PRUNE_TILE) -> Params:
+    """Return ``params`` with a :class:`pruning.PrunedHeadState` whose tile
+    layout is aligned to ``mesh``'s ``axis`` (tiles never straddle shard
+    boundaries, so ``packed`` splits evenly over the mesh).
+
+    A no-op when the threaded state is already compatible; otherwise builds
+    the shard-aligned state ONCE (engine/head build time) so the sharded
+    serve path never rebuilds metadata per call.  ``k_hint`` is the largest
+    k the route will serve — the tile must hold the per-shard oversampled
+    top-(k + pad) winners.
+    """
+    if not is_pq(params):
+        return params
+    codes = params["codes"]
+    n = codes.shape[0]
+    n_shards = mesh.shape[axis]
+    pad = (-n) % n_shards
+    n_local = (n + pad) // n_shards
+    k_local = min(k_hint + pad, n_local)
+    st = _pruned_state(params)
+    if st is not None and st.shards == n_shards and st.tile >= k_local:
+        return params
+    b = params["sub_emb"].shape[1]
+    need = min(max(tile, k_local), n_local)
+    return {**params, "pruned": pruning.build_pruned_state(
+        codes, b, need, shards=n_shards)}
+
+
 def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                              axis: str = "model", *,
                              tile: int = DEFAULT_PRUNE_TILE,
-                             seed_tiles: int = DEFAULT_SEED_TILES,
+                             seed_tiles: Optional[int] = None,
+                             pq_cfg: Optional[PQConfig] = None,
                              use_kernel: Optional[bool] = None,
                              interpret: Optional[bool] = None,
                              return_stats: bool = False):
-    """Item-sharded cascade: per-shard pruning with a shared theta.
+    """Item-sharded cascade in ONE ``shard_map`` — single device dispatch.
 
-    Pass 1 (one shard_map): each shard bounds its local tiles, seeds a
-    local theta from its own most promising tiles, then the global theta is
-    the pmax over shards — each local theta certifies >= k items somewhere,
-    so the max is still certified and is the tightest such bound.  Local
-    bound blocks are all-gathered (out-spec concatenation along the tile
-    axis) so the host computes one global survivor mask.  Pass 2 (second
-    shard_map): each shard scores its own compacted survivor list (padded
-    to the max per-shard count for SPMD uniformity) and contributes k
-    candidates to the same O(k * shards) merge as every other route.
+    Each shard: bounds its local tiles from its slice of the bit-packed
+    presence state, seeds a local theta from its own most promising tiles,
+    shares ``theta = pmax(theta_local)`` (each local theta certifies >= k
+    items somewhere, so the max is still certified and is the tightest such
+    bound), compacts its local survivors with the in-graph cumsum scatter
+    into a ``-1``-padded slot buffer (full per-shard length — SPMD uniform
+    by construction, no cross-shard max needed), scores them through the
+    compacted fused kernel, and contributes k candidates to the same
+    O(k * shards) all-gather merge as every other sharded route.  The PR 2
+    version needed two shard_maps with a host compaction between them;
+    theta sharing and compaction now both live inside the single Manual
+    region, so the route is jit- and decode-loop safe.
+
+    Uses the shard-aligned state threaded through ``params`` when present
+    (see :func:`ensure_sharded_pruned_state`); otherwise builds one
+    in-graph — still a single dispatch, just with per-call rebuild cost.
     """
     if not is_pq(params):
         raise ValueError("top_items_pruned_sharded requires a PQ head")
@@ -241,74 +313,69 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     n = codes.shape[0]
     n_shards = mesh.shape[axis]
     pad = (-n) % n_shards
-    codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
     n_local = (n + pad) // n_shards
-    # Pass 2 oversamples the local top-(k + pad) so shard-padding rows can
-    # be masked out afterwards; the tile must be able to hold that many
-    # winners (k <= tile is required everywhere, k + pad only here).
-    tile = min(max(tile, k + pad), n_local)
-    t_local = -(-n_local // tile)
+    # The local pass oversamples the top-(k + pad) so shard-padding rows
+    # can be masked out afterwards; the tile must hold that many winners
+    # (k <= tile is required everywhere, k + pad only here).
+    k_local = min(k + pad, n_local)
     b = sub_emb.shape[1]
+    state = _pruned_state(params)
+    if state is None or state.shards != n_shards or state.tile < k_local:
+        state = pruning.build_pruned_state(
+            codes, b, min(max(tile, k_local), n_local), shards=n_shards)
+    tile = state.tile
+    t_local = state.tiles_per_shard
+    codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
     if use_kernel is None:
         from repro import compat
         use_kernel = compat.on_tpu()
     if interpret is None:
         from repro import compat
         interpret = not compat.on_tpu()
+    # Precedence: explicit seed_tiles argument > PQConfig knobs > defaults.
+    seed_kw = _seed_kwargs(pq_cfg)
+    if seed_tiles is not None:
+        seed_kw["seed_tiles"] = seed_tiles
+        seed_kw["seed_max_tiles"] = max(
+            seed_tiles, seed_kw.get("seed_max_tiles",
+                                    pruning.DEFAULT_SEED_MAX_TILES))
 
-    def pass1_shard(codes_local, sub_emb_, phi_):
+    def shard_body(codes_local, packed_local, sub_emb_, phi_):
         s = scoring.subid_scores(sub_emb_.astype(jnp.float32),
                                  phi_.astype(jnp.float32))
-        present = pruning._build_present(codes_local, b, tile)
+        bounds = pruning.tile_upper_bounds_packed(packed_local, s)
         offset = jax.lax.axis_index(axis) * n_local
-        bounds = pruning.tile_upper_bounds(present, s)
-        theta_local = pruning.theta_from_seed(
-            codes_local, s, bounds, k, tile=tile, n_seed=seed_tiles,
-            n_items=n, id_offset=offset)
+        theta_local, n_seed_used, _sf = pruning.theta_seed_ingraph(
+            codes_local, s, bounds, k, tile=tile, n_items=n,
+            id_offset=offset, **seed_kw)
         theta = jax.lax.pmax(theta_local, axis)
-        return bounds, theta, s
-
-    fn1 = manual_axis_map(
-        pass1_shard, mesh,
-        in_specs=(P(axis, None), P(), P()),
-        out_specs=(P(None, axis), P(), P()))
-    bounds, theta, s = fn1(codes_p, sub_emb, phi)
-
-    mask = np.asarray(pruning.survival_mask(bounds, theta))
-    per_shard = mask.reshape(n_shards, t_local)
-    counts = per_shard.sum(axis=1)
-    n_slots = pruning.slot_bucket(int(counts.max()), k, tile)
-    sentinel = kernel_ops.sentinel_tile(n_local, tile)
-    idx_all = np.full((n_shards, n_slots), sentinel, np.int32)
-    for sh in range(n_shards):
-        local = np.nonzero(per_shard[sh])[0]
-        idx_all[sh, :len(local)] = local
-    k_local = min(k + pad, n_local)
-
-    def pass2_shard(codes_local, s_, idx_local):
+        mask = pruning.survival_mask(bounds, theta)
+        slots, count = pruning.compact_mask(mask)
         lv, li = kernel_ops._pq_topk_tiles(
-            codes_local, s_, k_local, idx_local, tile=tile,
+            codes_local, s, k_local, slots, tile=tile,
             batch_tile=kernel_ops._k.DEFAULT_BATCH_TILE,
             use_kernel=use_kernel, interpret=interpret)
-        offset = jax.lax.axis_index(axis) * n_local
         gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
         lv = jnp.where(gid < n, lv, -jnp.inf)
         if k_local > k:
             lv, sel = jax.lax.top_k(lv, k)
             gid = jnp.take_along_axis(gid, sel, axis=1)
-        return topk_lib.merge_local_topk(lv, gid, k, axis)
+        vals, ids = topk_lib.merge_local_topk(lv, gid, k, axis)
+        return (vals, ids, jax.lax.psum(count, axis),
+                jax.lax.pmax(n_seed_used, axis))
 
-    fn2 = manual_axis_map(
-        pass2_shard, mesh,
-        in_specs=(P(axis, None), P(), P(axis)),
-        out_specs=(P(), P()))
-    vals, ids = fn2(codes_p, s, jnp.asarray(idx_all.reshape(-1)))
+    fn = manual_axis_map(
+        shard_body, mesh,
+        in_specs=(P(axis, None), P(axis, None, None), P(), P()),
+        out_specs=(P(), P(), P(), P()))
+    vals, ids, survived, n_seed_used = fn(codes_p, state.packed, sub_emb, phi)
     if not return_stats:
         return vals, ids
-    total = int(mask.size)
-    stats = {"n_tiles": total, "n_survived": int(mask.sum()),
-             "n_scored": int(n_shards * n_slots),
-             "survival_fraction": float(mask.sum()) / max(total, 1)}
+    total = n_shards * t_local
+    stats = {"n_tiles": total, "n_survived": survived,
+             "n_scored": total,
+             "survival_fraction": survived / jnp.float32(max(total, 1)),
+             "n_seed_used": n_seed_used}
     return vals, ids, stats
 
 
@@ -318,6 +385,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
 
 def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
                       axis: str = "model", method: str = "pqtopk",
+                      pq_cfg: Optional[PQConfig] = None,
                       ) -> Tuple[jax.Array, jax.Array]:
     """Item-sharded retrieval: codes sharded over ``axis``; each shard runs
     PQTopK locally and contributes k candidates to an all-gather merge.
@@ -328,7 +396,8 @@ def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
     if not is_pq(params):
         return _dense_top_items_sharded(params, phi, k, mesh, axis)
     if method == "pqtopk_pruned":
-        return top_items_pruned_sharded(params, phi, k, mesh, axis)
+        return top_items_pruned_sharded(params, phi, k, mesh, axis,
+                                        pq_cfg=pq_cfg)
     n = params["codes"].shape[0]
     n_shards = mesh.shape[axis]
     pad = (-n) % n_shards

@@ -185,6 +185,8 @@ def path_str(path) -> str:
             parts.append(str(p.key))
         elif hasattr(p, "idx"):
             parts.append(str(p.idx))
+        elif hasattr(p, "name"):         # GetAttrKey (registered dataclasses
+            parts.append(str(p.name))    # like pruning.PrunedHeadState)
         else:
             parts.append(str(p))
     return "/".join(parts)

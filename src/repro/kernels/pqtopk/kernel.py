@@ -133,16 +133,31 @@ def _tile_topk(scores, k: int, blocks: int):
 def pq_topk_fused_kernel(idx_ref, codes_ref, s_ref, out_v_ref, out_i_ref, *,
                          k: int, tile: int, n_items: int, blocks: int):
     tile_id = idx_ref[pl.program_id(0)]
-    scores = _tile_scores(codes_ref, s_ref)           # (TB, TN)
-    tb, tn = scores.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (tb, tn), 1)
-    # Mask padding beyond the true catalogue size; sentinel tiles (the
-    # pruned route's slot padding) land entirely here.
-    global_col = col + tile_id * tile
-    scores = jnp.where(global_col < n_items, scores, NEG_INF)
-    vals, cols = _tile_topk(scores, k, blocks)
-    out_v_ref[...] = vals[:, None, :]
-    out_i_ref[...] = (cols + tile_id * tile)[:, None, :]
+
+    # Sentinel slots (tile_id == -1): the in-graph pruned route's slot-
+    # buffer padding.  Early-exit — no scoring, no top-k; and because the
+    # sentinels sit contiguously at the buffer tail and their BlockSpec
+    # index map pins them all to codes block 0 (see the clamp in
+    # pq_topk_fused_call), the codes DMA is issued at most once for the
+    # whole sentinel run.  The grid stays static; skipped slots cost ~no
+    # DMA or compute.
+    @pl.when(tile_id < 0)
+    def _sentinel():
+        out_v_ref[...] = jnp.full(out_v_ref.shape, NEG_INF, jnp.float32)
+        out_i_ref[...] = jnp.full(out_i_ref.shape, n_items, jnp.int32)
+
+    @pl.when(tile_id >= 0)
+    def _score():
+        scores = _tile_scores(codes_ref, s_ref)       # (TB, TN)
+        tb, tn = scores.shape
+        col = jax.lax.broadcasted_iota(jnp.int32, (tb, tn), 1)
+        # Mask padding beyond the true catalogue size; legacy past-catalogue
+        # sentinel tiles land entirely here.
+        global_col = col + tile_id * tile
+        scores = jnp.where(global_col < n_items, scores, NEG_INF)
+        vals, cols = _tile_topk(scores, k, blocks)
+        out_v_ref[...] = vals[:, None, :]
+        out_i_ref[...] = (cols + tile_id * tile)[:, None, :]
 
 
 def pq_scores_call(codes: jax.Array, s: jax.Array, *, tile: int = DEFAULT_TILE,
@@ -177,7 +192,10 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
 
     ``tile_idx`` (n_slots,) int32 selects which codes tile each grid slot
     scores (identity for the exhaustive route, a compacted survivor list for
-    the pruned route).  ``codes`` rows must cover every indexed tile;
+    the pruned route).  ``-1`` entries are sentinel slots: their grid step
+    early-exits via ``@pl.when`` and the index map clamps their codes block
+    to 0 so the pipeline re-uses one already-fetched block instead of
+    issuing per-slot DMAs.  ``codes`` rows must cover every indexed tile;
     ``s``'s batch must divide by ``batch_tile``.
     """
     n, m = codes.shape
@@ -192,7 +210,8 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
         num_scalar_prefetch=1,
         grid=(n_slots, bq // batch_tile),
         in_specs=[
-            pl.BlockSpec((tile, m), lambda i, j, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((tile, m),
+                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), 0)),
             pl.BlockSpec((batch_tile, m, b), lambda i, j, idx_ref: (j, 0, 0)),
         ],
         out_specs=[

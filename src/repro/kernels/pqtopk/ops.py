@@ -23,7 +23,10 @@ from repro import compat
 from repro.core import topk as topk_lib
 from repro.kernels.pqtopk import kernel as _k, ref as _ref
 
-NEG_INF = jnp.float32(-jnp.inf)
+# A plain Python float, NOT a jnp scalar: this module is imported lazily
+# (sometimes inside an active jit trace), and materialising a module-level
+# jnp constant under a trace leaks a tracer.
+NEG_INF = float("-inf")
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -128,7 +131,11 @@ def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
     # shared-accumulation-order oracle, top-k over the compacted axis and
     # map positions back to global ids.  tile_idx is ascending (plus
     # trailing sentinels), so position order == global id order and ties
-    # resolve identically to the exhaustive oracle.
+    # resolve identically to the exhaustive oracle.  ``-1`` sentinel slots
+    # (the in-graph cascade's compaction padding) are remapped to the
+    # all-padding tile appended past the catalogue, whose global ids are
+    # >= n and therefore mask to -inf below.
+    tile_idx = jnp.where(tile_idx < 0, sentinel_tile(n, tile), tile_idx)
     n_slots = tile_idx.shape[0]
     sel = padded.reshape(-1, tile, m)[tile_idx]             # (L, tile, m)
     scores = _ref.pq_scores(sel.reshape(n_slots * tile, m), s)
@@ -146,12 +153,16 @@ def pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
                   batch_tile: int = _k.DEFAULT_BATCH_TILE,
                   use_kernel: bool | None = None,
                   interpret: bool | None = None):
-    """Fused scoring + top-k over a compacted tile list (cascade pass 2).
+    """Fused scoring + top-k over a compacted tile list (the cascade's
+    scoring stage — fed by host compaction in the legacy route, by the
+    in-graph cumsum scatter in the single-dispatch route).
 
     codes (N, m) raw catalogue codes; tile_idx (n_slots,) int32 ascending
-    tile indices, padded with ``sentinel_tile(N, tile)`` entries.  Work is
-    O(n_slots * tile * m) instead of O(N * m).  -> (vals (B,k), ids (B,k)),
-    bit-identical to the exhaustive routes for surviving items.
+    tile indices, padded with either ``-1`` sentinel slots (in-graph
+    compaction; ``@pl.when`` early-exit in the kernel) or legacy
+    ``sentinel_tile(N, tile)`` entries.  Work is O(n_slots * tile * m)
+    instead of O(N * m).  -> (vals (B,k), ids (B,k)), bit-identical to the
+    exhaustive routes for surviving items.
     """
     if use_kernel is None:
         use_kernel = compat.on_tpu()

@@ -30,11 +30,22 @@ def main(argv=None):
                          "pqtopk_approx = block-max approximate top-k")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--seed-policy", default=None,
+                    choices=["greedy", "adaptive"],
+                    help="theta-seeding policy for the pruned cascade "
+                         "(overrides the arch config's PQConfig)")
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert arch.family == "seqrec", "serve.py drives the seqrec archs"
     cfg = arch.model
+    if args.seed_policy is not None:
+        if getattr(cfg, "pq", None) is None:
+            raise SystemExit(f"--seed-policy: arch {args.arch!r} has no PQ "
+                             "head (dense item embedding); seed policy only "
+                             "applies to the pruned PQ cascade")
+        from dataclasses import replace
+        cfg = replace(cfg, pq=replace(cfg.pq, seed_policy=args.seed_policy))
     from repro.models import seqrec as m
     params = m.init_seqrec(jax.random.PRNGKey(0), cfg)
 
@@ -61,7 +72,8 @@ def main(argv=None):
     print(f"served {len(results)} requests in {wall:.2f}s "
           f"({len(results) / wall:.1f} req/s) method={engine.method}")
     print(f"mRT={stats['mRT_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
-          f"timeouts={int(stats['timeouts'])}")
+          f"timeouts={int(stats['timeouts'])} "
+          f"n_compiles={int(stats['n_compiles'])}")
     return results
 
 

@@ -173,13 +173,15 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
                                caches_abs)
     tok_abs = S((bsz,), jnp.int32)
     pos_abs = S((), jnp.int32)
-    # No "pruned_head" here: inside a decode loop the in-graph pruned
-    # fallback rebuilds tile metadata every step and skips nothing — a pure
-    # pessimization of the hot path (the real cascade needs the serving
-    # engine's host orchestration).
+    # "pruned_head" is decode-loop viable since the single-dispatch
+    # cascade: the bit-packed tile metadata rides in params["pq_head"]
+    # ["pruned"] (built once at init), so each decode step reads cached
+    # bounds metadata and compacts survivors in-graph — no per-step
+    # rebuild, no host sync.
     head = {"pqtopk_head": "pqtopk", "dense_head": "dense",
             "onehot_head": "pqtopk_onehot",
             "fused_head": "pqtopk_fused",
+            "pruned_head": "pqtopk_pruned",
             "approx_head": "pqtopk_approx"}.get(variant, "pqtopk")
 
     def decode(p, tok, pos, caches):
@@ -237,15 +239,19 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     method = {"dense_head": "dense", "recjpq_head": "recjpq",
               "onehot_head": "pqtopk_onehot",
               "fused_head": "pqtopk_fused",
-              # In-graph pruned variant (masked, not compacted): the bound
-              # cascade traces into one jittable step; the real two-pass
-              # compaction lives in the serving engine, outside jit.
+              # Single-dispatch pruned cascade: bounds, theta, in-graph
+              # cumsum-scatter compaction and compacted fused scoring all
+              # trace into the one jittable serve step.
               "pruned_head": "pqtopk_pruned",
               "approx_head": "pqtopk_approx",
               "sharded_head": "pqtopk",
               "sharded_head_bm": "pqtopk",
               "sharded_onehot": "pqtopk_onehot",
-              "sharded_fused": "pqtopk_fused"}.get(variant, "pqtopk")
+              "sharded_fused": "pqtopk_fused",
+              # One-shard_map pruned cascade with pmax-shared theta; the
+              # dry-run's abstract state is shards=1, so this cell traces
+              # the in-graph shard-aligned rebuild fallback.
+              "sharded_pruned": "pqtopk_pruned"}.get(variant, "pqtopk")
     sharded = variant.startswith("sharded_")
     serve_b_axes = b_axes
     if variant.endswith("_bm"):

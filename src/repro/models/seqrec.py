@@ -162,8 +162,9 @@ def serve_topk(params: Params, item_seq: jax.Array, cfg: SeqRecConfig, *,
     phi = constrain(sequence_embedding(params, item_seq, cfg), "phi")
     if sharded_mesh is not None:
         vals, ids = retrieval_head.top_items_sharded(
-            params["item_emb"], phi, k, sharded_mesh, method=method)
+            params["item_emb"], phi, k, sharded_mesh, method=method,
+            pq_cfg=cfg.pq)
     else:
         vals, ids = retrieval_head.top_items(params["item_emb"], phi, k,
-                                             method=method)
+                                             method=method, pq_cfg=cfg.pq)
     return ids, vals

@@ -251,11 +251,14 @@ def lm_decode_step(params: Params, token: jax.Array, pos: jax.Array,
         scores = constrain(scores, "scores")
         vals, ids = jax.lax.top_k(scores, k)
     elif head_method in ("pqtopk_fused", "pqtopk_pruned", "pqtopk_approx"):
-        # Fused kernel / in-graph pruned cascade / block-max approx: the
-        # (B, vocab) score matrix is not the route's public activation, so
-        # there is no "scores" constraint to apply.
+        # Fused kernel / single-dispatch pruned cascade / block-max approx:
+        # the (B, vocab) score matrix is not the route's public activation,
+        # so there is no "scores" constraint to apply.  The pruned cascade
+        # reads its bit-packed tile metadata straight from params["pq_head"]
+        # ["pruned"] — built once at init, never rebuilt in the decode loop.
         vals, ids = retrieval_head.top_items(params["pq_head"], phi, k,
-                                             method=head_method)
+                                             method=head_method,
+                                             pq_cfg=cfg.pq_head)
     else:
         scores = retrieval_head.score_all(params["pq_head"], phi, head_method)
         scores = constrain(scores, "scores")

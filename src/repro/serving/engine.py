@@ -81,10 +81,16 @@ class RetrievalEngine:
 
         ``method`` is informational here (the scoring route is baked into
         ``serve_fn``); use :meth:`for_seqrec` to have the engine build the
-        serve function for a named route itself.  ``jit_serve=False`` is
-        for host-orchestrated routes (the cascaded ``pqtopk_pruned``
-        retrieval has a device->host sync between its two passes, so the
-        serve function manages its own jit boundaries).
+        serve function for a named route itself.  Every built-in route —
+        including the single-dispatch ``pqtopk_pruned`` cascade — is a pure
+        traced function, so ``jit_serve=True`` is the norm; pass ``False``
+        only for externally supplied serve functions that manage their own
+        dispatch.
+
+        Compiled serve variants are memoised per ``(batch_bucket, k_bucket,
+        method)`` (AOT ``lower().compile()`` for jitted routes), and the
+        variant count is surfaced as ``stats()["n_compiles"]`` so recompile
+        behaviour is observable and regression-testable.
 
         ``max_k`` caps client-supplied ``Request.k`` — oversized k must not
         reach ``serve_fn`` (the fused kernel rejects k > tile, and any
@@ -95,8 +101,11 @@ class RetrievalEngine:
         derives this bound itself); the default is ``k``, which is always
         safe because ``serve_fn`` must support the engine's own k.
         """
+        self._serve_fn = serve_fn
+        self._jit_serve = jit_serve
         self._fn = (jax.jit(serve_fn, static_argnums=(1,)) if jit_serve
                     else serve_fn)
+        self._compiled: Dict[Tuple[int, int, Optional[str]], Callable] = {}
         self.seq_len = seq_len
         self.k = k
         self.max_k = k if max_k is None else max(max_k, k)
@@ -112,9 +121,10 @@ class RetrievalEngine:
         """Stand up an engine on a seqrec model with an explicit scoring
         route.  ``method=None`` falls back to ``cfg.serve_method`` — the
         production configs default to ``"pqtopk_fused"`` (the Pallas fused
-        score+top-k kernel).  ``method="pqtopk_pruned"`` runs the real
-        two-pass cascade: backbone + bound pass jitted, survivor compaction
-        on host, compacted scoring pass jitted per slot bucket."""
+        score+top-k kernel).  ``method="pqtopk_pruned"`` is the
+        single-dispatch in-graph cascade: backbone, bounds, theta seeding,
+        survivor compaction and compacted scoring all trace into ONE jitted
+        serve function — no host sync anywhere on the serve path."""
         from repro.core import retrieval_head
         from repro.kernels.pqtopk import kernel as pqtopk_kernel
         from repro.models import seqrec as seqrec_lib
@@ -126,22 +136,12 @@ class RetrievalEngine:
         if method in ("pqtopk_fused", "pqtopk_pruned"):
             max_k = min(max_k, pqtopk_kernel.DEFAULT_TILE)
 
-        if method in retrieval_head.HOST_CASCADE_METHODS:
-            phi_fn = jax.jit(
-                lambda seqs: seqrec_lib.sequence_embedding(params, seqs, cfg))
-
-            def serve_fn(seqs, kk):
-                phi = phi_fn(seqs)
-                if sharded_mesh is not None:
-                    vals, ids = retrieval_head.top_items_pruned_sharded(
-                        params["item_emb"], phi, kk, sharded_mesh)
-                else:
-                    vals, ids = retrieval_head.top_items_pruned(
-                        params["item_emb"], phi, kk)
-                return ids, vals
-
-            return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
-                       max_batch=max_batch, method=method, jit_serve=False)
+        if method == "pqtopk_pruned" and sharded_mesh is not None:
+            # Align the pruning-tile layout to the mesh ONCE at engine
+            # build, so the sharded cascade never rebuilds metadata.
+            params = {**params, "item_emb":
+                      retrieval_head.ensure_sharded_pruned_state(
+                          params["item_emb"], sharded_mesh, k_hint=max_k)}
 
         def serve_fn(seqs, kk):
             return seqrec_lib.serve_topk(params, seqs, cfg, k=kk,
@@ -153,6 +153,37 @@ class RetrievalEngine:
 
     def submit(self, req: Request):
         self.batcher.submit(req)
+
+    def _variant(self, bucket: int, kk: int) -> Callable:
+        """Memoised serve variant for one (batch_bucket, k_bucket, method).
+
+        Jitted routes are AOT-lowered and compiled once per key, so
+        ``stats()["n_compiles"]`` counts real compilations — the padding
+        buckets guarantee the key space is O(log(max_batch) * log(max_k)).
+        Returned callables take the (bucketed) sequence batch only.
+        """
+        key = (bucket, kk, self.method)
+        fn = self._compiled.get(key)
+        if fn is None:
+            if self._jit_serve:
+                sds = jax.ShapeDtypeStruct((bucket, self.seq_len), jnp.int32)
+                try:
+                    exe = self._fn.lower(sds, kk).compile()
+                    fn = lambda seqs, _e=exe: _e(seqs)
+                except (jax.errors.TracerArrayConversionError,
+                        jax.errors.TracerBoolConversionError,
+                        jax.errors.ConcretizationTypeError):
+                    # Unlowerable serve fn (caller-supplied closure doing
+                    # host work): fall back to jit's dispatch cache — the
+                    # key still counts one logical compile per variant.
+                    # Genuine compile failures (OOM, lowering bugs) are NOT
+                    # swallowed: they raise here, before any request of the
+                    # batch is half-served, and never inflate n_compiles.
+                    fn = lambda seqs, _k=kk: self._fn(seqs, _k)
+            else:
+                fn = lambda seqs, _k=kk: self._serve_fn(seqs, _k)
+            self._compiled[key] = fn
+        return fn
 
     def run_once(self) -> List[Result]:
         reqs = self.batcher.next_batch()
@@ -172,7 +203,7 @@ class RetrievalEngine:
         # recompiles — same policy as the batch-size padding buckets.
         kk = max(max(min(r.k, self.max_k) for r in reqs), self.k, 1)
         kk = MicroBatcher.bucket(kk, self.max_k)
-        ids, scores = self._fn(jnp.asarray(seqs), kk)
+        ids, scores = self._variant(bucket, kk)(jnp.asarray(seqs))
         ids, scores = np.asarray(ids), np.asarray(scores)
         now = time.monotonic()
         out = []
@@ -199,6 +230,7 @@ class RetrievalEngine:
             "mRT_ms": float(np.median(lat)),
             "p99_ms": float(np.percentile(lat, 99)),
             "timeouts": float(self.timeouts),
+            "n_compiles": float(len(self._compiled)),
         }
 
 

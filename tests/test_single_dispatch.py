@@ -1,0 +1,448 @@
+"""Single-dispatch in-graph pruned cascade (PR 3): bit-exact parity of the
+in-graph cascade vs the host two-pass cascade vs the exhaustive oracle
+across the acceptance matrix (odd N, b in {64, 256}, int8/uint8/int32
+codes, B in {1, 8, 200}), under jit, inside ``lm_decode_step``, and sharded
+with pmax-shared theta — plus the bit-packed presence metadata (pack/unpack
+round trip, 8x footprint, packed-vs-bool bound parity), the in-graph
+cumsum-scatter compaction, adaptive theta seeding, the ``-1`` sentinel slot
+contract of the fused kernel, and the engine's memoised compiled variants
+(``stats()["n_compiles"]``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import PQConfig
+from repro.core import pruning, retrieval_head, scoring, topk as topk_lib
+from repro.kernels.pqtopk import ops as pq_ops
+from repro.serving.engine import Request, RetrievalEngine
+
+
+def _oracle(codes, s, k):
+    r = scoring.score_pqtopk(codes.astype(jnp.int32), s)
+    return topk_lib.tiled_topk(r, k)
+
+
+def _make_case(n, m, b, bq, *, code_dtype=jnp.int32, clustered=False,
+               skewed=False, seed=0):
+    rng = np.random.default_rng(seed)
+    if clustered:
+        centers = (np.arange(n) / n * b).astype(np.int64)
+        codes_np = (centers[:, None] + rng.integers(-1, 2, (n, m))) % b
+    else:
+        codes_np = rng.integers(0, b, (n, m))
+    codes = jnp.asarray(codes_np, code_dtype)
+    g = rng.standard_normal((bq, m, b))
+    if skewed:
+        g = np.sign(g) * np.abs(g) ** 3
+    s = jnp.asarray(g, jnp.float32)
+    return codes, s
+
+
+# ---------------------------------------------------------------------------
+# bit-packed presence metadata
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", [16, 32, 33, 64, 100, 256])
+def test_pack_unpack_roundtrip(b):
+    rng = np.random.default_rng(b)
+    present = jnp.asarray(rng.random((7, 3, b)) < 0.3)
+    packed = pruning.pack_presence(present)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (7, 3, -(-b // 32))
+    np.testing.assert_array_equal(
+        np.asarray(pruning.unpack_presence(packed, b)), np.asarray(present))
+
+
+def test_pack_unpack_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 80),
+           st.integers(0, 2 ** 31 - 1))
+    def roundtrip(t, m, b, seed):
+        rng = np.random.default_rng(seed)
+        present = jnp.asarray(rng.random((t, m, b)) < 0.5)
+        out = pruning.unpack_presence(pruning.pack_presence(present), b)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(present))
+
+    roundtrip()
+
+
+def test_packed_bounds_match_bool_bounds_bitwise():
+    codes, s = _make_case(3000, 4, 100, 5, seed=1)
+    meta = pruning.build_tile_metadata(codes, 100, 256)
+    packed = pruning.pack_presence(meta.present)
+    b1 = pruning.tile_upper_bounds(meta.present, s)
+    b2 = pruning.tile_upper_bounds_packed(packed, s)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_state_footprint_is_eighth_of_pr2():
+    codes, _ = _make_case(1 << 14, 8, 256, 1)
+    state = pruning.build_pruned_state(codes, 256, 1024)
+    assert state.nbytes * 8 == state.bool_nbytes
+    assert state.packed.nbytes == state.nbytes
+
+
+def test_state_is_a_pytree_in_head_params():
+    """The metadata rides in the param tree: flattenable, abstract-able,
+    and an integer (frozen) leaf to the optimizer."""
+    params = retrieval_head.init(jax.random.PRNGKey(0), 500, 32,
+                                 PQConfig(m=4, b=16))
+    state = params["pruned"]
+    assert isinstance(state, pruning.PrunedHeadState)
+    leaves = jax.tree.leaves(params)
+    assert any(leaf.dtype == jnp.uint32 for leaf in leaves)
+    abs_params = retrieval_head.abstract(500, 32, PQConfig(m=4, b=16))
+    assert (jax.tree.structure(abs_params) == jax.tree.structure(params))
+    assert abs_params["pruned"].packed.shape == state.packed.shape
+
+
+# ---------------------------------------------------------------------------
+# in-graph compaction
+# ---------------------------------------------------------------------------
+
+def test_compact_mask_orders_and_pads():
+    mask = jnp.asarray([False, True, False, True, True, False])
+    slots, count = pruning.compact_mask(mask)
+    np.testing.assert_array_equal(np.asarray(slots), [1, 3, 4, -1, -1, -1])
+    assert int(count) == 3
+    slots, count = pruning.compact_mask(mask, 2)       # over budget: dropped
+    np.testing.assert_array_equal(np.asarray(slots), [1, 3])
+    assert int(count) == 3                             # count stays honest
+
+
+def test_compact_mask_empty_and_full():
+    slots, count = pruning.compact_mask(jnp.zeros(4, bool))
+    np.testing.assert_array_equal(np.asarray(slots), [-1, -1, -1, -1])
+    assert int(count) == 0
+    slots, count = pruning.compact_mask(jnp.ones(4, bool))
+    np.testing.assert_array_equal(np.asarray(slots), [0, 1, 2, 3])
+    assert int(count) == 4
+
+
+# ---------------------------------------------------------------------------
+# cascade parity: in-graph vs host vs oracle, the PR 2 acceptance matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bq", [1, 8, 200])
+@pytest.mark.parametrize("n,b,dtype", [
+    (999, 64, jnp.int8),       # odd N, int8 codes
+    (1021, 256, jnp.uint8),    # prime N, uint8 codes (b=256 > int8 range)
+    (2048, 64, jnp.int32),     # exact tiling, int32 fallback
+    (3001, 256, jnp.int32),
+])
+def test_ingraph_matches_host_and_oracle(n, b, dtype, bq):
+    m = 4
+    codes, s = _make_case(n, m, b, bq, code_dtype=dtype, seed=n + bq)
+    k = 10
+    v_ref, i_ref = _oracle(codes, s, k)
+    v_host, i_host = pruning.cascade_topk(codes, s, k, tile=256)
+    state = pruning.build_pruned_state(codes, b, 256)
+    v, i = pruning.cascade_topk_ingraph(codes, s, k, state)
+    for vv, ii in ((v_host, i_host), (v, i)):
+        np.testing.assert_array_equal(np.asarray(vv), np.asarray(v_ref))
+        np.testing.assert_array_equal(np.asarray(ii), np.asarray(i_ref))
+
+
+def test_ingraph_cascade_under_jit_with_threaded_state():
+    """The serving shape: params built once, the whole route jitted."""
+    params, phi = _pq_head(4097, bq=8)
+    k = 9
+    v_ref, i_ref = retrieval_head.top_items(params, phi, k, method="pqtopk")
+    fn = jax.jit(lambda p, x: retrieval_head.top_items(
+        p, x, k, method="pqtopk_pruned"))
+    v, i = fn(params, phi)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+def test_ingraph_cascade_actually_prunes_and_stays_exact():
+    codes, s = _make_case(1 << 14, 8, 256, 2, clustered=True, skewed=True)
+    k = 10
+    v_ref, i_ref = _oracle(codes, s, k)
+    state = pruning.build_pruned_state(codes, 256, 512)
+    v, i, stats = pruning.cascade_topk_ingraph(codes, s, k, state,
+                                               return_stats=True)
+    assert float(stats["survival_fraction"]) < 1.0
+    assert int(stats["n_survived"]) < int(stats["n_tiles"])
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+@pytest.mark.parametrize("budget", [1, 3, 64])
+def test_slot_budget_overflow_cond_keeps_exactness(budget):
+    """Uniform codes -> survival 1.0 -> every budget below T overflows; the
+    in-graph lax.cond must fall back to the exhaustive buffer, bit-exact."""
+    codes, s = _make_case(5000, 4, 64, 3, seed=11)
+    k = 7
+    v_ref, i_ref = _oracle(codes, s, k)
+    state = pruning.build_pruned_state(codes, 64, 512)
+    v, i, stats = pruning.cascade_topk_ingraph(
+        codes, s, k, state, slot_budget=budget, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    assert bool(stats["slot_overflow"]) == (int(stats["n_survived"]) > budget)
+
+
+def test_slot_budget_prunes_when_skewed():
+    """Favourable regime + budget: the compacted branch is taken (no
+    overflow) and the result stays exact."""
+    codes, s = _make_case(1 << 14, 8, 256, 1, clustered=True, skewed=True,
+                          seed=3)
+    k = 10
+    v_ref, i_ref = _oracle(codes, s, k)
+    state = pruning.build_pruned_state(codes, 256, 512)
+    v, i, stats = pruning.cascade_topk_ingraph(
+        codes, s, k, state, slot_budget=16, return_stats=True)
+    assert not bool(stats["slot_overflow"])
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+def test_ingraph_ties_broken_by_lowest_id():
+    n, m, b = 700, 2, 8
+    codes = jnp.zeros((n, m), jnp.int32)
+    s = jax.random.normal(jax.random.PRNGKey(0), (2, m, b), jnp.float32)
+    v_ref, i_ref = _oracle(codes, s, 5)
+    state = pruning.build_pruned_state(codes, b, 128)
+    v, i = pruning.cascade_topk_ingraph(codes, s, 5, state)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    assert (np.asarray(i) == np.arange(5)[None, :]).all()
+
+
+# ---------------------------------------------------------------------------
+# adaptive theta seeding
+# ---------------------------------------------------------------------------
+
+def test_seed_schedule():
+    assert pruning.seed_schedule("greedy", 2, 16, 10, 512, 100) == (2,)
+    assert pruning.seed_schedule("adaptive", 2, 16, 10, 512, 100) == \
+        (2, 4, 8, 16)
+    # floor: enough seed tiles to hold k
+    assert pruning.seed_schedule("greedy", 1, 16, 1000, 256, 100)[0] == 4
+    # clamped to the tile count
+    assert pruning.seed_schedule("adaptive", 2, 16, 10, 512, 3) == (2, 3)
+
+
+def test_adaptive_policy_exact_and_reports_seed_size():
+    codes, s = _make_case(1 << 13, 4, 64, 2, clustered=True, skewed=True,
+                          seed=7)
+    k = 10
+    v_ref, i_ref = _oracle(codes, s, k)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    v, i, stats = pruning.cascade_topk_ingraph(
+        codes, s, k, state, seed_policy="adaptive", seed_tiles=2,
+        seed_max_tiles=16, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    assert 2 <= int(stats["n_seed_used"]) <= 16
+    assert 0.0 <= float(stats["seed_survival_est"]) <= 1.0
+
+
+def test_adaptive_theta_at_least_as_tight_as_greedy():
+    """More seeds can only raise (tighten) theta — never loosen it."""
+    codes, s = _make_case(1 << 13, 4, 64, 3, clustered=True, skewed=True,
+                          seed=9)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    bounds = pruning.tile_upper_bounds_packed(state.packed, s)
+    tg, _, _ = pruning.theta_seed_ingraph(
+        codes, s, bounds, 10, tile=256, seed_policy="greedy", seed_tiles=2)
+    ta, used, _ = pruning.theta_seed_ingraph(
+        codes, s, bounds, 10, tile=256, seed_policy="adaptive", seed_tiles=2,
+        seed_max_tiles=16, seed_stab_tol=1e-9)   # tol ~0 -> grows to max
+    assert (np.asarray(ta) >= np.asarray(tg)).all()
+    assert int(used) == 16
+
+
+def test_pqconfig_seed_policy_validation():
+    PQConfig(seed_policy="adaptive", seed_tiles=4, seed_max_tiles=32)
+    with pytest.raises(ValueError, match="seed_policy"):
+        PQConfig(seed_policy="eager")
+    with pytest.raises(ValueError, match="seed_tiles"):
+        PQConfig(seed_tiles=8, seed_max_tiles=4)
+    with pytest.raises(ValueError, match="seed_stab_tol"):
+        PQConfig(seed_stab_tol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# -1 sentinel slots through the compacted scoring entry
+# ---------------------------------------------------------------------------
+
+def test_pq_topk_tiles_negative_sentinels():
+    """A -1-padded compacted list must match the oracle on both the Pallas
+    kernel path (@pl.when early-exit) and the XLA path (sentinel remap)."""
+    n, m, b, tile, k = 1000, 4, 16, 256, 5
+    codes, s = _make_case(n, m, b, 2, seed=9)
+    v_ref, i_ref = _oracle(codes, s, k)
+    t = pq_ops.n_tiles(n, tile)
+    idx = np.full(8, -1, np.int32)
+    idx[:t] = np.arange(t)
+    for uk in (False, True):
+        v, i = pq_ops.pq_topk_tiles(codes, s, k, jnp.asarray(idx), tile=tile,
+                                    use_kernel=uk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+def test_kernel_path_ingraph_cascade_end_to_end():
+    codes, s = _make_case(3000, 4, 64, 3, code_dtype=jnp.int8,
+                          clustered=True, skewed=True, seed=5)
+    k = 7
+    v_ref, i_ref = _oracle(codes, s, k)
+    state = pruning.build_pruned_state(codes, 64, 512)
+    v, i = pruning.cascade_topk_ingraph(codes, s, k, state, use_kernel=True,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+# ---------------------------------------------------------------------------
+# decode loop + sharded
+# ---------------------------------------------------------------------------
+
+def _pq_head(n, d=32, m=4, b=16, bq=3, seed=0, code_dtype="int32"):
+    params = retrieval_head.init(jax.random.PRNGKey(seed), n, d,
+                                 PQConfig(m=m, b=b, code_dtype=code_dtype))
+    phi = jax.random.normal(jax.random.PRNGKey(seed + 1), (bq, d))
+    return params, phi
+
+
+def test_pruned_head_inside_lm_decode_step():
+    """The cascade runs inside a jitted decode step off the cached
+    metadata in params["pq_head"]["pruned"] — same winners as pqtopk."""
+    from repro.configs.base import get_reduced as _gr
+    from repro.models import transformer as T
+    arch = _gr("qwen2.5-14b")
+    cfg = arch.model
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    assert isinstance(params["pq_head"]["pruned"], pruning.PrunedHeadState)
+    caches = T.init_caches(cfg, 2, 16)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    pos = jnp.int32(0)
+    outs = {}
+    for meth in ("pqtopk", "pqtopk_pruned"):
+        step = jax.jit(lambda p, t_, c, m_=meth: T.lm_decode_step(
+            p, t_, pos, c, cfg, k=8, head_method=m_))
+        ids, vals, _ = step(params, tok, caches)
+        outs[meth] = (np.asarray(ids), np.asarray(vals))
+    np.testing.assert_array_equal(outs["pqtopk_pruned"][0],
+                                  outs["pqtopk"][0])
+    np.testing.assert_array_equal(outs["pqtopk_pruned"][1],
+                                  outs["pqtopk"][1])
+
+
+@pytest.mark.parametrize("n", [128, 1013])   # odd N -> padding tail
+def test_sharded_single_shardmap_matches_plain(n):
+    mesh = jax.make_mesh((1,), ("model",))
+    params, phi = _pq_head(n, d=16, m=4, b=8, bq=2, code_dtype="uint8")
+    v1, i1 = retrieval_head.top_items(params, phi, 7, method="pqtopk")
+    v2, i2 = retrieval_head.top_items_sharded(params, phi, 7, mesh,
+                                              method="pqtopk_pruned")
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert (np.asarray(i2) < n).all()
+
+
+def test_sharded_pruned_is_jittable_with_aligned_state():
+    """The whole sharded cascade (pmax theta inside ONE shard_map) traces
+    into a single jitted computation — the PR 2 host compaction could not."""
+    mesh = jax.make_mesh((1,), ("model",))
+    params, phi = _pq_head(1013, d=16, m=4, b=8, bq=2)
+    params = retrieval_head.ensure_sharded_pruned_state(params, mesh,
+                                                        k_hint=7)
+    assert params["pruned"].shards == 1
+    fn = jax.jit(lambda p, x: retrieval_head.top_items_pruned_sharded(
+        p, x, 7, mesh))
+    v2, i2 = fn(params, phi)
+    v1, i1 = retrieval_head.top_items(params, phi, 7, method="pqtopk")
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_ensure_sharded_state_is_idempotent():
+    mesh = jax.make_mesh((1,), ("model",))
+    params, _ = _pq_head(1000)
+    p1 = retrieval_head.ensure_sharded_pruned_state(params, mesh, k_hint=7)
+    p2 = retrieval_head.ensure_sharded_pruned_state(p1, mesh, k_hint=7)
+    assert p2["pruned"] is p1["pruned"]
+
+
+def test_flat_route_rejects_or_rebuilds_sharded_state():
+    """A shard-aligned state tiles per shard; the flat cascade must never
+    misread it (silent inexactness) — cascade_topk_ingraph rejects it, and
+    top_items falls back to an in-graph shards=1 rebuild, staying exact."""
+    codes, s = _make_case(1000, 4, 16, 2, seed=13)
+    sharded = pruning.build_pruned_state(codes, 16, 300, shards=2)
+    assert sharded.shards == 2
+    with pytest.raises(ValueError, match="shards=1"):
+        pruning.cascade_topk_ingraph(codes, s, 5, sharded)
+    params, phi = _pq_head(1000, m=4, b=16)
+    params["pruned"] = pruning.build_pruned_state(
+        params["codes"], 16, 300, shards=2)
+    v_ref, i_ref = retrieval_head.top_items(params, phi, 5, method="pqtopk")
+    v, i = retrieval_head.top_items(params, phi, 5, method="pqtopk_pruned")
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+def test_sharded_explicit_seed_tiles_beats_pq_cfg():
+    """The explicit seed_tiles argument must win over PQConfig knobs."""
+    mesh = jax.make_mesh((1,), ("model",))
+    params, phi = _pq_head(1 << 14, m=4, b=8)    # 8 tiles at tile=2048
+    cfg = PQConfig(m=4, b=8, seed_tiles=1, seed_max_tiles=1)
+    _, _, stats = retrieval_head.top_items_pruned_sharded(
+        params, phi, 5, mesh, seed_tiles=3, pq_cfg=cfg, return_stats=True)
+    assert int(stats["n_seed_used"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# engine: memoised compiled variants, observable recompiles
+# ---------------------------------------------------------------------------
+
+def _engine(method, k=5):
+    from repro.models import seqrec as S
+    cfg = get_reduced("sasrec-recjpq").model
+    params = S.init_seqrec(jax.random.PRNGKey(0), cfg)
+    return RetrievalEngine.for_seqrec(params, cfg, k=k, max_batch=8,
+                                      method=method), cfg
+
+
+def test_engine_memoises_compiled_variants():
+    rng = np.random.default_rng(0)
+    eng, _ = _engine("pqtopk_pruned", k=2)
+    assert eng.stats()["n_compiles"] == 0
+    for i in range(3):                       # same (bucket=1, k=2) variant
+        eng.submit(Request(i, rng.integers(1, 1000, 6), k=2))
+        eng.run_once()
+    assert eng.stats()["n_compiles"] == 1
+    eng.submit(Request(10, rng.integers(1, 1000, 6), k=7))  # new k bucket
+    eng.run_once()
+    assert eng.stats()["n_compiles"] == 2
+    for i in range(4):                       # new batch bucket (4), k=2
+        eng.submit(Request(20 + i, rng.integers(1, 1000, 6), k=2))
+    eng.run_once()
+    assert eng.stats()["n_compiles"] == 3
+    for i in range(4):                       # repeat: fully memoised
+        eng.submit(Request(30 + i, rng.integers(1, 1000, 6), k=2))
+    eng.run_once()
+    assert eng.stats()["n_compiles"] == 3
+
+
+def test_engine_pruned_single_dispatch_matches_pqtopk():
+    rng = np.random.default_rng(1)
+    seqs = [rng.integers(1, 1000, 8) for _ in range(4)]
+    results = {}
+    for method in ("pqtopk", "pqtopk_pruned"):
+        eng, _ = _engine(method)
+        for i, sq in enumerate(seqs):
+            eng.submit(Request(i, sq, k=5))
+        results[method] = {r.request_id: r for r in eng.drain()}
+    for i in range(4):
+        np.testing.assert_array_equal(results["pqtopk_pruned"][i].items,
+                                      results["pqtopk"][i].items)
+        np.testing.assert_array_equal(results["pqtopk_pruned"][i].scores,
+                                      results["pqtopk"][i].scores)
