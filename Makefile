@@ -1,7 +1,12 @@
-.PHONY: test bench serve
+.PHONY: test test-fast bench serve
 
 test:
 	bash scripts/ci.sh
+
+# Fast tier only: everything not marked slow / sharded / hypothesis
+# (markers registered in pytest.ini).  The full matrix runs in `make test`.
+test-fast:
+	PYTHONPATH=src python -m pytest -q -m "not slow and not sharded and not hypothesis"
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

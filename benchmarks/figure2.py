@@ -78,6 +78,12 @@ def bench_point(n_items: int, m: int, b: int = 256, *, repeats: int = 5,
             t = time_fn(lambda: fn(codes, s), repeats=repeats)
             t["survival_fraction"] = float(stats["survival_fraction"])
             t["n_seed_used"] = int(stats["n_seed_used"])
+            # Self-describing pruned-row tags (BENCH trend comparisons):
+            # figure2 times the full-buffer cascade — no ladder, so the
+            # rung-hit fraction is vacuously 0 on a 1-rung ladder.
+            t["bound_backend"] = state.backend
+            t["ladder"] = None
+            t["rung_hit_fraction"] = None
             out[method] = t
         else:
             alg = {"recjpq": scoring.score_recjpq,
@@ -102,7 +108,8 @@ def run(full: bool = False, repeats: int = 5):
                     "scoring_ms": None if t is None
                     else t["median_s"] * 1e3,
                 }
-                for tag in ("survival_fraction", "n_seed_used", "interpret"):
+                for tag in ("survival_fraction", "n_seed_used", "interpret",
+                            "bound_backend", "ladder", "rung_hit_fraction"):
                     if t and tag in t:
                         row[tag] = t[tag]
                 rows.append(row)

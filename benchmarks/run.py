@@ -7,10 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 pruned-vs-exhaustive retrieval sweep on skewed data
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr3.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr4.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
-fraction + seed size for the pruned route, interpret-mode markers, ...).
+fraction + seed size + bound backend + ladder / rung-hit fraction for the
+pruned route, interpret-mode markers, ...).
 Rows measured through the Pallas interpreter (``"interpret": true``) time
 the emulator, not the kernel — their ``items_per_s`` is null so they can
 never enter throughput trend comparisons (see README §Benchmarks).
@@ -30,7 +31,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr3.json",
+    ap.add_argument("--json", default="BENCH_pr4.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -78,6 +79,11 @@ def main(argv=None) -> None:
                 derived = f"survival={r['survival_fraction']:.3f}"
             if "n_seed_used" in r:
                 tags["n_seed_used"] = r["n_seed_used"]
+            # Pruned rows are self-describing: backend + ladder + rung-hit
+            # fraction travel with every row (None = no ladder in play).
+            for tag in ("bound_backend", "ladder", "rung_hit_fraction"):
+                if tag in r:
+                    tags[tag] = r[tag]
             # Interpret-mode rows time the Pallas emulator, not the kernel
             # (the PR 2 figure2/m8/n10000/pqtopk_fused "anomaly" — 108 ms vs
             # 0.57 ms plain pqtopk, a 200x artefact of interpretation):
@@ -170,36 +176,123 @@ def main(argv=None) -> None:
               method="pqtopk_fused", items_per_s=n_sk / t["median_s"],
               tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
                     "lowering": "pallas" if compat.on_tpu() else "xla"})
-        # Single-dispatch in-graph cascade (adaptive theta seeding, slot
-        # budget sized ~16x the expected survivor count; the in-graph
-        # lax.cond falls back to the exhaustive buffer on overflow so the
-        # route stays exact at any skew).
-        state = pruning.build_pruned_state(codes_sk, b, tile_sk)
-        budget = 64
-        fn_pr = jax.jit(lambda c_, s_: pruning.cascade_topk_ingraph(
-            c_, s_, k, state, seed_policy="adaptive", slot_budget=budget))
-        _, _, stats = pruning.cascade_topk_ingraph(
-            codes_sk, s_sk, k, state, seed_policy="adaptive",
-            slot_budget=budget, return_stats=True)
-        stats = {kk: vv.item() if hasattr(vv, "item") else vv
-                 for kk, vv in stats.items()}
-        t = time_fn(lambda: fn_pr(codes_sk, s_sk), repeats=args.repeats)
-        _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk_pruned",
-              t["median_s"] * 1e6,
-              f"items_per_s={n_sk / t['median_s']:.3e};"
-              f"survival={stats['survival_fraction']:.4f};"
-              f"tiles={stats['n_survived']}/{stats['n_tiles']};"
-              f"seed={stats['n_seed_used']}",
-              method="pqtopk_pruned", items_per_s=n_sk / t["median_s"],
-              tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
-                    "survival_fraction": stats["survival_fraction"],
-                    "n_survived": stats["n_survived"],
-                    "n_tiles": stats["n_tiles"],
-                    "n_seed_used": stats["n_seed_used"],
-                    "seed_policy": "adaptive", "slot_budget": budget,
-                    "dispatches_per_query": 1,
-                    "meta_bytes_packed": state.nbytes,
-                    "meta_bytes_bool_pr2": state.bool_nbytes})
+        # Bound-backend comparison sweep: the single-dispatch in-graph
+        # cascade (adaptive theta seeding, CALIBRATED slot-budget ladder)
+        # for both metadata backends at N=2^20 skewed, on two code
+        # layouts: "wrap" (the legacy `% b` synthetic — its handful of
+        # full-span wrap tiles are the range backend's worst case: the
+        # convex hull of {0, .., b-1} is everything, bounds go loose and
+        # theta seeding wastes its budget there) and "clip" (clipped
+        # clustered codes — RecJPQ's popularity-ordered assignment never
+        # wraps, the regime the range backend targets).  Per (layout,
+        # backend): metadata bytes, bound tightness (survival fraction),
+        # items/s through the ladder, and the rung-hit fraction over a
+        # stream of fresh query batches with a per-batch exactness check
+        # against the exhaustive oracle (zero correctness loss, counted).
+        def fresh_s(i):
+            gg = np.random.default_rng(1000 + i).standard_normal((1, m, b))
+            return jnp.asarray(np.sign(gg) * np.abs(gg) ** 3, jnp.float32)
+
+        codes_clip = jnp.asarray(
+            np.clip(centers[:, None] + rng.integers(-1, 2, (n_sk, m)),
+                    0, b - 1), jnp.int32)
+        n_cal, n_stream = 5, 12
+        for layout, codes_l in (("wrap", codes_sk), ("clip", codes_clip)):
+            fn_ex_l = jax.jit(lambda c_, s_: topk_lib.tiled_topk(
+                scoring.score_pqtopk(c_, s_), k))
+            backend_rows = {}
+            suffix = "" if layout == "wrap" else "_clip"
+            for backend in pruning.BOUND_BACKENDS:
+                state = pruning.build_pruned_state(codes_l, b, tile_sk,
+                                                   backend=backend)
+                count_fn = jax.jit(
+                    lambda s_, c_=codes_l, st_=state: pruning.survival_count(
+                        c_, s_, k, st_, seed_policy="adaptive"))
+                counts = [int(count_fn(fresh_s(i))) for i in range(n_cal)]
+                ladder = pruning.calibrate_ladder(counts, state.n_tiles, k,
+                                                  state.tile)
+
+                # One jitted variant returning the rung alongside the
+                # winners (same trick as the serve path) — the stream
+                # below scores each batch exactly once.
+                def _pr(c_, s_, st_=state, ld_=ladder):
+                    v_, i_, stats_ = pruning.cascade_topk_ingraph(
+                        c_, s_, k, st_, seed_policy="adaptive",
+                        ladder=ld_, return_stats=True)
+                    return v_, i_, stats_["rung_hit"]
+
+                fn_pr = jax.jit(_pr)
+                n_rungs = len(ladder)       # calibrate_ladder output is
+                hits = mismatches = 0       # already normalized
+                for i in range(n_stream):
+                    s_i = fresh_s(n_cal + i)
+                    v_pr, i_pr, rung_i = fn_pr(codes_l, s_i)
+                    hits += int(int(rung_i) < n_rungs - 1)
+                    v_ex, i_ex = fn_ex_l(codes_l, s_i)
+                    mismatches += int(
+                        not (np.array_equal(np.asarray(v_pr),
+                                            np.asarray(v_ex))
+                             and np.array_equal(np.asarray(i_pr),
+                                                np.asarray(i_ex))))
+                _, _, stats = pruning.cascade_topk_ingraph(
+                    codes_l, s_sk, k, state, seed_policy="adaptive",
+                    ladder=ladder, return_stats=True)
+                stats = {kk: vv.item() if hasattr(vv, "item") else vv
+                         for kk, vv in stats.items()}
+                t = time_fn(lambda: fn_pr(codes_l, s_sk),
+                            repeats=args.repeats)
+                backend_rows[backend] = (stats, state)
+                _emit("kernel",
+                      f"kernel/pq_retrieval_1m_skewed/"
+                      f"pqtopk_pruned_{backend}{suffix}",
+                      t["median_s"] * 1e6,
+                      f"items_per_s={n_sk / t['median_s']:.3e};"
+                      f"survival={stats['survival_fraction']:.4f};"
+                      f"meta_bytes={state.nbytes};ladder={ladder};"
+                      f"rung_hit={hits}/{n_stream};"
+                      f"mismatches={mismatches}",
+                      method="pqtopk_pruned",
+                      items_per_s=n_sk / t["median_s"],
+                      tags={"n_items": n_sk, "skewed": True,
+                            "tile": tile_sk, "code_layout": layout,
+                            "bound_backend": backend,
+                            "survival_fraction":
+                                stats["survival_fraction"],
+                            "n_survived": stats["n_survived"],
+                            "n_tiles": stats["n_tiles"],
+                            "n_seed_used": stats["n_seed_used"],
+                            "seed_policy": "adaptive",
+                            "ladder": list(ladder),
+                            "rung_hit_fraction": hits / n_stream,
+                            "exactness_mismatches": mismatches,
+                            "stream_batches": n_stream,
+                            "dispatches_per_query": 1,
+                            "meta_bytes": state.nbytes,
+                            "meta_bytes_bool_pr2": state.bool_nbytes})
+            # Headline deltas per layout: metadata footprint ratio and
+            # bound-tightness loss (range survival - bitmask survival).
+            st_bm, meta_bm = backend_rows["bitmask"]
+            st_rg, meta_rg = backend_rows["range"]
+            _emit("kernel",
+                  f"kernel/pq_retrieval_1m_skewed/backend_delta{suffix}",
+                  None,
+                  f"meta_ratio={meta_rg.nbytes / meta_bm.nbytes:.3f};"
+                  f"survival_delta="
+                  f"{st_rg['survival_fraction'] - st_bm['survival_fraction']:.4f}",
+                  method="backend_delta",
+                  tags={"n_items": n_sk, "skewed": True,
+                        "code_layout": layout,
+                        "meta_bytes_bitmask": meta_bm.nbytes,
+                        "meta_bytes_range": meta_rg.nbytes,
+                        "meta_ratio_range_over_bitmask":
+                            meta_rg.nbytes / meta_bm.nbytes,
+                        "survival_fraction_bitmask":
+                            st_bm["survival_fraction"],
+                        "survival_fraction_range":
+                            st_rg["survival_fraction"],
+                        "survival_fraction_delta":
+                            st_rg["survival_fraction"]
+                            - st_bm["survival_fraction"]})
         t = time_fn(lambda: pruning.cascade_topk(codes_sk, s_sk, k,
                                                  tile=tile_sk),
                     repeats=args.repeats)
@@ -208,6 +301,8 @@ def main(argv=None) -> None:
               f"items_per_s={n_sk / t['median_s']:.3e};host-two-pass",
               method="pqtopk_pruned_host", items_per_s=n_sk / t["median_s"],
               tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
+                    "bound_backend": "bitmask", "ladder": None,
+                    "rung_hit_fraction": None,
                     "dispatches_per_query": 2})
 
     if "roofline" not in args.skip:
@@ -233,7 +328,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 3,
+            "pr": 4,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

@@ -36,12 +36,32 @@ def main() -> int:
     from repro.models import seqrec as seqrec_lib
     from repro.serving.engine import Request, RetrievalEngine
 
-    cfg = get_reduced("sasrec-recjpq").model
-    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg)
+    from dataclasses import replace
+
+    # A catalogue large enough for several pruning tiles, with position-
+    # clustered codes (the favourable regime: tiles get distinct bounds),
+    # so build-time calibration produces a genuine multi-rung ladder and
+    # the dispatch-count proof covers the nested lax.cond rung chain.
+    cfg = replace(get_reduced("sasrec-recjpq").model, n_items=16384)
+    rng0 = np.random.default_rng(7)
+    centers = (np.arange(cfg.n_items + 1) / (cfg.n_items + 1)
+               * cfg.pq.b).astype(np.int64)
+    codes = jnp.asarray(
+        (centers[:, None] + rng0.integers(-1, 2, (cfg.n_items + 1,
+                                                  cfg.pq.m))) % cfg.pq.b,
+        jnp.int32)
+    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg, codes=codes)
     k = 5
     eng = RetrievalEngine.for_seqrec(params, cfg, k=k, max_batch=8,
                                      method="pqtopk_pruned")
     assert eng._jit_serve, "pruned route must be a jitted serve fn"
+    # The calibrated slot-budget ladder must be active: the single-
+    # dispatch guarantee has to hold WITH the nested lax.cond rung chain
+    # in the trace (every rung is a branch of the same computation).
+    assert eng.ladder is not None and len(eng.ladder) >= 2, (
+        f"expected a calibrated ladder on the pruned engine, got "
+        f"{eng.ladder!r}")
+    print(f"calibrated ladder active: {eng.ladder}")
 
     # 1. single-jaxpr traceability
     sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
@@ -85,10 +105,13 @@ def main() -> int:
     assert len(calls) == 1, (
         f"pruned route issued {len(calls)} dispatches per query batch "
         f"(expected exactly 1): {calls}")
+    stats = eng.stats()
     print(f"single dispatch: 1 compiled call per batch {calls[0]}, "
           f"transfer guard clean, "
-          f"n_compiles={int(eng.stats()['n_compiles'])}")
-    print("OK: pqtopk_pruned serve path is a single in-graph dispatch")
+          f"n_compiles={int(stats['n_compiles'])}, "
+          f"rung_counts={stats['rung_counts']}")
+    print("OK: pqtopk_pruned serve path is a single in-graph dispatch "
+          "(calibrated ladder enabled)")
     return 0
 
 

@@ -1,30 +1,50 @@
 #!/usr/bin/env bash
 # Tier-1 CI entrypoint: install dev deps (best-effort — offline containers
-# rely on the importorskip guards), then run the suite.  pytest exits
-# non-zero on collection errors, so a broken import fails CI rather than
-# silently shrinking the suite.
+# rely on the importorskip guards), then run the suite in two tiers (fast
+# first, the marked matrix second), guard against silent test deletion,
+# prove the single-dispatch property, and smoke the benchmarks.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 if ! python -c "import hypothesis" 2>/dev/null; then
     pip install -r requirements-dev.txt 2>/dev/null \
-        || echo "WARN: could not install dev deps; property tests will skip"
+        || echo "WARN: could not install dev deps; property tests fall back to deterministic grids / skip"
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q "$@"
+
+# Anti-test-deletion guard: the collected count must never drop below the
+# previous tier-1 baseline (bump this when a PR adds tests; a drop means a
+# test file stopped importing or someone deleted coverage).  pytest also
+# exits non-zero on collection errors, so a broken import fails CI rather
+# than silently shrinking the suite.
+TIER1_BASELINE=244
+collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
+            | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
+if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
+    echo "FAIL: collected ${collected} tests < tier-1 baseline ${TIER1_BASELINE}" >&2
+    exit 1
+fi
+echo "collected ${collected} tests (baseline ${TIER1_BASELINE})"
+
+# Fast tier first (quick signal), then the full marked matrix (slow /
+# sharded / hypothesis) — together they cover the whole suite exactly once.
+python -m pytest -x -q -m "not slow and not sharded and not hypothesis" "$@"
+python -m pytest -x -q -m "slow or sharded or hypothesis" "$@"
 
 # The pruned serve route must be ONE device dispatch per query batch
 # (single-jaxpr trace + compiled-call counting + a negative control on the
-# legacy host cascade) — the structural guarantee behind the PR 3 cascade.
+# legacy host cascade) — now with the calibrated slot-budget ladder
+# enabled, so the nested lax.cond rung chain is part of the proof.
 python scripts/check_single_dispatch.py
 
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
-# single-dispatch pruned cascade, figure2 sweep) end to end so kernel-path
-# breakage surfaces in CI, not just in unit tests, and refreshes the
-# machine-readable BENCH_pr3.json (pruned-vs-exhaustive sweep at N=2^20
-# with survival-fraction and seed-size tags).  table3/roofline stay out
-# (slow dataset builds / artifact-dependent).
+# single-dispatch pruned cascade, bound-backend comparison sweep, figure2)
+# end to end so kernel-path breakage surfaces in CI, not just in unit
+# tests, and refreshes the machine-readable BENCH_pr4.json (pruned-vs-
+# exhaustive + bitmask-vs-range sweeps at N=2^20 with survival-fraction,
+# ladder and metadata-footprint tags).  table3/roofline stay out (slow
+# dataset builds / artifact-dependent).
 python -m benchmarks.run --skip table3 --skip roofline --repeats 1 \
-    --json BENCH_pr3.json > /dev/null
+    --json BENCH_pr4.json > /dev/null

@@ -49,6 +49,17 @@ class PQConfig:
     seed_tiles: int = 2
     seed_max_tiles: int = 16
     seed_stab_tol: float = 0.05
+    # Bound backend for the pruned cascade's per-tile upper bounds
+    # (docs/PRUNING.md §Bound backends):
+    #   "bitmask" — uint32 code-presence bitmasks, O(T*m*b/8) bytes,
+    #               tightest bounds (exact per-tile code sets);
+    #   "range"   — per-tile min/max code ranges as int16 lo/hi,
+    #               O(T*m*2*2) bytes and two gathers per bound via a
+    #               segment-max table — 1/8 the metadata at b=256, looser
+    #               bounds when code distributions have holes.
+    # Both are exact (bounds dominate true scores either way); the choice
+    # only moves the survival fraction and the metadata footprint.
+    bound_backend: str = "bitmask"
 
     def __post_init__(self):
         if self.b > 2 ** 16:
@@ -70,6 +81,14 @@ class PQConfig:
                 f"seed_max_tiles ({self.seed_max_tiles})")
         if self.seed_stab_tol <= 0:
             raise ValueError("seed_stab_tol must be positive")
+        if self.bound_backend not in ("bitmask", "range"):
+            raise ValueError(
+                f"unknown bound_backend {self.bound_backend!r}; "
+                "one of ('bitmask', 'range')")
+        if self.bound_backend == "range" and self.b > 2 ** 15:
+            raise ValueError(
+                f"bound_backend='range' stores int16 code ranges; "
+                f"b={self.b} exceeds int16 — use bound_backend='bitmask'")
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,22 @@ DEFAULT_SEED_TILES = 2
 DEFAULT_SEED_MAX_TILES = 16
 DEFAULT_SEED_STAB_TOL = 0.05
 
+#: Pluggable bound backends (PQConfig.bound_backend):
+#:   "bitmask" — uint32 code-presence bitmasks (exact per-tile code sets,
+#:               tightest bounds, O(T*m*b/8) bytes);
+#:   "range"   — per-tile [code_lo, code_hi] int16 ranges (O(T*m*4) bytes,
+#:               bounds via a per-query segment-max table + two gathers,
+#:               looser when code distributions have holes).
+BOUND_BACKENDS = ("bitmask", "range")
+
+#: Canonical cascade stats schema — every pruned route (host two-pass,
+#: in-graph single-dispatch, one-shard_map sharded) returns exactly these
+#: keys, so serving/bench consumers never branch on the route.
+STATS_KEYS = frozenset({
+    "n_tiles", "n_survived", "n_scored", "survival_fraction",
+    "n_seed_used", "seed_survival_est", "rung_hit", "n_rungs",
+    "slot_overflow", "bound_backend"})
+
 _WORD = 32   # presence bits per packed uint32 word
 
 
@@ -156,59 +172,120 @@ class PrunedHeadState:
     through the params dict, so the in-graph cascade is a pure function of
     params — jittable, shardable, decode-loop safe, no per-call rebuild.
 
-    ``packed`` is the code-presence set as uint32 bitmasks (bit j of word w
-    in ``packed[t, k, w]`` == sub-id ``w*32+j`` occurs in split k of tile
-    t) — 8x smaller than the PR 2 (T, m, b) bool array.  The static layout
-    fields are pytree *metadata* (hashable, part of the treedef), so jit
-    specialises on them exactly like on a shape.
+    The metadata layout is pluggable (``backend``, selected by
+    ``PQConfig.bound_backend``):
+
+    * ``"bitmask"`` — ``packed`` holds the code-presence set as uint32
+      bitmasks (bit j of word w in ``packed[t, k, w]`` == sub-id ``w*32+j``
+      occurs in split k of tile t) — 8x smaller than the PR 2 (T, m, b)
+      bool array; ``code_lo``/``code_hi`` are ``None``.
+    * ``"range"`` — ``code_lo``/``code_hi`` hold per-(tile, split) min/max
+      codes as (T, m) int16 — O(T*m*4) bytes, 1/8 of the packed bitmasks
+      at b=256 — and ``packed`` is ``None``.  Bounds come from a per-query
+      segment-max table and two gathers (:func:`tile_upper_bounds_range`).
+
+    The static layout fields (including ``backend``) are pytree *metadata*
+    (hashable, part of the treedef), so jit specialises on them exactly
+    like on a shape; the absent backend's arrays are ``None`` children,
+    which flatten to nothing.
 
     For the item-sharded route (``shards > 1``) the catalogue is padded to
     ``shards * n_local`` rows and tiled *per shard*, so tile boundaries
-    never straddle shard boundaries and ``packed`` splits evenly over the
-    mesh axis (``P(axis, None, None)``).
+    never straddle shard boundaries and every metadata array splits evenly
+    over the mesh axis (``P(axis, ...)`` on its leading tile dim).
     """
 
-    packed: jax.Array    # (n_tiles_total, m, ceil(b/32)) uint32
+    packed: Optional[jax.Array]   # bitmask: (T, m, ceil(b/32)) uint32
     tile: int            # items per tile
     n_items: int         # true catalogue rows (pre-padding)
     b: int               # codebook width
     shards: int = 1      # shard count the tile layout is aligned to
     n_local: int = 0     # items per shard (== n_items when shards == 1)
+    backend: str = "bitmask"
+    code_lo: Optional[jax.Array] = None   # range: (T, m) int16
+    code_hi: Optional[jax.Array] = None   # range: (T, m) int16
+
+    def meta_arrays(self) -> Tuple[jax.Array, ...]:
+        """The backend's metadata arrays, leading dim = total tiles (what
+        the sharded route splits over the mesh axis)."""
+        if self.backend == "range":
+            return (self.code_lo, self.code_hi)
+        return (self.packed,)
 
     @property
     def n_tiles(self) -> int:
-        return self.packed.shape[0]
+        return self.meta_arrays()[0].shape[0]
 
     @property
     def tiles_per_shard(self) -> int:
-        return self.packed.shape[0] // self.shards
+        return self.n_tiles // self.shards
 
     @property
     def nbytes(self) -> int:
-        """HBM footprint of the packed metadata."""
+        """HBM footprint of this backend's metadata."""
+        if self.backend == "range":
+            t, m = self.code_lo.shape
+            return t * m * 2 * 2            # lo + hi, int16
         t, m, w = self.packed.shape
         return t * m * w * 4
 
     @property
     def bool_nbytes(self) -> int:
         """What the PR 2 dense-bool layout would cost for this catalogue."""
-        t, m, _ = self.packed.shape
+        t = self.n_tiles
+        m = self.meta_arrays()[0].shape[1]
         return t * m * self.b
 
 
 jax.tree_util.register_dataclass(
-    PrunedHeadState, data_fields=["packed"],
-    meta_fields=["tile", "n_items", "b", "shards", "n_local"])
+    PrunedHeadState, data_fields=["packed", "code_lo", "code_hi"],
+    meta_fields=["tile", "n_items", "b", "shards", "n_local", "backend"])
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def _build_code_ranges(codes: jax.Array, tile: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Per-(tile, split) min/max codes -> ((T, m) int16 lo, (T, m) hi).
+
+    Tile-alignment padding rows are excluded from the ranges (a padded row
+    must not widen the last tile's range to code 0)."""
+    n, m = codes.shape
+    n_tiles = -(-n // tile)
+    pad = n_tiles * tile - n
+    c = codes.astype(jnp.int32)
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    c3 = c.reshape(n_tiles, tile, m)
+    real = (jnp.arange(n_tiles * tile, dtype=jnp.int32) < n
+            ).reshape(n_tiles, tile, 1)
+    lo = jnp.where(real, c3, jnp.int32(2 ** 15 - 1)).min(axis=1)
+    hi = jnp.where(real, c3, jnp.int32(0)).max(axis=1)
+    # A tile with no real rows cannot occur flat (T = ceil(n/tile)); keep
+    # lo <= hi anyway so the segment-max gather indices stay in range.
+    hi = jnp.maximum(hi, lo)
+    return lo.astype(jnp.int16), hi.astype(jnp.int16)
 
 
 def build_pruned_state(codes: jax.Array, b: int,
                        tile: int = DEFAULT_PRUNE_TILE, *,
-                       shards: int = 1) -> PrunedHeadState:
+                       shards: int = 1,
+                       backend: str = "bitmask") -> PrunedHeadState:
     """Head-build-time constructor (also trace-safe: pure jnp, so a caller
     without a threaded state can rebuild in-graph as a fallback)."""
+    if backend not in BOUND_BACKENDS:
+        raise ValueError(f"unknown bound backend {backend!r}; "
+                         f"one of {BOUND_BACKENDS}")
+    if backend == "range" and b > 2 ** 15:
+        raise ValueError(f"bound backend 'range' stores int16 ranges; "
+                         f"b={b} exceeds int16")
     n, m = codes.shape
     if shards <= 1:
         t = max(1, min(int(tile), n))
+        if backend == "range":
+            lo, hi = _build_code_ranges(codes, t)
+            return PrunedHeadState(None, tile=t, n_items=n, b=b, shards=1,
+                                   n_local=n, backend="range",
+                                   code_lo=lo, code_hi=hi)
         return PrunedHeadState(pack_presence(_build_present(codes, b, t)),
                                tile=t, n_items=n, b=b, shards=1, n_local=n)
     pad = (-n) % shards
@@ -216,6 +293,15 @@ def build_pruned_state(codes: jax.Array, b: int,
     t = max(1, min(int(tile), n_local))
     codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
     per_shard = codes_p.reshape(shards, n_local, m)
+    if backend == "range":
+        # Shard-padding rows are zero codes here (same semantics as the
+        # bitmask build, which registers them as present): harmless for
+        # dominance, and the gid >= n mask removes them from the top-k.
+        lo, hi = jax.vmap(partial(_build_code_ranges, tile=t))(per_shard)
+        return PrunedHeadState(None, tile=t, n_items=n, b=b, shards=shards,
+                               n_local=n_local, backend="range",
+                               code_lo=lo.reshape(-1, m),
+                               code_hi=hi.reshape(-1, m))
     present = jax.vmap(partial(_build_present, b=b, tile=t))(per_shard)
     packed = pack_presence(present.reshape(-1, m, b))
     return PrunedHeadState(packed, tile=t, n_items=n, b=b, shards=shards,
@@ -224,21 +310,26 @@ def build_pruned_state(codes: jax.Array, b: int,
 
 def abstract_pruned_state(n_items: int, m: int, b: int,
                           tile: int = DEFAULT_PRUNE_TILE, *,
-                          shards: int = 1) -> PrunedHeadState:
+                          shards: int = 1,
+                          backend: str = "bitmask") -> PrunedHeadState:
     """ShapeDtypeStruct stand-in matching :func:`build_pruned_state`."""
     if shards <= 1:
         t = max(1, min(int(tile), n_items))
-        shape = (-(-n_items // t), m, packed_words(b))
-        return PrunedHeadState(jax.ShapeDtypeStruct(shape, jnp.uint32),
-                               tile=t, n_items=n_items, b=b, shards=1,
-                               n_local=n_items)
-    pad = (-n_items) % shards
-    n_local = (n_items + pad) // shards
-    t = max(1, min(int(tile), n_local))
-    shape = (shards * -(-n_local // t), m, packed_words(b))
-    return PrunedHeadState(jax.ShapeDtypeStruct(shape, jnp.uint32),
-                           tile=t, n_items=n_items, b=b, shards=shards,
-                           n_local=n_local)
+        n_tiles = -(-n_items // t)
+        kw = dict(tile=t, n_items=n_items, b=b, shards=1, n_local=n_items)
+    else:
+        pad = (-n_items) % shards
+        n_local = (n_items + pad) // shards
+        t = max(1, min(int(tile), n_local))
+        n_tiles = shards * -(-n_local // t)
+        kw = dict(tile=t, n_items=n_items, b=b, shards=shards,
+                  n_local=n_local)
+    if backend == "range":
+        rng_sds = jax.ShapeDtypeStruct((n_tiles, m), jnp.int16)
+        return PrunedHeadState(None, backend="range", code_lo=rng_sds,
+                               code_hi=rng_sds, **kw)
+    shape = (n_tiles, m, packed_words(b))
+    return PrunedHeadState(jax.ShapeDtypeStruct(shape, jnp.uint32), **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +362,78 @@ def tile_upper_bounds_packed(packed: jax.Array, s: jax.Array) -> jax.Array:
     packed (T, m, W) uint32, s (B, m, b) f32 -> (B, T) f32.
     """
     return tile_upper_bounds(unpack_presence(packed, s.shape[-1]), s)
+
+
+def range_max_table(s: jax.Array) -> jax.Array:
+    """Sparse (binary-lifting) segment-max table over the sub-id axis.
+
+    s (..., b) -> (..., L, b) where ``table[..., l, j] = max(s[..., j :
+    j + 2^l])`` (clamped at b) and ``L = floor(log2(b)) + 1``.  Built once
+    per query batch in O(b log b); any range max ``[lo, hi]`` is then the
+    max of two overlapping power-of-two windows — two gathers, no 32-lane
+    bitmask unpack.
+    """
+    b = s.shape[-1]
+    levels = [s]
+    w = 1
+    while 2 * w <= b:
+        prev = levels[-1]
+        pad = jnp.full(prev.shape[:-1] + (w,), NEG_INF, prev.dtype)
+        shifted = jnp.concatenate([prev[..., w:], pad], axis=-1)
+        levels.append(jnp.maximum(prev, shifted))
+        w *= 2
+    return jnp.stack(levels, axis=-2)
+
+
+def tile_upper_bounds_range(code_lo: jax.Array, code_hi: jax.Array,
+                            s: jax.Array) -> jax.Array:
+    """ub[q, t] = sum_k max_{lo[t,k] <= j <= hi[t,k]} s[q, k, j].
+
+    code_lo/code_hi (T, m) int, s (B, m, b) f32 -> (B, T) f32.  Every code
+    present in tile t lies inside [lo, hi], so the range max dominates the
+    presence-masked max and hence the true item scores — the range bound
+    is the bitmask bound with the presence set relaxed to its convex hull
+    (equal when codes cover the whole range, looser when there are holes).
+
+    Range maxes come from :func:`range_max_table`: the max over a length-L
+    range is the max of the two 2^level windows anchored at ``lo`` and at
+    ``hi - 2^level + 1`` (level = floor(log2(L))) — two gathers per
+    (tile, split).  Same balanced-tree accumulation (`tree_sum`) as the
+    scorers, so a single-item tile's bound equals that item's score
+    bit-for-bit (lo == hi -> both windows are that one entry).
+    """
+    m, b = s.shape[-2], s.shape[-1]
+    table = range_max_table(s)                        # (B, m, L, b)
+    n_levels = table.shape[-2]
+    lo = code_lo.astype(jnp.int32)
+    hi = code_hi.astype(jnp.int32)
+    length = hi - lo + 1                              # (T, m), >= 1
+    level = jnp.zeros_like(length)
+    for lv in range(1, n_levels):
+        level = level + (length >= (1 << lv)).astype(jnp.int32)
+    right = hi - jnp.left_shift(jnp.int32(1), level) + 1
+    bq = s.shape[0]
+    flat = table.reshape(bq, m, n_levels * b)
+    parts = []
+    for k in range(m):
+        i1 = level[:, k] * b + lo[:, k]               # (T,)
+        i2 = level[:, k] * b + right[:, k]
+        parts.append(jnp.maximum(flat[:, k, i1], flat[:, k, i2]))  # (B, T)
+    return tree_sum(parts)
+
+
+def tile_bounds(state: PrunedHeadState, s: jax.Array) -> jax.Array:
+    """Backend-dispatched per-tile upper bounds -> (B, T) f32."""
+    return bounds_from_parts(state.backend, state.meta_arrays(), s)
+
+
+def bounds_from_parts(backend: str, parts: Tuple[jax.Array, ...],
+                      s: jax.Array) -> jax.Array:
+    """Bounds from a backend name + its metadata arrays (the shard_map
+    body's entry point: the arrays arrive as per-shard slices)."""
+    if backend == "range":
+        return tile_upper_bounds_range(*parts, s)
+    return tile_upper_bounds_packed(*parts, s)
 
 
 def theta_from_seed(codes: jax.Array, s: jax.Array, bounds: jax.Array,
@@ -444,6 +607,64 @@ def pruned_pass1(codes: jax.Array, present: jax.Array, s: jax.Array, k: int,
 
 
 # ---------------------------------------------------------------------------
+# slot-budget ladder: normalisation + calibration
+# ---------------------------------------------------------------------------
+
+
+def normalize_ladder(ladder, n_tiles: int, k: int, tile: int
+                     ) -> Tuple[int, ...]:
+    """Canonical rung sequence for a tile count: strictly-ascending slot
+    budgets clamped to ``[ceil(k/tile), n_tiles]``, with the exhaustive
+    rung (``n_tiles`` slots) ALWAYS appended last — whatever the caller
+    passed, the final rung scores every tile, so the ladder can never cost
+    exactness (only escalate work)."""
+    floor = min(max(1, -(-k // tile)), n_tiles)
+    # Clamp FIRST, then drop anything at/above the tile count — clamping
+    # can raise a budget up to floor == n_tiles, which must not produce a
+    # duplicate of the exhaustive rung.
+    budgets = sorted({max(min(int(x), n_tiles), floor)
+                      for x in (ladder or ())})
+    return tuple(x for x in budgets if x < n_tiles) + (n_tiles,)
+
+
+def calibrate_ladder(survival_counts, n_tiles: int, k: int, tile: int, *,
+                     headroom: int = 2) -> Tuple[int, ...]:
+    """Pick a 2-3 rung power-of-two slot-budget ladder from observed
+    survivor counts (a one-shot calibration pass at engine build, or
+    recorded serving stats).
+
+    Candidate rungs come from three anchors of the observed distribution —
+    ``headroom``x the *median* (the common case every batch pays for; the
+    median, not a high quantile, so a bimodal tail cannot inflate it), the
+    95th percentile (the bulk of the tail), and ``headroom``x the 95th
+    (tail cushion) — each rounded up to a power of two, deduplicated, and
+    clamped by :func:`normalize_ladder`, which drops rungs at or above the
+    tile count and ALWAYS appends the exhaustive final rung.  Adversarial
+    survival distributions (all-survive, none-survive, bimodal) therefore
+    degrade to the exhaustive cost, never to a wrong answer; a backend
+    with loose bounds (high survival) still gets a sub-exhaustive rung
+    when one fits.  Powers of two keep serving ladders out of
+    jit-recompile space.
+    """
+    import numpy as np
+
+    counts = np.asarray(list(survival_counts), dtype=np.int64).reshape(-1)
+    if counts.size == 0:
+        counts = np.asarray([n_tiles])
+    floor = min(max(1, -(-k // tile)), n_tiles)
+    headroom = max(int(headroom), 2)
+
+    def pow2_at_least(x):
+        return 1 << (max(int(np.ceil(x)), 1) - 1).bit_length()
+
+    q50, q95 = np.quantile(counts, 0.5), np.quantile(counts, 0.95)
+    rungs = (pow2_at_least(max(headroom * q50, floor)),
+             pow2_at_least(max(q95, floor)),
+             pow2_at_least(max(headroom * q95, floor)))
+    return normalize_ladder(rungs, n_tiles, k, tile)
+
+
+# ---------------------------------------------------------------------------
 # the single-dispatch in-graph cascade (PR 3 serving path)
 # ---------------------------------------------------------------------------
 
@@ -456,26 +677,31 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
                          seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
                          seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                          slot_budget: Optional[int] = None,
+                         ladder=None,
                          use_kernel: Optional[bool] = None,
                          interpret: Optional[bool] = None,
                          return_stats: bool = False):
     """Exact pruned top-k as ONE traced computation (no host sync).
 
-    bounds -> theta -> survival mask -> cumsum-scatter compaction into a
-    ``-1``-padded slot buffer -> fused scoring over the listed tiles.  On
-    TPU the fused kernel's grid stays static at ``n_slots`` and sentinel
-    slots take an ``@pl.when`` early-exit (~no DMA or compute); off TPU the
-    XLA lowering gathers ``n_slots`` tiles.
+    bounds (backend-dispatched: bitmask or min/max code range) -> theta ->
+    survival mask -> cumsum-scatter compaction into ``-1``-padded slot
+    buffers -> fused scoring over the listed tiles.  On TPU the fused
+    kernel's grid stays static at the rung's slot count and sentinel slots
+    take an ``@pl.when`` early-exit (~no DMA or compute); off TPU the XLA
+    lowering gathers the rung's tiles.
 
-    ``slot_budget`` caps the compacted buffer below the tile count: the
-    common case then scores only ``slot_budget`` tiles, and a ``lax.cond``
-    falls back to the exhaustive identity buffer in the (exactness-
-    preserving) overflow case — both branches live in the same dispatch.
+    ``ladder`` is a sequence of slot budgets (``slot_budget=b`` is
+    shorthand for ``ladder=(b,)``): the trace carries one nested
+    ``lax.cond`` branch per rung, the smallest rung whose budget holds the
+    survivor count executes, and the final rung — always appended by
+    :func:`normalize_ladder` — scores the full-length compacted buffer, so
+    overflow at any skew escalates cost, never correctness.
 
     Pure function of (codes, s, state): jittable, vmappable, decode-loop
     and shard_map safe.  Bit-identical to ``score_pqtopk + tiled_topk``
-    (values AND ids, ties included).  With ``return_stats`` the stats
-    values are traced arrays (convert on host after the call).
+    (values AND ids, ties included).  With ``return_stats`` the traced
+    stats dict follows the canonical :data:`STATS_KEYS` schema (convert on
+    host after the call).
     """
     from repro.kernels.pqtopk import ops as kernel_ops
 
@@ -492,36 +718,34 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
             f"shards={state.shards}; use top_items_pruned_sharded for the "
             f"sharded layout")
     tile = state.tile
-    bounds = tile_upper_bounds_packed(state.packed, s)
+    bounds = tile_bounds(state, s)
     theta, n_seed_used, seed_sf = theta_seed_ingraph(
         codes, s, bounds, k, tile=tile, seed_policy=seed_policy,
         seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
         seed_stab_tol=seed_stab_tol)
     mask = survival_mask(bounds, theta)
     t_total = bounds.shape[1]
-    floor = min(max(1, -(-k // tile)), t_total)
-    n_slots = t_total if slot_budget is None else \
-        max(min(int(slot_budget), t_total), floor)
-    slots, count = compact_mask(mask, n_slots)
-
-    def scored(tile_idx):
-        return kernel_ops.pq_topk_tiles(codes, s, k, tile_idx, tile=tile,
-                                        use_kernel=use_kernel,
-                                        interpret=interpret)
-
-    if n_slots < t_total:
-        identity = jnp.arange(t_total, dtype=jnp.int32)
-        vals, ids = jax.lax.cond(count <= n_slots,
-                                 lambda: scored(slots),
-                                 lambda: scored(identity))
-    else:
-        vals, ids = scored(slots)
+    if ladder is None and slot_budget is not None:
+        ladder = (int(slot_budget),)
+    rungs = normalize_ladder(ladder, t_total, k, tile)
+    # One cumsum-scatter compaction; each rung's buffer is exactly the
+    # full buffer's length-r prefix (survivors land at ascending
+    # positions, -1 sentinels behind), so the smaller rungs are free.
+    slots_full, count = compact_mask(mask)
+    slot_lists = [slots_full[:r] for r in rungs]
+    vals, ids, rung = kernel_ops.pq_topk_tiles_ladder(
+        codes, s, k, slot_lists, count, tile=tile, use_kernel=use_kernel,
+        interpret=interpret)
     if not return_stats:
         return vals, ids
-    stats = {"n_tiles": t_total, "n_survived": count, "n_scored": n_slots,
+    stats = {"n_tiles": t_total, "n_survived": count,
+             "n_scored": jnp.asarray(rungs, jnp.int32)[rung],
              "survival_fraction": count / jnp.float32(max(t_total, 1)),
              "n_seed_used": n_seed_used, "seed_survival_est": seed_sf,
-             "slot_overflow": count > n_slots}
+             "rung_hit": rung, "n_rungs": len(rungs),
+             "slot_overflow": (count > rungs[-2] if len(rungs) > 1
+                               else jnp.bool_(False)),
+             "bound_backend": state.backend}
     return vals, ids, stats
 
 
@@ -574,7 +798,38 @@ def cascade_topk(codes: jax.Array, s: jax.Array, k: int, *, tile: int,
         use_kernel=use_kernel, interpret=interpret)
     if not return_stats:
         return vals, ids
+    # Canonical STATS_KEYS schema (shared with the in-graph and sharded
+    # routes): the host route has no ladder (its slot bucket is sized to
+    # the survivor count, so the single rung always fits) and its greedy
+    # seed pass uses a fixed tile count.
+    sf = len(survivors) / max(meta.n_tiles, 1)
+    n_seed = min(max(seed_tiles, -(-k // tile)), meta.n_tiles)
     stats = {"n_tiles": meta.n_tiles, "n_survived": int(len(survivors)),
-             "n_scored": int(n_slots),
-             "survival_fraction": len(survivors) / max(meta.n_tiles, 1)}
+             "n_scored": int(n_slots), "survival_fraction": sf,
+             "n_seed_used": n_seed, "seed_survival_est": sf,
+             "rung_hit": 0, "n_rungs": 1, "slot_overflow": False,
+             "bound_backend": "bitmask"}
     return vals, ids, stats
+
+
+# ---------------------------------------------------------------------------
+# calibration observation helper (engine build time)
+# ---------------------------------------------------------------------------
+
+
+def survival_count(codes: jax.Array, s: jax.Array, k: int,
+                   state: PrunedHeadState, *,
+                   seed_policy: str = "greedy",
+                   seed_tiles: int = DEFAULT_SEED_TILES,
+                   seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
+                   seed_stab_tol: float = DEFAULT_SEED_STAB_TOL) -> jax.Array:
+    """Surviving-tile count for one query batch (i32 scalar) — the cheap
+    bounds+theta prefix of the cascade, no scoring pass.  What the engine's
+    one-shot calibration runs to collect the survival stats that
+    :func:`calibrate_ladder` turns into a slot-budget ladder."""
+    bounds = tile_bounds(state, s)
+    theta, _, _ = theta_seed_ingraph(
+        codes, s, bounds, k, tile=state.tile, seed_policy=seed_policy,
+        seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
+        seed_stab_tol=seed_stab_tol)
+    return survival_mask(bounds, theta).sum(dtype=jnp.int32)

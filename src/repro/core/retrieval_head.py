@@ -48,12 +48,14 @@ def init(key: jax.Array, n_items: int, d_model: int,
         return {"table": table.astype(dtype)}
     params = pq_lib.init_pq_embedding(key, pq, n_items, d_model, codes,
                                       centroids, dtype)
-    # Query-independent pruning metadata (bit-packed code presence), built
-    # once here and carried in the param tree so the in-graph pruned
-    # cascade never rebuilds it — not even inside a decode loop.  A frozen
-    # integer buffer to the optimizer, like "codes".
+    # Query-independent pruning metadata (bit-packed code presence or
+    # min/max code ranges, per pq.bound_backend), built once here and
+    # carried in the param tree so the in-graph pruned cascade never
+    # rebuilds it — not even inside a decode loop.  A frozen integer
+    # buffer to the optimizer, like "codes".
     params["pruned"] = pruning.build_pruned_state(
-        params["codes"], pq.b, DEFAULT_PRUNE_TILE)
+        params["codes"], pq.b, DEFAULT_PRUNE_TILE,
+        backend=pq.bound_backend)
     return params
 
 
@@ -63,7 +65,8 @@ def abstract(n_items: int, d_model: int, pq: Optional[PQConfig] = None,
         return {"table": jax.ShapeDtypeStruct((n_items, d_model), dtype)}
     params = pq_lib.abstract_pq_embedding(pq, n_items, d_model, dtype)
     params["pruned"] = pruning.abstract_pruned_state(
-        n_items, pq.m, pq.b, DEFAULT_PRUNE_TILE)
+        n_items, pq.m, pq.b, DEFAULT_PRUNE_TILE,
+        backend=pq.bound_backend)
     return params
 
 
@@ -128,6 +131,7 @@ def score_candidates(params: Params, phi: jax.Array, item_ids: jax.Array,
 def top_items(params: Params, phi: jax.Array, k: int,
               method: str = "pqtopk", tile: int = 8192,
               pq_cfg: Optional[PQConfig] = None,
+              ladder=None, return_rung: bool = False,
               ) -> Tuple[jax.Array, jax.Array]:
     """TopK(score, K) — returns (values (B,k), item ids (B,k)).
 
@@ -138,7 +142,10 @@ def top_items(params: Params, phi: jax.Array, k: int,
 
     ``method="pqtopk_pruned"`` runs the single-dispatch in-graph cascade
     (bounds -> theta -> compaction -> compacted fused scoring, all in one
-    traced computation; ``pq_cfg`` supplies the theta-seeding policy knobs).
+    traced computation; ``pq_cfg`` supplies the theta-seeding policy knobs,
+    ``ladder`` the calibrated slot budgets, and ``return_rung=True`` makes
+    the route additionally return the ladder rung taken — still one
+    dispatch).
     """
     if method == "pqtopk_fused":
         if not is_pq(params):
@@ -150,7 +157,9 @@ def top_items(params: Params, phi: jax.Array, k: int,
     if method == "pqtopk_pruned":
         if not is_pq(params):
             raise ValueError("method 'pqtopk_pruned' requires a PQ head")
-        return _top_items_pruned_ingraph(params, phi, k, pq_cfg=pq_cfg)
+        return _top_items_pruned_ingraph(params, phi, k, pq_cfg=pq_cfg,
+                                         ladder=ladder,
+                                         return_rung=return_rung)
     if method == "pqtopk_approx":
         if not is_pq(params):
             raise ValueError("method 'pqtopk_approx' requires a PQ head")
@@ -190,15 +199,19 @@ def _pruned_state(params: Params) -> Optional[pruning.PrunedHeadState]:
 
 def _top_items_pruned_ingraph(params, phi, k, *,
                               pq_cfg: Optional[PQConfig] = None,
-                              slot_budget: Optional[int] = None):
+                              slot_budget: Optional[int] = None,
+                              ladder=None, return_rung: bool = False):
     """The single-dispatch pruned route: one traced computation.
 
-    Reads the bit-packed :class:`pruning.PrunedHeadState` threaded through
-    the param tree (rebuilding it in-graph only for legacy param dicts that
-    predate the state) and runs ``pruning.cascade_topk_ingraph`` — bounds,
-    theta seeding, cumsum-scatter compaction into a ``-1``-padded slot
-    buffer, and the compacted fused scoring, with no device->host sync.
-    Bit-identical to the exhaustive oracle; jit / decode-loop safe.
+    Reads the :class:`pruning.PrunedHeadState` threaded through the param
+    tree (bit-packed presence or code ranges, per its bound backend;
+    rebuilding it in-graph only for legacy param dicts that predate the
+    state) and runs ``pruning.cascade_topk_ingraph`` — bounds, theta
+    seeding, cumsum-scatter compaction into ``-1``-padded slot buffers
+    (one per ladder rung), and the compacted fused scoring, with no
+    device->host sync.  Bit-identical to the exhaustive oracle; jit /
+    decode-loop safe.  ``return_rung=True`` appends the ladder rung taken
+    (i32) to the outputs — same single dispatch.
     """
     codes, sub_emb = params["codes"], params["sub_emb"]
     s = scoring.subid_scores(sub_emb.astype(jnp.float32),
@@ -209,10 +222,23 @@ def _top_items_pruned_ingraph(params, phi, k, *,
         # tiles the catalogue per shard; the flat route needs the shards=1
         # layout, so rebuild in-graph rather than misread the tiles.
         state = None
-    return pruning.cascade_topk_ingraph(codes, s, k, state,
-                                        tile=DEFAULT_PRUNE_TILE,
-                                        slot_budget=slot_budget,
-                                        **_seed_kwargs(pq_cfg))
+    if state is None:
+        # Legacy param dicts / sharded-state fallback: rebuild in-graph,
+        # honouring the config's bound backend.
+        state = pruning.build_pruned_state(
+            codes, int(sub_emb.shape[1]), DEFAULT_PRUNE_TILE,
+            backend=pq_cfg.bound_backend if pq_cfg is not None
+            else "bitmask")
+    out = pruning.cascade_topk_ingraph(codes, s, k, state,
+                                       tile=DEFAULT_PRUNE_TILE,
+                                       slot_budget=slot_budget,
+                                       ladder=ladder,
+                                       return_stats=return_rung,
+                                       **_seed_kwargs(pq_cfg))
+    if return_rung:
+        vals, ids, stats = out
+        return vals, ids, stats["rung_hit"]
+    return out
 
 
 def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
@@ -251,16 +277,19 @@ def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
 
 def ensure_sharded_pruned_state(params: Params, mesh, axis: str = "model", *,
                                 k_hint: int = 64,
-                                tile: int = DEFAULT_PRUNE_TILE) -> Params:
+                                tile: int = DEFAULT_PRUNE_TILE,
+                                backend: Optional[str] = None) -> Params:
     """Return ``params`` with a :class:`pruning.PrunedHeadState` whose tile
     layout is aligned to ``mesh``'s ``axis`` (tiles never straddle shard
-    boundaries, so ``packed`` splits evenly over the mesh).
+    boundaries, so the metadata arrays split evenly over the mesh).
 
-    A no-op when the threaded state is already compatible; otherwise builds
-    the shard-aligned state ONCE (engine/head build time) so the sharded
-    serve path never rebuilds metadata per call.  ``k_hint`` is the largest
-    k the route will serve — the tile must hold the per-shard oversampled
-    top-(k + pad) winners.
+    A no-op when the threaded state is already compatible (same shard
+    layout AND same bound backend); otherwise builds the shard-aligned
+    state ONCE (engine/head build time) so the sharded serve path never
+    rebuilds metadata per call.  ``k_hint`` is the largest k the route
+    will serve — the tile must hold the per-shard oversampled top-(k +
+    pad) winners.  ``backend=None`` preserves the threaded state's
+    backend (default ``"bitmask"``).
     """
     if not is_pq(params):
         return params
@@ -271,12 +300,15 @@ def ensure_sharded_pruned_state(params: Params, mesh, axis: str = "model", *,
     n_local = (n + pad) // n_shards
     k_local = min(k_hint + pad, n_local)
     st = _pruned_state(params)
-    if st is not None and st.shards == n_shards and st.tile >= k_local:
+    if backend is None:
+        backend = st.backend if st is not None else "bitmask"
+    if (st is not None and st.shards == n_shards and st.tile >= k_local
+            and st.backend == backend):
         return params
     b = params["sub_emb"].shape[1]
     need = min(max(tile, k_local), n_local)
     return {**params, "pruned": pruning.build_pruned_state(
-        codes, b, need, shards=n_shards)}
+        codes, b, need, shards=n_shards, backend=backend)}
 
 
 def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
@@ -284,6 +316,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                              tile: int = DEFAULT_PRUNE_TILE,
                              seed_tiles: Optional[int] = None,
                              pq_cfg: Optional[PQConfig] = None,
+                             ladder=None,
                              use_kernel: Optional[bool] = None,
                              interpret: Optional[bool] = None,
                              return_stats: bool = False):
@@ -320,9 +353,14 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     k_local = min(k + pad, n_local)
     b = sub_emb.shape[1]
     state = _pruned_state(params)
-    if state is None or state.shards != n_shards or state.tile < k_local:
+    want_backend = (state.backend if state is not None else
+                    (pq_cfg.bound_backend if pq_cfg is not None
+                     else "bitmask"))
+    if (state is None or state.shards != n_shards or state.tile < k_local
+            or state.backend != want_backend):
         state = pruning.build_pruned_state(
-            codes, b, min(max(tile, k_local), n_local), shards=n_shards)
+            codes, b, min(max(tile, k_local), n_local), shards=n_shards,
+            backend=want_backend)
     tile = state.tile
     t_local = state.tiles_per_shard
     codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
@@ -339,20 +377,32 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
         seed_kw["seed_max_tiles"] = max(
             seed_tiles, seed_kw.get("seed_max_tiles",
                                     pruning.DEFAULT_SEED_MAX_TILES))
+    # Per-shard ladder: budgets apply to the shard's local tile count.
+    # Each shard escalates on its own survivor count (lax.cond branches
+    # hold no collectives, so divergent rungs across shards are fine); the
+    # final rung is always the full local buffer — exhaustive per shard.
+    rungs = pruning.normalize_ladder(ladder, t_local, k_local, tile)
+    # The backend's metadata arrays all carry the tile axis first, so one
+    # P(axis, ...) spec per array shards them alongside the codes.
+    meta_parts = state.meta_arrays()
+    meta_specs = tuple(P(axis, *([None] * (a.ndim - 1)))
+                       for a in meta_parts)
 
-    def shard_body(codes_local, packed_local, sub_emb_, phi_):
+    def shard_body(codes_local, meta_local, sub_emb_, phi_):
         s = scoring.subid_scores(sub_emb_.astype(jnp.float32),
                                  phi_.astype(jnp.float32))
-        bounds = pruning.tile_upper_bounds_packed(packed_local, s)
+        bounds = pruning.bounds_from_parts(state.backend, meta_local, s)
         offset = jax.lax.axis_index(axis) * n_local
         theta_local, n_seed_used, _sf = pruning.theta_seed_ingraph(
             codes_local, s, bounds, k, tile=tile, n_items=n,
             id_offset=offset, **seed_kw)
         theta = jax.lax.pmax(theta_local, axis)
         mask = pruning.survival_mask(bounds, theta)
-        slots, count = pruning.compact_mask(mask)
-        lv, li = kernel_ops._pq_topk_tiles(
-            codes_local, s, k_local, slots, tile=tile,
+        # One compaction; rung buffers are prefixes of the full buffer.
+        slots_full, count = pruning.compact_mask(mask)
+        slot_lists = tuple(slots_full[:r] for r in rungs)
+        lv, li, rung = kernel_ops._pq_topk_tiles_ladder(
+            codes_local, s, k_local, slot_lists, count, tile=tile,
             batch_tile=kernel_ops._k.DEFAULT_BATCH_TILE,
             use_kernel=use_kernel, interpret=interpret)
         gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
@@ -362,20 +412,31 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
             gid = jnp.take_along_axis(gid, sel, axis=1)
         vals, ids = topk_lib.merge_local_topk(lv, gid, k, axis)
         return (vals, ids, jax.lax.psum(count, axis),
-                jax.lax.pmax(n_seed_used, axis))
+                jax.lax.pmax(n_seed_used, axis),
+                jax.lax.pmax(rung, axis),
+                jax.lax.psum(jnp.asarray(rungs, jnp.int32)[rung], axis))
 
     fn = manual_axis_map(
         shard_body, mesh,
-        in_specs=(P(axis, None), P(axis, None, None), P(), P()),
-        out_specs=(P(), P(), P(), P()))
-    vals, ids, survived, n_seed_used = fn(codes_p, state.packed, sub_emb, phi)
+        in_specs=(P(axis, None), meta_specs, P(), P()),
+        out_specs=(P(), P(), P(), P(), P(), P()))
+    vals, ids, survived, n_seed_used, rung, n_scored = fn(
+        codes_p, meta_parts, sub_emb, phi)
     if not return_stats:
         return vals, ids
     total = n_shards * t_local
     stats = {"n_tiles": total, "n_survived": survived,
-             "n_scored": total,
+             "n_scored": n_scored,
              "survival_fraction": survived / jnp.float32(max(total, 1)),
-             "n_seed_used": n_seed_used}
+             "n_seed_used": n_seed_used,
+             "seed_survival_est": survived / jnp.float32(max(total, 1)),
+             "rung_hit": rung, "n_rungs": len(rungs),
+             # Overflow is per-shard (survivor skew can force one shard to
+             # its exhaustive rung while the global total still fits), so
+             # derive it from the pmax'd rung, not the psum'd count.
+             "slot_overflow": (rung == len(rungs) - 1
+                               if len(rungs) > 1 else jnp.bool_(False)),
+             "bound_backend": state.backend}
     return vals, ids, stats
 
 
@@ -386,6 +447,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
 def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
                       axis: str = "model", method: str = "pqtopk",
                       pq_cfg: Optional[PQConfig] = None,
+                      ladder=None,
                       ) -> Tuple[jax.Array, jax.Array]:
     """Item-sharded retrieval: codes sharded over ``axis``; each shard runs
     PQTopK locally and contributes k candidates to an all-gather merge.
@@ -397,7 +459,7 @@ def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
         return _dense_top_items_sharded(params, phi, k, mesh, axis)
     if method == "pqtopk_pruned":
         return top_items_pruned_sharded(params, phi, k, mesh, axis,
-                                        pq_cfg=pq_cfg)
+                                        pq_cfg=pq_cfg, ladder=ladder)
     n = params["codes"].shape[0]
     n_shards = mesh.shape[axis]
     pad = (-n) % n_shards

@@ -146,6 +146,55 @@ def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
     return fv, jnp.take(gid, pos)
 
 
+def _pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
+                          slot_lists, count: jax.Array, *, tile: int,
+                          batch_tile: int, use_kernel: bool,
+                          interpret: bool):
+    """Non-jitted ladder core (shard_map bodies call this directly).
+
+    ``slot_lists`` is a tuple of ``-1``-padded compacted tile buffers of
+    strictly increasing static length, the last one full-length
+    (exhaustive).  Lowers to a nested ``lax.cond`` chain: the first rung
+    whose slot count holds ``count`` scores its buffer; every branch lives
+    in the same traced computation, so the dispatch count never changes.
+    -> (vals (B, k), ids (B, k), rung i32 — index of the rung taken).
+    """
+    def rung_fn(i):
+        def run():
+            v, ii = _pq_topk_tiles(codes, s, k, slot_lists[i], tile=tile,
+                                   batch_tile=batch_tile,
+                                   use_kernel=use_kernel,
+                                   interpret=interpret)
+            return v, ii, jnp.int32(i)
+        if i == len(slot_lists) - 1:
+            return run
+        nxt = rung_fn(i + 1)
+        budget = slot_lists[i].shape[0]
+        return lambda: jax.lax.cond(count <= budget, run, nxt)
+
+    return rung_fn(0)()
+
+
+def pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
+                         slot_lists, count: jax.Array, *, tile: int,
+                         batch_tile: int = _k.DEFAULT_BATCH_TILE,
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    """Slot-budget-ladder scoring over compacted tile buffers (the
+    cascade's scoring stage when a calibrated ladder is active).  See
+    :func:`_pq_topk_tiles_ladder`; this wrapper only resolves the
+    backend-dependent kernel/interpret defaults — jit the caller (the
+    cascade is itself one traced computation)."""
+    if use_kernel is None:
+        use_kernel = compat.on_tpu()
+    if interpret is None:
+        interpret = not compat.on_tpu()
+    return _pq_topk_tiles_ladder(
+        codes, s, k, tuple(jnp.asarray(sl, jnp.int32) for sl in slot_lists),
+        count, tile=tile, batch_tile=batch_tile, use_kernel=use_kernel,
+        interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "tile", "batch_tile",
                                              "use_kernel", "interpret"))
 def pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,

@@ -34,24 +34,40 @@ def main(argv=None):
                     choices=["greedy", "adaptive"],
                     help="theta-seeding policy for the pruned cascade "
                          "(overrides the arch config's PQConfig)")
+    ap.add_argument("--bound-backend", default=None,
+                    choices=["bitmask", "range"],
+                    help="pruned-cascade bound backend (overrides the arch "
+                         "config's PQConfig): bitmask = uint32 code-"
+                         "presence sets; range = int16 min/max code ranges "
+                         "(1/8 the metadata, looser bounds)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="disable the build-time slot-budget ladder "
+                         "calibration for the pruned cascade (serve the "
+                         "full-length compacted buffer instead)")
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert arch.family == "seqrec", "serve.py drives the seqrec archs"
     cfg = arch.model
+    pq_overrides = {}
     if args.seed_policy is not None:
+        pq_overrides["seed_policy"] = args.seed_policy
+    if args.bound_backend is not None:
+        pq_overrides["bound_backend"] = args.bound_backend
+    if pq_overrides:
         if getattr(cfg, "pq", None) is None:
-            raise SystemExit(f"--seed-policy: arch {args.arch!r} has no PQ "
-                             "head (dense item embedding); seed policy only "
-                             "applies to the pruned PQ cascade")
+            raise SystemExit(f"arch {args.arch!r} has no PQ head (dense "
+                             "item embedding); --seed-policy/--bound-"
+                             "backend only apply to the pruned PQ cascade")
         from dataclasses import replace
-        cfg = replace(cfg, pq=replace(cfg.pq, seed_policy=args.seed_policy))
+        cfg = replace(cfg, pq=replace(cfg.pq, **pq_overrides))
     from repro.models import seqrec as m
     params = m.init_seqrec(jax.random.PRNGKey(0), cfg)
 
     engine = RetrievalEngine.for_seqrec(params, cfg, k=args.k,
                                         max_batch=args.max_batch,
-                                        method=args.method)
+                                        method=args.method,
+                                        calibrate=not args.no_calibrate)
     rng = np.random.default_rng(0)
     # Warm the jit caches (per padding bucket) before the timed stream.
     for b in (1, args.max_batch):
@@ -74,6 +90,10 @@ def main(argv=None):
     print(f"mRT={stats['mRT_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
           f"timeouts={int(stats['timeouts'])} "
           f"n_compiles={int(stats['n_compiles'])}")
+    if engine.ladder is not None:
+        print(f"ladder={engine.ladder} "
+              f"rung_hit_fraction={stats['rung_hit_fraction']:.2f} "
+              f"rung_counts={stats['rung_counts']}")
     return results
 
 

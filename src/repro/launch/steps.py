@@ -90,6 +90,12 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
                variant: str) -> StepBundle:
     from repro.models import transformer as T
     cfg = arch.model
+    if variant == "pruned_range_head" and cfg.pq_head is not None:
+        # Range-bound backend cell: the abstract PQ head carries int16
+        # code-range metadata instead of uint32 presence bitmasks.
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, pq_head=_rep(cfg.pq_head, bound_backend="range"))
+        arch = _rep(arch, model=cfg)
     plan = shd.lm_activation_plan(
         mesh, shard_seq=variant != "noseq",
         tp_internal=variant in ("seqpar_tp", "seqpar_tp_dots"),
@@ -182,6 +188,9 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
             "onehot_head": "pqtopk_onehot",
             "fused_head": "pqtopk_fused",
             "pruned_head": "pqtopk_pruned",
+            # Same cascade, range-bound metadata (cfg.pq_head replaced
+            # above) — proves the backend is decode-loop viable too.
+            "pruned_range_head": "pqtopk_pruned",
             "approx_head": "pqtopk_approx"}.get(variant, "pqtopk")
 
     def decode(p, tok, pos, caches):
@@ -207,6 +216,12 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
                    variant: str) -> StepBundle:
     from repro.models import seqrec as SR
     cfg = arch.model
+    if variant in ("pruned_range_head", "sharded_pruned_range"):
+        # Range-bound backend cells: abstract params carry int16 code
+        # ranges instead of uint32 presence bitmasks.
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, pq=_rep(cfg.pq, bound_backend="range"))
+        arch = _rep(arch, model=cfg)
     plan = shd.lm_activation_plan(mesh, shard_seq=False)
     b_axes = _batch_spec(mesh)
     params_abs = SR.abstract_seqrec(cfg)
@@ -243,6 +258,9 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
               # cumsum-scatter compaction and compacted fused scoring all
               # trace into the one jittable serve step.
               "pruned_head": "pqtopk_pruned",
+              # Range-bound backend (cfg.pq replaced above): same
+              # single-dispatch cascade off int16 min/max code ranges.
+              "pruned_range_head": "pqtopk_pruned",
               "approx_head": "pqtopk_approx",
               "sharded_head": "pqtopk",
               "sharded_head_bm": "pqtopk",
@@ -251,7 +269,8 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
               # One-shard_map pruned cascade with pmax-shared theta; the
               # dry-run's abstract state is shards=1, so this cell traces
               # the in-graph shard-aligned rebuild fallback.
-              "sharded_pruned": "pqtopk_pruned"}.get(variant, "pqtopk")
+              "sharded_pruned": "pqtopk_pruned",
+              "sharded_pruned_range": "pqtopk_pruned"}.get(variant, "pqtopk")
     sharded = variant.startswith("sharded_")
     serve_b_axes = b_axes
     if variant.endswith("_bm"):

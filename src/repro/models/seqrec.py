@@ -154,17 +154,37 @@ def sequence_embedding(params: Params, item_seq: jax.Array, cfg: SeqRecConfig,
 
 
 def serve_topk(params: Params, item_seq: jax.Array, cfg: SeqRecConfig, *,
-               k: int = 10, method: str = "pqtopk", sharded_mesh=None):
+               k: int = 10, method: str = "pqtopk", sharded_mesh=None,
+               ladder=None, return_rung: bool = False):
     """Full serving path: backbone -> phi -> scoring -> TopK (Table 3).
 
     ``sharded_mesh``: item-sharded distributed retrieval (shard-local
-    PQTopK + O(k x shards) merge instead of an O(B x N) score gather)."""
+    PQTopK + O(k x shards) merge instead of an O(B x N) score gather).
+
+    ``ladder``/``return_rung`` apply to ``method="pqtopk_pruned"`` only:
+    the calibrated slot-budget ladder for the cascade, and whether to
+    additionally return the rung taken (i32 scalar — still one dispatch;
+    the serving engine uses it to track ``rung_hit_fraction``)."""
     phi = constrain(sequence_embedding(params, item_seq, cfg), "phi")
+    if method != "pqtopk_pruned" and return_rung:
+        raise ValueError("return_rung is only meaningful for the pruned "
+                         "cascade (method='pqtopk_pruned')")
     if sharded_mesh is not None:
+        if method == "pqtopk_pruned" and return_rung:
+            vals, ids, stats = retrieval_head.top_items_pruned_sharded(
+                params["item_emb"], phi, k, sharded_mesh, pq_cfg=cfg.pq,
+                ladder=ladder, return_stats=True)
+            return ids, vals, stats["rung_hit"]
         vals, ids = retrieval_head.top_items_sharded(
             params["item_emb"], phi, k, sharded_mesh, method=method,
-            pq_cfg=cfg.pq)
+            pq_cfg=cfg.pq, ladder=ladder)
     else:
-        vals, ids = retrieval_head.top_items(params["item_emb"], phi, k,
-                                             method=method, pq_cfg=cfg.pq)
+        out = retrieval_head.top_items(params["item_emb"], phi, k,
+                                       method=method, pq_cfg=cfg.pq,
+                                       ladder=ladder,
+                                       return_rung=return_rung)
+        if return_rung:
+            vals, ids, rung = out
+            return ids, vals, rung
+        vals, ids = out
     return ids, vals

@@ -76,7 +76,7 @@ class RetrievalEngine:
     def __init__(self, serve_fn: Callable[[jax.Array, int], Tuple[jax.Array, jax.Array]],
                  *, seq_len: int, k: int = 10, max_k: Optional[int] = None,
                  max_batch: int = 64, method: Optional[str] = None,
-                 jit_serve: bool = True):
+                 jit_serve: bool = True, ladder: Optional[Tuple[int, ...]] = None):
         """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores).
 
         ``method`` is informational here (the scoring route is baked into
@@ -100,6 +100,13 @@ class RetrievalEngine:
         min(N, kernel tile) for the baked-in route — :meth:`for_seqrec`
         derives this bound itself); the default is ``k``, which is always
         safe because ``serve_fn`` must support the engine's own k.
+
+        ``ladder`` records the calibrated slot-budget ladder baked into a
+        pruned ``serve_fn`` (informational; :meth:`for_seqrec` calibrates
+        and sets it).  A ladder-enabled serve fn returns a third output —
+        the rung taken — which the engine tallies into ``rung_counts`` so
+        ``stats()["rung_hit_fraction"]`` reports how often serving stayed
+        on a non-exhaustive rung.
         """
         self._serve_fn = serve_fn
         self._jit_serve = jit_serve
@@ -110,22 +117,39 @@ class RetrievalEngine:
         self.k = k
         self.max_k = k if max_k is None else max(max_k, k)
         self.method = method
+        self.ladder = None if ladder is None else tuple(ladder)
+        self.rung_counts: collections.Counter = collections.Counter()
         self.batcher = MicroBatcher(max_batch=max_batch)
         self.latencies_ms: List[float] = []
         self.timeouts = 0
 
     @classmethod
     def for_seqrec(cls, params, cfg, *, k: int = 10, max_batch: int = 64,
-                   method: Optional[str] = None,
-                   sharded_mesh=None) -> "RetrievalEngine":
+                   method: Optional[str] = None, sharded_mesh=None,
+                   calibrate: Optional[bool] = None,
+                   survival_stats: Optional[Sequence[int]] = None,
+                   ladder: Optional[Tuple[int, ...]] = None,
+                   ) -> "RetrievalEngine":
         """Stand up an engine on a seqrec model with an explicit scoring
         route.  ``method=None`` falls back to ``cfg.serve_method`` — the
         production configs default to ``"pqtopk_fused"`` (the Pallas fused
         score+top-k kernel).  ``method="pqtopk_pruned"`` is the
         single-dispatch in-graph cascade: backbone, bounds, theta seeding,
         survivor compaction and compacted scoring all trace into ONE jitted
-        serve function — no host sync anywhere on the serve path."""
-        from repro.core import retrieval_head
+        serve function — no host sync anywhere on the serve path.
+
+        For the pruned route the engine also installs a **calibrated
+        slot-budget ladder**: a one-shot calibration pass at build time
+        (``calibrate``, default on; or recorded ``survival_stats`` — a
+        sequence of surviving-tile counts from production traffic) feeds
+        ``pruning.calibrate_ladder``, and the resulting 2-3 rung ladder of
+        power-of-two budgets is baked into the serve fn.  The common case
+        then scores a small compacted buffer, overflow escalates rung by
+        rung inside the same dispatch, and the final rung is always
+        exhaustive — exactness at any skew.  An explicit ``ladder`` skips
+        calibration entirely; ``calibrate=False`` disables the ladder.
+        """
+        from repro.core import pruning, retrieval_head
         from repro.kernels.pqtopk import kernel as pqtopk_kernel
         from repro.models import seqrec as seqrec_lib
         method = method or getattr(cfg, "serve_method", "pqtopk")
@@ -143,13 +167,76 @@ class RetrievalEngine:
                       retrieval_head.ensure_sharded_pruned_state(
                           params["item_emb"], sharded_mesh, k_hint=max_k)}
 
+        if method == "pqtopk_pruned" and ladder is None \
+                and calibrate is not False:
+            state = params["item_emb"].get("pruned") \
+                if retrieval_head.is_pq(params["item_emb"]) else None
+            if isinstance(state, pruning.PrunedHeadState):
+                counts = (list(survival_stats)
+                          if survival_stats is not None else
+                          cls._observe_survival(params, cfg, k=k,
+                                                max_batch=max_batch))
+                # Sharded states tile per shard: calibrate rungs against
+                # the per-shard tile count the sharded cascade compacts.
+                t = (state.tiles_per_shard if state.shards > 1
+                     else state.n_tiles)
+                counts = [c if state.shards <= 1 else -(-c // state.shards)
+                          for c in counts]
+                ladder = pruning.calibrate_ladder(counts, t, k, state.tile)
+
+        with_rung = method == "pqtopk_pruned" and ladder is not None
+
         def serve_fn(seqs, kk):
             return seqrec_lib.serve_topk(params, seqs, cfg, k=kk,
                                          method=method,
-                                         sharded_mesh=sharded_mesh)
+                                         sharded_mesh=sharded_mesh,
+                                         ladder=ladder,
+                                         return_rung=with_rung)
 
         return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
-                   max_batch=max_batch, method=method)
+                   max_batch=max_batch, method=method, ladder=ladder)
+
+    @staticmethod
+    def _observe_survival(params, cfg, *, k: int, max_batch: int,
+                          n_batches: int = 3, seed: int = 0) -> List[int]:
+        """One-shot build-time calibration pass: surviving-tile counts of
+        the pruned cascade's bounds+theta prefix (no scoring) over a few
+        synthetic request batches at representative batch sizes.  Survival
+        uses the batch-any rule, so small and full batches bracket the
+        counts serving will see.  Production deployments can skip this by
+        recording real counts and passing ``survival_stats``."""
+        from repro.core import pruning, retrieval_head, scoring
+        from repro.models import seqrec as seqrec_lib
+        head = params["item_emb"]
+        state = head["pruned"]
+        seed_kw = retrieval_head._seed_kwargs(getattr(cfg, "pq", None))
+
+        def count_fn(seqs):
+            phi = seqrec_lib.sequence_embedding(params, seqs, cfg)
+            s = scoring.subid_scores(head["sub_emb"].astype(jnp.float32),
+                                     phi.astype(jnp.float32))
+            if state.shards > 1:
+                # Flat counts from a per-shard layout would misread tile
+                # boundaries; bound each shard's tile block independently
+                # (same layout the sharded cascade sees) and sum.
+                st_flat = pruning.build_pruned_state(
+                    head["codes"], state.b, state.tile,
+                    backend=state.backend)
+                return pruning.survival_count(head["codes"], s, k, st_flat,
+                                              **seed_kw)
+            return pruning.survival_count(head["codes"], s, k, state,
+                                          **seed_kw)
+
+        fn = jax.jit(count_fn)
+        rng = np.random.default_rng(seed)
+        counts = []
+        for bsz in dict.fromkeys((1, min(8, max_batch), max_batch)):
+            for _ in range(n_batches):
+                seqs = rng.integers(
+                    1, cfg.n_items + 1,
+                    (bsz, cfg.max_seq_len)).astype(np.int32)
+                counts.append(int(fn(jnp.asarray(seqs))))
+        return counts
 
     def submit(self, req: Request):
         self.batcher.submit(req)
@@ -203,7 +290,15 @@ class RetrievalEngine:
         # recompiles — same policy as the batch-size padding buckets.
         kk = max(max(min(r.k, self.max_k) for r in reqs), self.k, 1)
         kk = MicroBatcher.bucket(kk, self.max_k)
-        ids, scores = self._variant(bucket, kk)(jnp.asarray(seqs))
+        out = self._variant(bucket, kk)(jnp.asarray(seqs))
+        if len(out) == 3:
+            # Ladder-enabled pruned route: third output is the rung taken
+            # (an i32 scalar riding the same dispatch) — tally it so
+            # stats() can report rung_hit_fraction.
+            ids, scores, rung = out
+            self.rung_counts[int(rung)] += 1
+        else:
+            ids, scores = out
         ids, scores = np.asarray(ids), np.asarray(scores)
         now = time.monotonic()
         out = []
@@ -223,15 +318,27 @@ class RetrievalEngine:
             out.extend(self.run_once())
         return out
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, Any]:
         lat = np.asarray(self.latencies_ms or [0.0])
-        return {
+        out: Dict[str, Any] = {
             "count": float(len(self.latencies_ms)),
             "mRT_ms": float(np.median(lat)),
             "p99_ms": float(np.percentile(lat, 99)),
             "timeouts": float(self.timeouts),
             "n_compiles": float(len(self._compiled)),
         }
+        if self.ladder is not None:
+            # Fraction of served batches that stayed on a non-exhaustive
+            # rung (the last rung of the normalised ladder scores every
+            # tile); per-rung batch counts for the curious.
+            total = sum(self.rung_counts.values())
+            non_exhaustive = sum(c for r, c in self.rung_counts.items()
+                                 if r < len(self.ladder) - 1)
+            out["ladder"] = self.ladder
+            out["rung_hit_fraction"] = (non_exhaustive / total if total
+                                        else 0.0)
+            out["rung_counts"] = dict(sorted(self.rung_counts.items()))
+        return out
 
 
 class DecodeEngine:

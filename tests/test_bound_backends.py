@@ -1,0 +1,524 @@
+"""Exactness property harness for the pluggable bound backends (PR 4).
+
+The pruned cascade is only worth its speedups if (a) every backend's tile
+bound *dominates* the true max item score in that tile and (b) the pruned
+top-k is *bit-identical* to the exhaustive oracle — including ties — for
+every (backend, ladder-rung, sharded/unsharded) combination.  This module
+is the property-based oracle for both invariants, plus the calibrated
+slot-budget ladder's safety properties (final rung always exhaustive;
+``run_once`` never returns fewer than k valid items) and the unified
+cascade stats schema (`pruning.STATS_KEYS`).
+
+Any future bound backend or budget policy must keep this file green —
+that is the whole point of the harness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PQConfig
+from repro.core import pruning, retrieval_head, scoring, topk as topk_lib
+
+BACKENDS = pruning.BOUND_BACKENDS
+
+
+def _property_test(strategy_fn, fallback, max_examples=20):
+    """Property-test shim: with hypothesis installed the check runs under
+    ``@given`` over ``strategy_fn(st)``'s strategies; in offline
+    containers (no hypothesis wheel) it runs the deterministic
+    ``fallback`` example grid instead — the invariants are always
+    exercised, just without randomised search."""
+    def deco(check):
+        def run():
+            try:
+                from hypothesis import given, settings, strategies as st
+            except ImportError:
+                for ex in fallback:
+                    check(*ex)
+                return
+            settings(max_examples=max_examples, deadline=None)(
+                given(*strategy_fn(st))(check))()
+        return run
+    return deco
+
+
+def _oracle(codes, s, k):
+    r = scoring.score_pqtopk(codes.astype(jnp.int32), s)
+    return topk_lib.tiled_topk(r, k)
+
+
+def _make_case(n, m, b, bq, *, code_dtype=jnp.int32, clustered=False,
+               skewed=False, seed=0):
+    rng = np.random.default_rng(seed)
+    if clustered:
+        centers = (np.arange(n) / n * b).astype(np.int64)
+        codes_np = (centers[:, None] + rng.integers(-1, 2, (n, m))) % b
+    else:
+        codes_np = rng.integers(0, b, (n, m))
+    codes = jnp.asarray(codes_np, code_dtype)
+    g = rng.standard_normal((bq, m, b))
+    if skewed:
+        g = np.sign(g) * np.abs(g) ** 3
+    s = jnp.asarray(g, jnp.float32)
+    return codes, s
+
+
+def _tile_true_max(codes, s, tile):
+    """Per-tile max true item score (the quantity every bound must
+    dominate) -> (B, T)."""
+    r = np.asarray(scoring.score_pqtopk(codes.astype(jnp.int32), s))
+    n = r.shape[1]
+    pad = (-n) % tile
+    if pad:
+        r = np.pad(r, ((0, 0), (0, pad)), constant_values=-np.inf)
+    return r.reshape(r.shape[0], -1, tile).max(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# range backend: state layout, footprint, tightness ordering
+# ---------------------------------------------------------------------------
+
+
+def test_range_state_layout_and_footprint():
+    codes, _ = _make_case(1 << 14, 8, 256, 1, seed=1)
+    bm = pruning.build_pruned_state(codes, 256, 1024, backend="bitmask")
+    rg = pruning.build_pruned_state(codes, 256, 1024, backend="range")
+    assert rg.backend == "range" and rg.packed is None
+    assert rg.code_lo.shape == rg.code_hi.shape == (16, 8)
+    assert rg.code_lo.dtype == rg.code_hi.dtype == jnp.int16
+    assert rg.nbytes == 16 * 8 * 4                 # lo + hi int16
+    # The headline claim: at b=256 the range metadata is 1/8 of the packed
+    # bitmasks (and 1/64 of the PR 2 bool layout).
+    assert rg.nbytes * 8 == bm.nbytes
+    assert rg.nbytes * 64 == rg.bool_nbytes
+    assert int(np.asarray(rg.code_lo).min()) >= 0
+    assert int(np.asarray(rg.code_hi).max()) < 256
+
+
+def test_range_build_excludes_tile_padding():
+    """Tile-alignment padding rows must not drag code_lo to 0."""
+    codes = jnp.full((10, 2), 7, jnp.int32)        # tile=8 -> last tile has 2
+    st = pruning.build_pruned_state(codes, 16, 8, backend="range")
+    np.testing.assert_array_equal(np.asarray(st.code_lo), 7)
+    np.testing.assert_array_equal(np.asarray(st.code_hi), 7)
+
+
+def test_single_item_tile_range_bound_is_bitexact():
+    """lo == hi -> the range max IS that item's sub-score; with the shared
+    tree_sum order the bound equals the score bit-for-bit."""
+    codes, s = _make_case(13, 4, 64, 3, seed=2)
+    st = pruning.build_pruned_state(codes, 64, 1, backend="range")
+    bounds = pruning.tile_bounds(st, s)
+    r = scoring.score_pqtopk(codes, s)
+    np.testing.assert_array_equal(np.asarray(bounds), np.asarray(r))
+
+
+def test_range_bounds_at_least_as_loose_as_bitmask():
+    """The range bound relaxes the presence set to its convex hull, so it
+    can only be >= the bitmask bound (equal when codes fill the range)."""
+    codes, s = _make_case(3000, 4, 64, 3, clustered=True, seed=3)
+    bm = pruning.build_pruned_state(codes, 64, 256, backend="bitmask")
+    rg = pruning.build_pruned_state(codes, 64, 256, backend="range")
+    b_bm = np.asarray(pruning.tile_bounds(bm, s))
+    b_rg = np.asarray(pruning.tile_bounds(rg, s))
+    assert (b_rg >= b_bm).all()
+
+
+def test_backend_validation():
+    codes, _ = _make_case(100, 2, 16, 1)
+    with pytest.raises(ValueError, match="unknown bound backend"):
+        pruning.build_pruned_state(codes, 16, 64, backend="interval")
+    with pytest.raises(ValueError, match="int16"):
+        pruning.build_pruned_state(codes, 2 ** 16, 64, backend="range")
+    with pytest.raises(ValueError, match="bound_backend"):
+        PQConfig(bound_backend="interval")
+    with pytest.raises(ValueError, match="int16"):
+        PQConfig(b=2 ** 16, code_dtype="uint16", bound_backend="range")
+    PQConfig(bound_backend="range")                # valid
+
+
+def test_range_state_is_a_pytree_in_head_params():
+    params = retrieval_head.init(jax.random.PRNGKey(0), 500, 32,
+                                 PQConfig(m=4, b=16, bound_backend="range"))
+    state = params["pruned"]
+    assert state.backend == "range" and state.packed is None
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    assert jax.tree_util.tree_unflatten(treedef, leaves)[
+        "pruned"].backend == "range"
+    abs_params = retrieval_head.abstract(500, 32,
+                                         PQConfig(m=4, b=16,
+                                                  bound_backend="range"))
+    assert (jax.tree.structure(abs_params) == jax.tree.structure(params))
+    assert abs_params["pruned"].code_lo.shape == state.code_lo.shape
+
+
+def test_ensure_sharded_state_preserves_backend():
+    mesh = jax.make_mesh((1,), ("model",))
+    params = retrieval_head.init(jax.random.PRNGKey(0), 1000, 16,
+                                 PQConfig(m=4, b=16, bound_backend="range"))
+    phi = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    p2 = retrieval_head.ensure_sharded_pruned_state(params, mesh, k_hint=7)
+    assert p2["pruned"].backend == "range"
+    p3 = retrieval_head.ensure_sharded_pruned_state(p2, mesh, k_hint=7)
+    assert p3["pruned"] is p2["pruned"]            # idempotent
+    del phi
+
+
+# ---------------------------------------------------------------------------
+# property suite: dominance invariant (every backend, every regime)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.hypothesis
+def test_property_bounds_dominate_true_tile_max():
+    """(a) of the acceptance matrix: for random catalogues (odd N, b in
+    {64, 256}, int8/uint8/int32 codes, skewed and uniform distributions),
+    EVERY backend's tile bound dominates the true max item score in the
+    tile."""
+    @_property_test(
+        lambda st: (st.integers(0, 2 ** 31 - 1),
+                    st.sampled_from([257, 999, 1021, 2048]),  # odd + exact
+                    st.sampled_from([64, 256]),
+                    st.sampled_from(["int8", "uint8", "int32"]),
+                    st.booleans(), st.booleans(),
+                    st.sampled_from([64, 256, 512])),
+        fallback=[(0, 999, 64, "int8", True, True, 256),
+                  (1, 1021, 256, "uint8", False, True, 256),
+                  (2, 257, 256, "int32", True, False, 64),
+                  (3, 2048, 64, "int32", False, False, 512)],
+        max_examples=25)
+    def check(seed, n, b, dtype, clustered, skewed, tile):
+        if b > 128 and dtype == "int8":
+            dtype = "uint8"
+        codes, s = _make_case(n, 3, b, 2, code_dtype=jnp.dtype(dtype),
+                              clustered=clustered, skewed=skewed, seed=seed)
+        tmax = _tile_true_max(codes, s, min(tile, n))
+        for backend in BACKENDS:
+            st_ = pruning.build_pruned_state(codes, b, tile, backend=backend)
+            bounds = np.asarray(pruning.tile_bounds(st_, s))
+            assert (bounds >= tmax).all(), (backend, seed)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# property suite: end-to-end bit parity vs the exhaustive oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.hypothesis
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_property_pruned_topk_bit_identical(backend):
+    """(b): pruned top-k == exhaustive oracle bit-for-bit (values AND ids,
+    tie policy included) for every ladder-rung configuration, flat."""
+    @_property_test(
+        lambda st: (st.integers(0, 2 ** 31 - 1),
+                    st.sampled_from([999, 1021, 2048]),
+                    st.sampled_from([64, 256]),
+                    st.sampled_from(["int8", "uint8", "int32"]),
+                    st.booleans(),
+                    st.sampled_from([None, (1,), (2, 8)])),
+        fallback=[(0, 999, 64, "int8", True, None),
+                  (1, 1021, 256, "uint8", True, (1,)),
+                  (2, 2048, 64, "int32", False, (2, 8)),
+                  (3, 999, 256, "int32", True, (2, 8))],
+        max_examples=12)
+    def check(seed, n, b, dtype, clustered, ladder):
+        if b > 128 and dtype == "int8":
+            dtype = "uint8"
+        codes, s = _make_case(n, 3, b, 2, code_dtype=jnp.dtype(dtype),
+                              clustered=clustered, skewed=clustered,
+                              seed=seed)
+        k = 10
+        v_ref, i_ref = _oracle(codes, s, k)
+        st_ = pruning.build_pruned_state(codes, b, 256, backend=backend)
+        v, i = pruning.cascade_topk_ingraph(codes, s, k, st_, ladder=ladder)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+    check()
+
+
+@pytest.mark.hypothesis
+@pytest.mark.sharded
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_property_pruned_topk_bit_identical_sharded(backend):
+    """(b), sharded leg: the one-shard_map cascade with pmax-shared theta
+    matches the exhaustive route bit-for-bit for both backends and ladder
+    shapes (odd N exercises the shard-padding mask)."""
+    mesh = jax.make_mesh((1,), ("model",))
+
+    @_property_test(
+        lambda st: (st.integers(0, 10_000),
+                    st.sampled_from([999, 1021]),
+                    st.sampled_from([None, (2, 8)])),
+        fallback=[(0, 999, None), (1, 1021, (2, 8))],
+        max_examples=6)
+    def check(seed, n, ladder):
+        params, phi = _pq_head(n, d=16, m=4, b=8, bq=2, seed=seed % 97,
+                               backend=backend)
+        k = 7
+        v1, i1 = retrieval_head.top_items(params, phi, k, method="pqtopk")
+        v2, i2, stats = retrieval_head.top_items_pruned_sharded(
+            params, phi, k, mesh, ladder=ladder, return_stats=True)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        assert set(stats) == set(pruning.STATS_KEYS)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# acceptance legs: under jit, inside lm_decode_step, sharded (per backend)
+# ---------------------------------------------------------------------------
+
+
+def _pq_head(n, d=32, m=4, b=16, bq=3, seed=0, backend="bitmask"):
+    params = retrieval_head.init(jax.random.PRNGKey(seed), n, d,
+                                 PQConfig(m=m, b=b, bound_backend=backend))
+    phi = jax.random.normal(jax.random.PRNGKey(seed + 1), (bq, d))
+    return params, phi
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_under_jit_with_threaded_state(backend):
+    params, phi = _pq_head(4097, bq=4, backend=backend)
+    k = 9
+    v_ref, i_ref = retrieval_head.top_items(params, phi, k, method="pqtopk")
+    fn = jax.jit(lambda p, x: retrieval_head.top_items(
+        p, x, k, method="pqtopk_pruned", ladder=(2, 8)))
+    v, i = fn(params, phi)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_traces_single_jaxpr_with_ladder(backend):
+    """The whole pruned route (either backend, ladder enabled) must trace
+    into one jaxpr — any host sync in the rung chain would throw."""
+    params, phi = _pq_head(4097, bq=2, backend=backend)
+    jaxpr = jax.make_jaxpr(lambda p, x: retrieval_head.top_items(
+        p, x, 5, method="pqtopk_pruned", ladder=(1, 2),
+        return_rung=True))(params, phi)
+    assert len(jaxpr.jaxpr.eqns) > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_inside_lm_decode_step(backend):
+    from dataclasses import replace
+    from repro.configs.base import get_reduced
+    from repro.models import transformer as T
+    arch = get_reduced("qwen2.5-14b")
+    cfg = replace(arch.model,
+                  pq_head=replace(arch.model.pq_head, bound_backend=backend))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    assert params["pq_head"]["pruned"].backend == backend
+    caches = T.init_caches(cfg, 2, 16)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    pos = jnp.int32(0)
+    outs = {}
+    for meth in ("pqtopk", "pqtopk_pruned"):
+        step = jax.jit(lambda p, t_, c, m_=meth: T.lm_decode_step(
+            p, t_, pos, c, cfg, k=8, head_method=m_))
+        ids, vals, _ = step(params, tok, caches)
+        outs[meth] = (np.asarray(ids), np.asarray(vals))
+    np.testing.assert_array_equal(outs["pqtopk_pruned"][0],
+                                  outs["pqtopk"][0])
+    np.testing.assert_array_equal(outs["pqtopk_pruned"][1],
+                                  outs["pqtopk"][1])
+
+
+@pytest.mark.sharded
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", [128, 1013])
+def test_backend_sharded_matches_plain(backend, n):
+    mesh = jax.make_mesh((1,), ("model",))
+    params, phi = _pq_head(n, d=16, m=4, b=8, bq=2, backend=backend)
+    v1, i1 = retrieval_head.top_items(params, phi, 7, method="pqtopk")
+    v2, i2 = retrieval_head.top_items_sharded(params, phi, 7, mesh,
+                                              method="pqtopk_pruned",
+                                              ladder=(2, 4))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert (np.asarray(i2) < n).all()
+
+
+# ---------------------------------------------------------------------------
+# calibration-path properties (the overflow-escalation lax.cond chain)
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_ladder_adversarial_distributions():
+    """all-survive / none-survive / bimodal must all yield a ladder whose
+    FINAL rung is exhaustive, with strictly ascending budgets >= the k
+    floor."""
+    n_tiles, k, tile = 64, 10, 512
+    floor = -(-k // tile)
+    cases = {
+        "all_survive": [n_tiles] * 10,
+        "none_survive": [0] * 10,
+        "bimodal": [1] * 8 + [n_tiles] * 2,
+        "empty": [],
+    }
+    for name, counts in cases.items():
+        ladder = pruning.calibrate_ladder(counts, n_tiles, k, tile)
+        assert ladder[-1] == n_tiles, (name, ladder)
+        assert list(ladder) == sorted(set(ladder)), (name, ladder)
+        assert all(r >= floor for r in ladder), (name, ladder)
+    # Bimodal keeps a cheap rung for the low mode.
+    assert pruning.calibrate_ladder(cases["bimodal"], n_tiles, k,
+                                    tile)[0] < n_tiles
+
+
+@pytest.mark.hypothesis
+def test_property_normalized_ladder_always_ends_exhaustive():
+    @_property_test(
+        lambda st: (st.lists(st.integers(-5, 10_000), max_size=6),
+                    st.integers(1, 512), st.integers(1, 64),
+                    st.integers(1, 2048)),
+        fallback=[([], 1, 1, 1), ([0, -3, 9999], 512, 64, 1),
+                  ([4, 4, 8], 16, 10, 512), ([1, 2, 4, 8], 3, 64, 2048),
+                  ([512], 512, 1, 1)],
+        max_examples=50)
+    def check(ladder, n_tiles, k, tile):
+        rungs = pruning.normalize_ladder(ladder, n_tiles, k, tile)
+        assert rungs[-1] == n_tiles
+        assert list(rungs) == sorted(set(rungs))
+        floor = min(max(1, -(-k // tile)), n_tiles)
+        assert all(floor <= r <= n_tiles for r in rungs)
+
+    check()
+
+
+@pytest.mark.hypothesis
+def test_property_calibrated_ladder_stays_exact():
+    """Whatever counts calibration saw, serving with the resulting ladder
+    is bit-identical to the oracle (the final rung guarantees it)."""
+    @_property_test(
+        lambda st: (st.integers(0, 2 ** 31 - 1),
+                    st.lists(st.integers(0, 64), min_size=1, max_size=8),
+                    st.sampled_from(BACKENDS)),
+        fallback=[(0, [0, 0, 0], "bitmask"), (1, [64] * 4, "range"),
+                  (2, [1, 1, 30], "bitmask"), (3, [2, 5], "range")],
+        max_examples=10)
+    def check(seed, counts, backend):
+        codes, s = _make_case(2048, 3, 64, 2, seed=seed)
+        k = 5
+        st_ = pruning.build_pruned_state(codes, 64, 256, backend=backend)
+        ladder = pruning.calibrate_ladder(counts, st_.n_tiles, k, st_.tile)
+        v_ref, i_ref = _oracle(codes, s, k)
+        v, i = pruning.cascade_topk_ingraph(codes, s, k, st_, ladder=ladder)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+    check()
+
+
+def test_overflow_escalates_to_final_rung():
+    """Uniform codes -> every tile survives -> every finite budget
+    overflows -> the cond chain must land on the exhaustive final rung."""
+    codes, s = _make_case(5000, 4, 64, 3, seed=11)
+    k = 7
+    st_ = pruning.build_pruned_state(codes, 64, 512)      # 10 tiles
+    v_ref, i_ref = _oracle(codes, s, k)
+    v, i, stats = pruning.cascade_topk_ingraph(
+        codes, s, k, st_, ladder=(1, 2, 4), return_stats=True)
+    assert int(stats["rung_hit"]) == int(stats["n_rungs"]) - 1
+    assert bool(stats["slot_overflow"])
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+
+
+def _engine(method, *, n_items=2000, k=5, **kw):
+    from dataclasses import replace
+    from repro.configs.base import get_reduced
+    from repro.models import seqrec as seqrec_lib
+    from repro.serving.engine import RetrievalEngine
+    cfg = replace(get_reduced("sasrec-recjpq").model, n_items=n_items)
+    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg)
+    return RetrievalEngine.for_seqrec(params, cfg, k=k, max_batch=8,
+                                      method=method, **kw), cfg
+
+
+@pytest.mark.slow
+def test_run_once_never_returns_fewer_than_k_valid_items():
+    """Regression for the overflow-escalation chain: whatever survival
+    stats calibration was fed — all-survive, none-survive, bimodal — every
+    request gets its full k valid items, identical to the unpruned route."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(3)
+    seqs = [rng.integers(1, 2000, 8) for _ in range(4)]
+    ref_eng, cfg = _engine("pqtopk", calibrate=False)
+    for i, sq in enumerate(seqs):
+        ref_eng.submit(Request(i, sq, k=5))
+    ref = {r.request_id: r for r in ref_eng.drain()}
+    n_tiles = 1          # reduced catalogue fits one tile; ladders degrade
+    for stats_name, counts in {
+            "all_survive": [n_tiles] * 6, "none_survive": [0] * 6,
+            "bimodal": [0, 0, 0, n_tiles, n_tiles]}.items():
+        eng, _ = _engine("pqtopk_pruned", survival_stats=counts)
+        for i, sq in enumerate(seqs):
+            eng.submit(Request(i, sq, k=5))
+        out = {r.request_id: r for r in eng.drain()}
+        assert len(out) == len(seqs), stats_name
+        for i in range(len(seqs)):
+            assert len(out[i].items) == 5, stats_name
+            # Valid = real catalogue rows (row 0 is the padding embedding,
+            # still a scoreable row — the invariant is "never an id past
+            # the catalogue or a sentinel", not "never row 0").
+            assert (out[i].items >= 0).all() and \
+                (out[i].items <= cfg.n_items).all(), stats_name
+            assert np.isfinite(out[i].scores).all(), stats_name
+            np.testing.assert_array_equal(out[i].items, ref[i].items)
+            np.testing.assert_array_equal(out[i].scores, ref[i].scores)
+
+
+@pytest.mark.slow
+def test_engine_calibrates_and_reports_rungs():
+    from repro.serving.engine import Request
+    eng, cfg = _engine("pqtopk_pruned", n_items=6000)
+    assert eng.ladder is not None and eng.ladder[-1] >= 1
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(i, rng.integers(1, cfg.n_items, 8), k=5))
+    eng.drain()
+    stats = eng.stats()
+    assert "ladder" in stats and "rung_hit_fraction" in stats
+    assert 0.0 <= stats["rung_hit_fraction"] <= 1.0
+    assert sum(stats["rung_counts"].values()) >= 1
+
+
+# ---------------------------------------------------------------------------
+# unified stats schema (host vs in-graph vs sharded)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_schema_identical_flat_routes():
+    codes, s = _make_case(3000, 4, 64, 2, clustered=True, skewed=True,
+                          seed=5)
+    k = 7
+    _, _, st_host = pruning.cascade_topk(codes, s, k, tile=256,
+                                         return_stats=True)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    _, _, st_graph = pruning.cascade_topk_ingraph(codes, s, k, state,
+                                                  ladder=(2, 4),
+                                                  return_stats=True)
+    assert set(st_host) == set(st_graph) == set(pruning.STATS_KEYS)
+    for st_ in (st_host, st_graph):
+        assert 0.0 <= float(st_["survival_fraction"]) <= 1.0
+        assert int(st_["rung_hit"]) < int(st_["n_rungs"])
+        assert st_["bound_backend"] in BACKENDS
+
+
+@pytest.mark.sharded
+def test_stats_schema_identical_sharded_route():
+    mesh = jax.make_mesh((1,), ("model",))
+    params, phi = _pq_head(1013, d=16, m=4, b=8, bq=2)
+    _, _, st_sh = retrieval_head.top_items_pruned_sharded(
+        params, phi, 7, mesh, ladder=(2, 4), return_stats=True)
+    assert set(st_sh) == set(pruning.STATS_KEYS)
+    assert 0.0 <= float(st_sh["survival_fraction"]) <= 1.0
+    assert int(st_sh["rung_hit"]) < int(st_sh["n_rungs"])
+    assert int(st_sh["n_scored"]) >= 1

@@ -8,6 +8,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd
 
+pytestmark = pytest.mark.sharded
+
 
 def test_param_rules_match_lm_paths():
     rules = shd.lm_param_rules(scan_layers=True)

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import get_config, list_archs
 from repro.launch.steps import build_step
 
+pytestmark = pytest.mark.sharded
+
 
 @pytest.fixture(scope="module")
 def mesh():

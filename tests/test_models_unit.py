@@ -3,6 +3,7 @@ windows, GQA), MoE routing, norms, RoPE, embedding bag substrate, AUGRU."""
 import pytest
 
 pytest.importorskip("hypothesis")  # keep tier-1 collection green without dev deps
+pytestmark = pytest.mark.hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

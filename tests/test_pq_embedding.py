@@ -2,6 +2,7 @@
 import pytest
 
 pytest.importorskip("hypothesis")  # keep tier-1 collection green without dev deps
+pytestmark = pytest.mark.hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

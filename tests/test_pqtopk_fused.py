@@ -105,6 +105,7 @@ def test_score_candidates_fused_subset():
 # item-sharded: fused per-shard top-k + O(k * shards) merge
 # ---------------------------------------------------------------------------
 
+@pytest.mark.sharded
 @pytest.mark.parametrize("n", [128, 101])   # 101: shard-padding rows masked
 def test_top_items_sharded_fused_matches_plain(n):
     mesh = jax.make_mesh((1,), ("model",))

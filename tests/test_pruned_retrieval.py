@@ -140,6 +140,7 @@ def test_top_items_pruned_requires_pq():
         retrieval_head.top_items_pruned(params, phi, 3)
 
 
+@pytest.mark.sharded
 @pytest.mark.parametrize("n", [128, 1013])   # odd N -> padding tail
 def test_top_items_pruned_sharded_matches_plain(n):
     mesh = jax.make_mesh((1,), ("model",))

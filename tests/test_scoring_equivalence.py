@@ -4,6 +4,7 @@ NDCG; we assert exact score equality), property-tested with hypothesis."""
 import pytest
 
 pytest.importorskip("hypothesis")  # keep tier-1 collection green without dev deps
+pytestmark = pytest.mark.hypothesis
 import hypothesis
 import hypothesis.strategies as st
 import jax

@@ -55,6 +55,7 @@ def test_pack_unpack_roundtrip(b):
         np.asarray(pruning.unpack_presence(packed, b)), np.asarray(present))
 
 
+@pytest.mark.hypothesis
 def test_pack_unpack_property():
     hypothesis = pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
@@ -311,6 +312,7 @@ def _pq_head(n, d=32, m=4, b=16, bq=3, seed=0, code_dtype="int32"):
     return params, phi
 
 
+@pytest.mark.slow
 def test_pruned_head_inside_lm_decode_step():
     """The cascade runs inside a jitted decode step off the cached
     metadata in params["pq_head"]["pruned"] — same winners as pqtopk."""
@@ -335,6 +337,7 @@ def test_pruned_head_inside_lm_decode_step():
                                   outs["pqtopk"][1])
 
 
+@pytest.mark.sharded
 @pytest.mark.parametrize("n", [128, 1013])   # odd N -> padding tail
 def test_sharded_single_shardmap_matches_plain(n):
     mesh = jax.make_mesh((1,), ("model",))
@@ -347,6 +350,7 @@ def test_sharded_single_shardmap_matches_plain(n):
     assert (np.asarray(i2) < n).all()
 
 
+@pytest.mark.sharded
 def test_sharded_pruned_is_jittable_with_aligned_state():
     """The whole sharded cascade (pmax theta inside ONE shard_map) traces
     into a single jitted computation — the PR 2 host compaction could not."""
@@ -363,6 +367,7 @@ def test_sharded_pruned_is_jittable_with_aligned_state():
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
 
 
+@pytest.mark.sharded
 def test_ensure_sharded_state_is_idempotent():
     mesh = jax.make_mesh((1,), ("model",))
     params, _ = _pq_head(1000)
@@ -389,6 +394,7 @@ def test_flat_route_rejects_or_rebuilds_sharded_state():
     np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
 
 
+@pytest.mark.sharded
 def test_sharded_explicit_seed_tiles_beats_pq_cfg():
     """The explicit seed_tiles argument must win over PQConfig knobs."""
     mesh = jax.make_mesh((1,), ("model",))

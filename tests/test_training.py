@@ -104,6 +104,7 @@ def test_checkpoint_async_save(tmp_path):
     assert mgr.all_steps() == [1]
 
 
+@pytest.mark.sharded
 def test_elastic_restore_reshards(tmp_path):
     """Restore onto a (trivially different) mesh sharding — the elastic
     path: full arrays re-placed by explicit NamedShardings."""
@@ -141,6 +142,7 @@ def test_straggler_monitor_flags_slow_steps():
     assert 20 in mon.flagged
 
 
+@pytest.mark.sharded
 def test_powersgd_compression_properties():
     """Error feedback: compressed + residual == original (per matrix)."""
     g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32))}
