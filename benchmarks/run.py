@@ -7,7 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 pruned-vs-exhaustive retrieval sweep on skewed data
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr4.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr5.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
 fraction + seed size + bound backend + ladder / rung-hit fraction for the
@@ -31,7 +31,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr4.json",
+    ap.add_argument("--json", default="BENCH_pr5.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -304,6 +304,141 @@ def main(argv=None) -> None:
                     "bound_backend": "bitmask", "ladder": None,
                     "rung_hit_fraction": None,
                     "dispatches_per_query": 2})
+        # ---------------------------------------------------------------
+        # Mixed-batch per-query sweep (PR 5 headline): N=2^20 clipped
+        # clustered codes, B in {8, 64, 256} queries whose score skew
+        # concentrates on DIFFERENT code windows — so each query's
+        # survivor set is a different catalogue region and the batch-any
+        # union degrades toward exhaustive as B grows (the regime the
+        # per-query grouped route exists for).  Per B, two single-
+        # dispatch pruned routes are measured with their own calibrated
+        # ladders: the batch-any union route and the query-grouped route
+        # (G=8, per-query thetas, 2D (group, slot) table).  Reported:
+        # items/s, scored slot·query pairs (grouped sum_g B_g*S_g vs the
+        # union B*|union| — the headline ratio), per-group vs union
+        # survival, and a per-batch exactness check against the chunked
+        # exhaustive oracle for EVERY pruned row (zero tolerance).
+        state_mx = pruning.build_pruned_state(codes_clip, b, tile_sk)
+        n_groups_mx = 8
+
+        def mixed_s(bq, i):
+            rr = np.random.default_rng(5000 + 131 * bq + i)
+            gg = rr.standard_normal((bq, m, b))
+            gg = np.sign(gg) * np.abs(gg) ** 3
+            for q in range(bq):
+                w = (q * b) // bq
+                gg[q, :, max(0, w - 1):w + 3] += 6.0
+            return jnp.asarray(gg, jnp.float32)
+
+        def oracle_chunked(s_b, chunk=16):
+            outs = []
+            for lo in range(0, s_b.shape[0], chunk):
+                outs.append(fn_ex(codes_clip, s_b[lo:lo + chunk]))
+            return (jnp.concatenate([o[0] for o in outs]),
+                    jnp.concatenate([o[1] for o in outs]))
+
+        fn_ex = jax.jit(lambda c_, s_: topk_lib.tiled_topk(
+            scoring.score_pqtopk(c_, s_), k))
+        n_cal_mx, n_stream_mx = 2, 2
+        for bq_mx in (8, 64, 256):
+            route_rows = {}
+            # The stream batches (and hence their exhaustive oracles) are
+            # identical for both routes — compute each oracle once, not
+            # once per route (it is the most expensive part of the sweep).
+            stream = [mixed_s(bq_mx, n_cal_mx + i)
+                      for i in range(n_stream_mx)]
+            oracles = [oracle_chunked(s_i) for s_i in stream]
+            for grouping in (False, True):
+                tag = "grouped" if grouping else "batchany"
+                if grouping:
+                    count_fn = jax.jit(lambda s_: pruning.survival_count_grouped(
+                        codes_clip, s_, k, state_mx, n_groups=n_groups_mx,
+                        seed_tiles=4))
+                else:
+                    count_fn = jax.jit(lambda s_: pruning.survival_count(
+                        codes_clip, s_, k, state_mx, seed_tiles=4))
+                counts = [int(count_fn(mixed_s(bq_mx, i)))
+                          for i in range(n_cal_mx)]
+                ladder = pruning.calibrate_ladder(counts, state_mx.n_tiles,
+                                                  k, state_mx.tile)
+
+                def _pr(s_, grouping=grouping, ladder=ladder):
+                    v_, i_, st_ = pruning.cascade_topk_ingraph(
+                        codes_clip, s_, k, state_mx, seed_tiles=4,
+                        query_grouping=grouping, n_groups=n_groups_mx,
+                        ladder=ladder, return_stats=True)
+                    # jit outputs must be arrays: keep the numeric stats.
+                    num = {kk: st_[kk] for kk in
+                           ("pairs_scored", "pairs_union", "n_survived",
+                            "max_group_survived", "survival_fraction",
+                            "rung_hit", "n_groups")}
+                    return v_, i_, num
+
+                fn_pr = jax.jit(_pr)
+                mismatches = 0
+                pairs_scored = pairs_union = 0
+                for i in range(n_stream_mx):
+                    s_i = stream[i]
+                    v_pr, i_pr, st_i = fn_pr(s_i)
+                    v_ex, i_ex = oracles[i]
+                    mismatches += int(
+                        not (np.array_equal(np.asarray(v_pr),
+                                            np.asarray(v_ex))
+                             and np.array_equal(np.asarray(i_pr),
+                                                np.asarray(i_ex))))
+                    pairs_scored += int(st_i["pairs_scored"])
+                    pairs_union += int(st_i["pairs_union"])
+                # Time a HELD-OUT batch (neither calibration nor stream):
+                # timing a batch the ladder was calibrated on would
+                # guarantee a fitted rung and overstate throughput.
+                s_t = mixed_s(bq_mx, n_cal_mx + n_stream_mx)
+                v_, i_, st = fn_pr(s_t)
+                st = {kk: vv.item() if hasattr(vv, "item") else vv
+                      for kk, vv in st.items()}
+                t = time_fn(lambda: fn_pr(s_t), repeats=args.repeats)
+                ips = bq_mx * n_sk / t["median_s"]
+                route_rows[tag] = (st, pairs_scored, pairs_union)
+                _emit("kernel",
+                      f"kernel/pq_retrieval_1m_mixed/B{bq_mx}/"
+                      f"pqtopk_pruned_{tag}",
+                      t["median_s"] * 1e6,
+                      f"items_per_s={ips:.3e};"
+                      f"pairs={pairs_scored}/{pairs_union};"
+                      f"union_survival={st['survival_fraction']:.4f};"
+                      f"max_group={st['max_group_survived']};"
+                      f"ladder={ladder};mismatches={mismatches}",
+                      method="pqtopk_pruned",
+                      items_per_s=ips,
+                      tags={"n_items": n_sk, "B": bq_mx, "mixed": True,
+                            "tile": tile_sk, "grouping": tag,
+                            "n_groups": st["n_groups"],
+                            "bound_backend": "bitmask",
+                            "survival_fraction": st["survival_fraction"],
+                            "n_survived": st["n_survived"],
+                            "max_group_survived": st["max_group_survived"],
+                            "pairs_scored": pairs_scored,
+                            "pairs_union": pairs_union,
+                            "ladder": list(ladder),
+                            "exactness_mismatches": mismatches,
+                            "stream_batches": n_stream_mx,
+                            "dispatches_per_query": 1})
+            st_g, pg, pu = route_rows["grouped"]
+            st_a, pa, _ = route_rows["batchany"]
+            _emit("kernel",
+                  f"kernel/pq_retrieval_1m_mixed/B{bq_mx}/grouping_delta",
+                  None,
+                  f"pairs_grouped={pg};pairs_batchany={pa};"
+                  f"pair_ratio={pg / max(pa, 1):.3f};"
+                  f"max_group={st_g['max_group_survived']}"
+                  f"/union={st_a['n_survived']}",
+                  method="grouping_delta",
+                  tags={"n_items": n_sk, "B": bq_mx, "mixed": True,
+                        "pairs_grouped": pg, "pairs_batchany": pa,
+                        "pair_ratio_grouped_over_batchany":
+                            pg / max(pa, 1),
+                        "union_survived": st_a["n_survived"],
+                        "max_group_survived":
+                            st_g["max_group_survived"]})
 
     if "roofline" not in args.skip:
         import os
@@ -328,7 +463,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 4,
+            "pr": 5,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

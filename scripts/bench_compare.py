@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Cross-PR benchmark trajectory: join every ``BENCH_pr*.json`` and print
+each benchmark's ``items_per_s`` across PRs, highlighting regressions.
+
+Rows are joined on ``(section, method, n_items, m, B, bound_backend,
+code_layout, grouping)`` — the tags that identify *what* was measured —
+rather than on the display name, which PRs have renamed as sweeps grew.
+Rows whose ``items_per_s`` is null (interpret-mode Pallas timings, delta
+rows) never enter the comparison.  A drop of more than ``--threshold``
+(default 20%) between consecutive PRs that measured the same row is
+flagged ``REGRESSION``; ``--strict`` turns any flag into a non-zero exit
+for CI gating (the default smoke run in ``scripts/ci.sh`` only reports).
+
+Usage:
+  python scripts/bench_compare.py              # repo-root BENCH_pr*.json
+  python scripts/bench_compare.py --threshold 0.1 --strict
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def _pr_number(path: str) -> int:
+    m = re.search(r"pr(\d+)", os.path.basename(path))
+    return int(m.group(1)) if m else -1
+
+
+def row_key(row: dict) -> tuple:
+    tags = row.get("tags") or {}
+    # The second display-name segment is the benchmark *cell* family
+    # (pq_scoring_262k vs pq_retrieval_262k, the table3 dataset, ...) —
+    # stable across PRs, and without it two cells sharing section/method/
+    # tags (scoring vs retrieval at the same N) would collide and max()
+    # would silently drop one from the trend.
+    name = row.get("name", "")
+    cell = name.split("/")[1] if "/" in name else ""
+    # Tags added by later PRs default to the value earlier PRs implicitly
+    # measured (pr2/3 pruned rows were bitmask bounds on the legacy wrap
+    # layout with batch-any survival) — otherwise a new tag splits the
+    # series at the PR that introduced it and hides the transition.
+    return (row.get("section", ""), cell, row.get("method", ""),
+            tags.get("n_items"), tags.get("m"), tags.get("B"),
+            tags.get("bound_backend") or "bitmask",
+            tags.get("code_layout") or "wrap",
+            tags.get("grouping") or "batchany")
+
+
+def load(paths):
+    """-> (sorted pr numbers, {key: {pr: items_per_s}})."""
+    prs, table = [], {}
+    for path in sorted(paths, key=_pr_number):
+        with open(path) as f:
+            doc = json.load(f)
+        pr = doc.get("pr", _pr_number(path))
+        prs.append(pr)
+        for row in doc.get("rows", []):
+            ips = row.get("items_per_s")
+            if ips is None:
+                continue
+            # Keep the best row per (key, pr): reruns of the same cell in
+            # one file (e.g. repeated smoke invocations) must not fan out.
+            cell = table.setdefault(row_key(row), {})
+            cell[pr] = max(cell.get(pr, 0.0), float(ips))
+    return prs, table
+
+
+def fmt_key(key: tuple) -> str:
+    section, cell, method, n, m, bq, backend, layout, grouping = key
+    parts = [section, cell, method]
+    if n is not None:
+        parts.append(f"n={n}")
+    if m is not None:
+        parts.append(f"m={m}")
+    if bq is not None:
+        parts.append(f"B={bq}")
+    # Baseline defaults (bitmask/wrap/batchany) are implicit — only label
+    # the variants.
+    if backend != "bitmask":
+        parts.append(backend)
+    if layout != "wrap":
+        parts.append(layout)
+    if grouping != "batchany":
+        parts.append(grouping)
+    return "/".join(str(p) for p in parts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="BENCH json files (default: ./BENCH_pr*.json)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="fractional drop between consecutive PRs flagged "
+                         "as a regression (default 0.20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any regression is flagged")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or sorted(glob.glob("BENCH_pr*.json"))
+    if not paths:
+        print("no BENCH_pr*.json files found", file=sys.stderr)
+        return 1
+    prs, table = load(paths)
+    prs = sorted(dict.fromkeys(prs))
+
+    header = ["benchmark"] + [f"pr{p}" for p in prs] + ["trend"]
+    print(",".join(header))
+    n_regressions = 0
+    for key in sorted(table, key=fmt_key):
+        cell = table[key]
+        vals = [cell.get(p) for p in prs]
+        flags = []
+        prev = None
+        for v in vals:
+            if v is None:
+                continue
+            if prev is not None and prev > 0 and v < prev * (1 - args.threshold):
+                flags.append(f"REGRESSION {-100 * (1 - v / prev):.0f}%")
+            prev = v
+        n_regressions += len(flags)
+        cells = ["-" if v is None else f"{v:.3e}" for v in vals]
+        print(",".join([fmt_key(key)] + cells + [";".join(flags) or "ok"]))
+    print(f"# {len(table)} joined rows across PRs {prs}; "
+          f"{n_regressions} regression(s) at threshold "
+          f"{args.threshold:.0%}", file=sys.stderr)
+    return 1 if (args.strict and n_regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,11 @@ Three independent checks on a reduced sasrec-recjpq engine with
    which additionally catches implicit device->host syncs on accelerator
    backends (on the CPU backend D2H is zero-copy and unguarded, so the
    trace check is the load-bearing one there).
+4. **Grouped per-query route** — checks 1 and 2 repeat on an engine with
+   ``PQConfig.query_grouping`` enabled: per-query theta seeding, the
+   greedy overlap-bucketing scan, the stable-argsort permutation, the 2D
+   (group, slot) compaction and the group-keyed kernel grid must ALL live
+   inside the same single dispatch per query batch.
 
 Exits non-zero on any violation; ci.sh runs this before the bench smoke.
 """
@@ -110,8 +115,40 @@ def main() -> int:
           f"transfer guard clean, "
           f"n_compiles={int(stats['n_compiles'])}, "
           f"rung_counts={stats['rung_counts']}")
+
+    # 4. the grouped per-query route: same single-dispatch guarantee with
+    # per-query thetas, the bucketing scan + argsort permutation, and the
+    # 2D (group, slot) compacted table all in the trace.
+    cfg_g = replace(cfg, pq=replace(cfg.pq, query_grouping=True,
+                                    n_groups=4))
+    eng_g = RetrievalEngine.for_seqrec(params, cfg_g, k=k, max_batch=8,
+                                       method="pqtopk_pruned")
+    assert eng_g._jit_serve and eng_g.ladder is not None
+    jaxpr_g = jax.make_jaxpr(lambda seqs: eng_g._serve_fn(seqs, k))(sds)
+    print(f"traceable: grouped serve fn -> one jaxpr "
+          f"({len(jaxpr_g.jaxpr.eqns)} eqns), ladder={eng_g.ladder}")
+    for i in range(4):
+        eng_g.submit(Request(20 + i, rng.integers(1, cfg.n_items + 1, 8),
+                             k=k))
+    eng_g.drain()
+    calls_g = []
+    for key, fn in list(eng_g._compiled.items()):
+        eng_g._compiled[key] = (
+            lambda seqs, _f=fn, _key=key: (calls_g.append(_key),
+                                           _f(seqs))[1])
+    for i in range(4):
+        eng_g.submit(Request(30 + i, rng.integers(1, cfg.n_items + 1, 8),
+                             k=k))
+    with jax.transfer_guard("disallow"):
+        results_g = eng_g.run_once()
+    assert len(results_g) == 4, f"grouped served {len(results_g)}/4"
+    assert len(calls_g) == 1, (
+        f"grouped per-query route issued {len(calls_g)} dispatches per "
+        f"query batch (expected exactly 1): {calls_g}")
+    print(f"single dispatch (grouped): 1 compiled call per batch "
+          f"{calls_g[0]}, transfer guard clean")
     print("OK: pqtopk_pruned serve path is a single in-graph dispatch "
-          "(calibrated ladder enabled)")
+          "(calibrated ladder enabled; per-query grouped route included)")
     return 0
 
 

@@ -14,12 +14,21 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Bytecode must never be committed: .gitignore covers __pycache__/*.pyc,
+# and this guard fails CI if a tracked .pyc ever reappears (it happened
+# once — a PR 4 follow-up commit shipped tests/__pycache__).
+if git ls-files | grep -q '\.pyc$'; then
+    echo "FAIL: tracked .pyc files in the repo:" >&2
+    git ls-files | grep '\.pyc$' >&2
+    exit 1
+fi
+
 # Anti-test-deletion guard: the collected count must never drop below the
 # previous tier-1 baseline (bump this when a PR adds tests; a drop means a
 # test file stopped importing or someone deleted coverage).  pytest also
 # exits non-zero on collection errors, so a broken import fails CI rather
 # than silently shrinking the suite.
-TIER1_BASELINE=244
+TIER1_BASELINE=279
 collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
             | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
 if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
@@ -40,11 +49,18 @@ python -m pytest -x -q -m "slow or sharded or hypothesis" "$@"
 python scripts/check_single_dispatch.py
 
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
-# single-dispatch pruned cascade, bound-backend comparison sweep, figure2)
-# end to end so kernel-path breakage surfaces in CI, not just in unit
-# tests, and refreshes the machine-readable BENCH_pr4.json (pruned-vs-
-# exhaustive + bitmask-vs-range sweeps at N=2^20 with survival-fraction,
-# ladder and metadata-footprint tags).  table3/roofline stay out (slow
-# dataset builds / artifact-dependent).
+# single-dispatch pruned cascade, bound-backend comparison sweep, the
+# per-query mixed-batch sweep, figure2) end to end so kernel-path
+# breakage surfaces in CI, not just in unit tests, and refreshes the
+# machine-readable BENCH_pr5.json (grouped-vs-batch-any slot·query pairs
+# at N=2^20 / B in {8, 64, 256} with exactness counters, plus the PR 4
+# sweeps).  table3/roofline stay out (slow dataset builds /
+# artifact-dependent).
 python -m benchmarks.run --skip table3 --skip roofline --repeats 1 \
-    --json BENCH_pr4.json > /dev/null
+    --json BENCH_pr5.json > /dev/null
+
+# Cross-PR perf trajectory: join all BENCH_pr*.json and report the
+# items_per_s trend per benchmark (regressions are highlighted in the
+# printed table, not fatal — CPU container timings are too noisy to
+# gate on).
+python scripts/bench_compare.py

@@ -60,6 +60,18 @@ class PQConfig:
     # Both are exact (bounds dominate true scores either way); the choice
     # only moves the survival fraction and the metadata footprint.
     bound_backend: str = "bitmask"
+    # Per-query pruned survival (docs/PRUNING.md §Per-query survival):
+    # query_grouping=True seeds theta per query, keeps per-query survival
+    # bitmasks, buckets queries by survivor-set overlap into ~n_groups
+    # groups, and hands the fused kernel a 2D (group, slot) tile table so
+    # each kernel batch tile scores only its group's survivors —
+    # sum_g B_g * S_g work instead of the batch-any B * |union|, which is
+    # what keeps large mixed batches from degrading toward exhaustive
+    # scoring.  n_groups=1 recovers the batch-any route exactly.  Exact
+    # either way (every query still sees a superset of its surviving
+    # tiles).
+    query_grouping: bool = False
+    n_groups: int = 8
 
     def __post_init__(self):
         if self.b > 2 ** 16:
@@ -89,6 +101,8 @@ class PQConfig:
             raise ValueError(
                 f"bound_backend='range' stores int16 code ranges; "
                 f"b={self.b} exceeds int16 — use bound_backend='bitmask'")
+        if self.n_groups < 1:
+            raise ValueError(f"n_groups must be >= 1, got {self.n_groups}")
 
 
 # ---------------------------------------------------------------------------

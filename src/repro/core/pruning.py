@@ -30,6 +30,18 @@ Two generations of the cascade live here:
   implementation): :func:`cascade_topk` — jitted bound pass, host
   compaction, jitted compacted scoring pass.  Exact and occasionally
   useful interactively, but every call pays a device->host sync.
+
+Since PR 5 survival can additionally be **per query**: theta is seeded
+per query over each query's own most promising tiles
+(:func:`theta_seed_perquery`), survival is a per-query bitmask over tiles
+(:func:`survival_mask_perquery`), and queries whose survivor sets overlap
+are bucketed into groups (:func:`group_queries`,
+:func:`group_and_compact`) so each kernel batch tile scores only ITS
+group's compacted slot list — ``sum_g B_g * S_g`` work instead of the
+batch-any ``B * |union|``, which is what keeps mixed serving batches from
+degrading toward exhaustive scoring as B grows.  All of it is pure jnp
+(scan + cumsum scatter + stable argsort), so the grouped cascade is still
+ONE jitted dispatch.
 """
 from __future__ import annotations
 
@@ -54,6 +66,9 @@ DEFAULT_PRUNE_TILE = 2048
 DEFAULT_SEED_TILES = 2
 DEFAULT_SEED_MAX_TILES = 16
 DEFAULT_SEED_STAB_TOL = 0.05
+#: Default query-group count for the per-query grouped cascade
+#: (PQConfig.n_groups; n_groups=1 collapses to the batch-any route).
+DEFAULT_N_GROUPS = 8
 
 #: Pluggable bound backends (PQConfig.bound_backend):
 #:   "bitmask" — uint32 code-presence bitmasks (exact per-tile code sets,
@@ -69,7 +84,11 @@ BOUND_BACKENDS = ("bitmask", "range")
 STATS_KEYS = frozenset({
     "n_tiles", "n_survived", "n_scored", "survival_fraction",
     "n_seed_used", "seed_survival_est", "rung_hit", "n_rungs",
-    "slot_overflow", "bound_backend"})
+    "slot_overflow", "bound_backend",
+    # Per-query grouping (PR 5).  Ungrouped routes report n_groups=1,
+    # max_group_survived == n_survived, and pairs_scored == pairs_union
+    # == n_survived * padded batch — the batch-any work.
+    "n_groups", "max_group_survived", "pairs_scored", "pairs_union"})
 
 _WORD = 32   # presence bits per packed uint32 word
 
@@ -490,6 +509,44 @@ def seed_schedule(policy: str, n_seed: int, n_seed_max: int, k: int,
     return tuple(dict.fromkeys(sizes))
 
 
+def degenerate_tile_mask(state: PrunedHeadState) -> Optional[jax.Array]:
+    """(T,) bool — tiles whose range metadata is a degenerate *full hull*
+    in some split (``hi - lo == b - 1``): their range bound for that split
+    is the unconditional max over all sub-ids, so the bound is loose and
+    — worse — large, which makes greedy seed ordering pick exactly these
+    tiles first, wasting the seed budget on uninformative tiles and
+    stalling the adaptive growth loop at a loose theta (ROADMAP wrap
+    follow-up).  ``None`` for backends whose bounds carry no hull
+    (bitmask presence sets are exact — no degenerate notion)."""
+    return degenerate_from_parts(state.backend, state.meta_arrays(), state.b)
+
+
+def degenerate_from_parts(backend: str, parts: Tuple[jax.Array, ...],
+                          b: int) -> Optional[jax.Array]:
+    """:func:`degenerate_tile_mask` from a backend name + metadata arrays
+    (the shard_map body's entry point, like :func:`bounds_from_parts`)."""
+    if backend != "range":
+        return None
+    lo, hi = parts
+    span = hi.astype(jnp.int32) - lo.astype(jnp.int32)   # (T, m)
+    return (span == b - 1).any(axis=1)
+
+
+def seed_order_key(bounds: jax.Array,
+                   degenerate: Optional[jax.Array]) -> jax.Array:
+    """Seed-*ordering* key: the bounds, with degenerate full-hull tiles
+    pushed behind every informative tile (bounds shifted down by more than
+    the batch's bound span, so relative order within each class is kept).
+    Ordering only ever picks WHICH tiles get scored exactly — any seed set
+    certifies its theta — so this cannot cost exactness, it only stops
+    wrap tiles from hogging the seed budget.  ``bounds`` may be (T,)
+    (batch-max order) or (B, T) (per-query order)."""
+    if degenerate is None:
+        return bounds
+    span = bounds.max() - bounds.min() + 1.0
+    return bounds - degenerate.astype(bounds.dtype) * span
+
+
 def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
                        k: int, *, tile: int,
                        seed_policy: str = "greedy",
@@ -497,7 +554,8 @@ def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
                        seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
                        seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                        n_items: Optional[int] = None,
-                       id_offset=0):
+                       id_offset=0,
+                       degenerate: Optional[jax.Array] = None):
     """In-graph theta seeding -> (theta (B,), n_seed_used i32, survival f32).
 
     ``seed_policy="greedy"``: one exact pass over the ``seed_tiles`` most
@@ -509,6 +567,10 @@ def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
     a ``lax.cond`` over a Python-static chunk, so the trip count is fixed
     at trace time and skipped stages cost nothing at runtime — the policy
     is decode-loop and shard_map safe.
+
+    ``degenerate`` (T,) bool de-prioritises full-hull range tiles in the
+    seed ordering (:func:`seed_order_key`); theta certification is
+    unaffected by ordering.
     """
     from repro.kernels.pqtopk import ref as pq_ref
 
@@ -520,7 +582,8 @@ def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
     pad = n_tiles * tile - n
     codes_pad = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
     tiles3 = codes_pad.reshape(n_tiles, tile, m)
-    order = jax.lax.top_k(bounds.max(axis=0), sizes[-1])[1]   # (n_max,)
+    order = jax.lax.top_k(seed_order_key(bounds.max(axis=0), degenerate),
+                          sizes[-1])[1]                   # (n_max,)
     limit = n if n_items is None else n_items
 
     def score_chunk(tile_ids):
@@ -568,6 +631,178 @@ def survival_mask(bounds: jax.Array, theta: jax.Array) -> jax.Array:
     exactness under ties: an item scoring exactly theta must stay visible.
     """
     return (bounds >= theta[:, None]).any(axis=0)
+
+
+def survival_mask_perquery(bounds: jax.Array, theta: jax.Array) -> jax.Array:
+    """Per-query survival bitmask: mask[q, t] == query q still needs tile t.
+
+    bounds (B, T), theta (B,) -> (B, T) bool.  The batch-any mask is
+    exactly ``survival_mask_perquery(...).any(axis=0)`` — the per-query
+    form keeps the information the batch-any rule throws away, which is
+    what query grouping exploits.  Same ``>=`` tie rule: an item tying a
+    query's k-th value keeps its tile visible *to that query*.
+    """
+    return bounds >= theta[:, None]
+
+
+def theta_seed_perquery(codes: jax.Array, s: jax.Array, bounds: jax.Array,
+                        k: int, *, tile: int,
+                        seed_policy: str = "greedy",
+                        seed_tiles: int = DEFAULT_SEED_TILES,
+                        seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
+                        seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
+                        n_items: Optional[int] = None,
+                        id_offset=0,
+                        degenerate: Optional[jax.Array] = None):
+    """Per-query theta seeding -> (theta (B,), n_seed_used i32, survival).
+
+    Unlike :func:`theta_seed_ingraph` — which seeds one SHARED tile set
+    from the batch-max bounds — every query here scores its OWN most
+    promising tiles (a batched ``top_k`` over its bound row, then a
+    per-query code gather + ``take_along_axis`` scoring pass with the same
+    ``tree_sum`` accumulation as the oracle).  For mixed batches whose
+    queries care about disjoint catalogue regions, the shared seed set
+    dilutes across regions and every theta goes loose; per-query seeding
+    keeps each theta anchored to its query's own hot tiles.  Certification
+    is per query regardless (theta_q = q's k-th best exactly-scored item),
+    so the survival rule stays exact.
+
+    Works unchanged for both bound backends — only ``bounds`` (and the
+    optional ``degenerate`` wrap-penalty mask, see :func:`seed_order_key`)
+    enter the tile choice.  The adaptive policy's growth stages are shared
+    ``lax.cond``\\ s gated on the mean per-query survival estimate, so the
+    whole thing stays inside the single dispatch.
+    """
+    n, m = codes.shape
+    bq = s.shape[0]
+    n_tiles = bounds.shape[1]
+    sizes = seed_schedule(seed_policy, seed_tiles, seed_max_tiles, k, tile,
+                          n_tiles)
+    pad = n_tiles * tile - n
+    codes_pad = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
+    tiles3 = codes_pad.reshape(n_tiles, tile, m)
+    order = jax.lax.top_k(seed_order_key(bounds, degenerate),
+                          sizes[-1])[1]                 # (B, n_max)
+    limit = n if n_items is None else n_items
+
+    def score_chunk(tile_ids):
+        """Exact, id-masked per-query scores -> (B, c*tile); tile_ids is
+        (B, c) — each row is that query's own tile chunk."""
+        sel = tiles3[tile_ids].reshape(bq, -1, m).astype(jnp.int32)
+        parts = [jnp.take_along_axis(s[:, kk, :].astype(jnp.float32),
+                                     sel[:, :, kk], axis=1)
+                 for kk in range(m)]
+        sc = tree_sum(parts)                            # (B, c*tile)
+        local = (tile_ids[:, :, None] * tile
+                 + jnp.arange(tile, dtype=jnp.int32)[None, None, :]
+                 ).reshape(bq, -1)
+        valid = (id_offset + local < limit) & (local < n)
+        return jnp.where(valid, sc, NEG_INF)
+
+    def merge(vals, sc):
+        cand = jnp.concatenate(
+            [vals, jax.lax.top_k(sc, min(k, sc.shape[1]))[0]], axis=1)
+        return jax.lax.top_k(cand, k)[0]
+
+    def survival_est(theta):
+        return survival_mask_perquery(bounds, theta).mean()
+
+    vals = merge(jnp.full((bq, k), NEG_INF),
+                 score_chunk(order[:, :sizes[0]]))
+    theta = vals[:, -1]
+    sf = survival_est(theta)
+    n_used = jnp.int32(sizes[0])
+    done = jnp.bool_(False)
+    for prev, size in zip(sizes, sizes[1:]):
+        chunk = order[:, prev:size]
+
+        def grow(carry, chunk=chunk, size=size):
+            vals, _theta, sf_prev, n_used, _done = carry
+            vals = merge(vals, score_chunk(chunk))
+            theta = vals[:, -1]
+            sf = survival_est(theta)
+            stable = jnp.abs(sf - sf_prev) <= seed_stab_tol
+            return vals, theta, sf, jnp.int32(size), stable
+
+        carry = (vals, theta, sf, n_used, done)
+        vals, theta, sf, n_used, done = jax.lax.cond(
+            done, lambda c: c, grow, carry)
+    return theta, n_used, sf
+
+
+# ---------------------------------------------------------------------------
+# query grouping: bucket queries by survivor-set overlap (PR 5)
+# ---------------------------------------------------------------------------
+
+
+def group_queries(pq_mask: jax.Array, n_groups: int) -> jax.Array:
+    """Greedy similarity bucketing of per-query survivor sets -> (B,) i32.
+
+    Scans queries in batch order; each query joins the group whose union
+    mask grows by the fewest NEW tiles when it joins (ties broken toward
+    the smaller group, so disjoint queries spread over empty groups
+    instead of piling onto group 0), and the winning group's union absorbs
+    the query's mask.  One ``lax.scan`` over B with a (G, T) bool carry —
+    pure jnp, so grouping lives inside the single dispatch.  Grouping is a
+    *work* heuristic, never a correctness surface: whatever the
+    assignment, each group's slot list is the union of its members'
+    survivor sets, so every query still sees a superset of its own
+    surviving tiles.
+    """
+    bq, t = pq_mask.shape
+
+    def step(carry, mq):
+        gmask, gsize = carry                     # (G, T) bool, (G,) i32
+        union = gmask | mq[None, :]
+        added = (union & ~gmask).sum(axis=1, dtype=jnp.int32)   # (G,)
+        # Composite key: new-tile count first, group size as tie-break
+        # (both bounded by T and B, so the packing cannot overflow i32 at
+        # any realistic tile count).
+        g = jnp.argmin(added * jnp.int32(bq + 1) + gsize).astype(jnp.int32)
+        sel = (jnp.arange(n_groups, dtype=jnp.int32) == g)
+        gmask = jnp.where(sel[:, None], union, gmask)
+        gsize = gsize + sel.astype(jnp.int32)
+        return (gmask, gsize), g
+
+    init = (jnp.zeros((n_groups, t), jnp.bool_),
+            jnp.zeros((n_groups,), jnp.int32))
+    _, assign = jax.lax.scan(step, init, pq_mask)
+    return assign
+
+
+def group_and_compact(pq_mask: jax.Array, *, n_groups: int,
+                      batch_tile: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-query masks -> a query permutation + per-batch-tile slot table.
+
+    Returns ``(perm (B,), inv (B,), slots2d (n_bt, T) i32, counts (n_bt,)
+    i32)``: queries are permuted so group members sit contiguously
+    (stable argsort over the group assignment), the permuted batch is
+    padded to a multiple of ``batch_tile`` (padding rows have empty
+    masks), each kernel batch tile's union mask is compacted with the
+    same cumsum scatter as :func:`compact_mask` into an ascending,
+    ``-1``-padded slot row, and ``counts`` is each batch tile's survivor
+    count.  ``slots2d`` is exactly the 2D ``(group, slot)`` table the
+    fused kernel scalar-prefetches; a rung's table is its ``[:, :budget]``
+    prefix, so the ladder costs one compaction total.  Apply ``perm`` to
+    the query batch before scoring and ``inv`` to the winners after.
+    """
+    bq, t = pq_mask.shape
+    assign = (group_queries(pq_mask, n_groups) if n_groups > 1
+              else jnp.zeros((bq,), jnp.int32))
+    # Unique sort keys (group-major, arrival-minor) -> deterministic,
+    # stable permutation without relying on argsort stability flags.
+    perm = jnp.argsort(assign * jnp.int32(bq)
+                       + jnp.arange(bq, dtype=jnp.int32))
+    inv = jnp.argsort(perm)
+    n_bt = -(-bq // batch_tile)
+    pad = n_bt * batch_tile - bq
+    mask_p = pq_mask[perm]
+    if pad:
+        mask_p = jnp.pad(mask_p, ((0, pad), (0, 0)))
+    bt_mask = mask_p.reshape(n_bt, batch_tile, t).any(axis=1)
+    slots2d, counts = jax.vmap(compact_mask)(bt_mask)
+    return perm, inv, slots2d, counts
 
 
 def compact_mask(mask: jax.Array, n_slots: Optional[int] = None,
@@ -678,6 +913,8 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
                          seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                          slot_budget: Optional[int] = None,
                          ladder=None,
+                         query_grouping: bool = False,
+                         n_groups: int = DEFAULT_N_GROUPS,
                          use_kernel: Optional[bool] = None,
                          interpret: Optional[bool] = None,
                          return_stats: bool = False):
@@ -696,6 +933,16 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
     survivor count executes, and the final rung — always appended by
     :func:`normalize_ladder` — scores the full-length compacted buffer, so
     overflow at any skew escalates cost, never correctness.
+
+    ``query_grouping=True`` (with ``n_groups > 1``) switches survival to
+    the per-query route: per-query thetas from each query's own seed tiles
+    (:func:`theta_seed_perquery`), per-query survival bitmasks, greedy
+    overlap bucketing into ``n_groups`` groups, and a 2D ``(group, slot)``
+    compacted table so each kernel batch tile scores only its group's
+    survivors — ``sum_g B_g * S_g`` work instead of ``B * |union|``.  Rung
+    escalation compares each rung's budget against the MAX per-group
+    survivor count (one shared ladder, sentinel slots make light groups
+    free).  ``n_groups=1`` recovers the batch-any route exactly.
 
     Pure function of (codes, s, state): jittable, vmappable, decode-loop
     and shard_map safe.  Bit-identical to ``score_pqtopk + tiled_topk``
@@ -718,24 +965,56 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
             f"shards={state.shards}; use top_items_pruned_sharded for the "
             f"sharded layout")
     tile = state.tile
+    bq = s.shape[0]
     bounds = tile_bounds(state, s)
-    theta, n_seed_used, seed_sf = theta_seed_ingraph(
-        codes, s, bounds, k, tile=tile, seed_policy=seed_policy,
-        seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
-        seed_stab_tol=seed_stab_tol)
-    mask = survival_mask(bounds, theta)
     t_total = bounds.shape[1]
     if ladder is None and slot_budget is not None:
         ladder = (int(slot_budget),)
     rungs = normalize_ladder(ladder, t_total, k, tile)
-    # One cumsum-scatter compaction; each rung's buffer is exactly the
-    # full buffer's length-r prefix (survivors land at ascending
-    # positions, -1 sentinels behind), so the smaller rungs are free.
-    slots_full, count = compact_mask(mask)
-    slot_lists = [slots_full[:r] for r in rungs]
-    vals, ids, rung = kernel_ops.pq_topk_tiles_ladder(
-        codes, s, k, slot_lists, count, tile=tile, use_kernel=use_kernel,
-        interpret=interpret)
+    seed_kw = dict(seed_policy=seed_policy, seed_tiles=seed_tiles,
+                   seed_max_tiles=seed_max_tiles,
+                   seed_stab_tol=seed_stab_tol,
+                   degenerate=degenerate_tile_mask(state))
+    grouped = query_grouping and n_groups > 1
+    if grouped:
+        bt = kernel_ops.group_batch_tile(bq, n_groups)
+        theta, n_seed_used, seed_sf = theta_seed_perquery(
+            codes, s, bounds, k, tile=tile, **seed_kw)
+        pq_mask = survival_mask_perquery(bounds, theta)
+        perm, inv, slots2d, counts = group_and_compact(
+            pq_mask, n_groups=n_groups, batch_tile=bt)
+        slot_lists = [slots2d[:, :r] for r in rungs]
+        vals, ids, rung = kernel_ops.pq_topk_tiles_ladder(
+            codes, jnp.take(s, perm, axis=0), k, slot_lists, counts,
+            tile=tile, batch_tile=bt, use_kernel=use_kernel,
+            interpret=interpret)
+        vals = jnp.take(vals, inv, axis=0)
+        ids = jnp.take(ids, inv, axis=0)
+        count = pq_mask.any(axis=0).sum(dtype=jnp.int32)   # union survivors
+        max_group = counts.max()
+        n_bt = counts.shape[0]
+        pairs_scored = (counts * jnp.int32(bt)).sum()
+        pairs_union = count * jnp.int32(n_bt * bt)
+        # The stat reports the number of kernel group rows actually built
+        # — the 8-row sublane floor can collapse a small batch into fewer
+        # groups than requested (bq=8 at n_groups=8 is ONE union row).
+        n_groups_eff = n_bt
+    else:
+        theta, n_seed_used, seed_sf = theta_seed_ingraph(
+            codes, s, bounds, k, tile=tile, **seed_kw)
+        mask = survival_mask(bounds, theta)
+        # One cumsum-scatter compaction; each rung's buffer is exactly the
+        # full buffer's length-r prefix (survivors land at ascending
+        # positions, -1 sentinels behind), so the smaller rungs are free.
+        slots_full, count = compact_mask(mask)
+        slot_lists = [slots_full[:r] for r in rungs]
+        vals, ids, rung = kernel_ops.pq_topk_tiles_ladder(
+            codes, s, k, slot_lists, count, tile=tile,
+            use_kernel=use_kernel, interpret=interpret)
+        bt = kernel_ops.effective_batch_tile(bq)
+        max_group = count
+        pairs_scored = pairs_union = count * jnp.int32(-(-bq // bt) * bt)
+        n_groups_eff = 1
     if not return_stats:
         return vals, ids
     stats = {"n_tiles": t_total, "n_survived": count,
@@ -743,9 +1022,11 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
              "survival_fraction": count / jnp.float32(max(t_total, 1)),
              "n_seed_used": n_seed_used, "seed_survival_est": seed_sf,
              "rung_hit": rung, "n_rungs": len(rungs),
-             "slot_overflow": (count > rungs[-2] if len(rungs) > 1
+             "slot_overflow": (max_group > rungs[-2] if len(rungs) > 1
                                else jnp.bool_(False)),
-             "bound_backend": state.backend}
+             "bound_backend": state.backend,
+             "n_groups": n_groups_eff, "max_group_survived": max_group,
+             "pairs_scored": pairs_scored, "pairs_union": pairs_union}
     return vals, ids, stats
 
 
@@ -808,7 +1089,10 @@ def cascade_topk(codes: jax.Array, s: jax.Array, k: int, *, tile: int,
              "n_scored": int(n_slots), "survival_fraction": sf,
              "n_seed_used": n_seed, "seed_survival_est": sf,
              "rung_hit": 0, "n_rungs": 1, "slot_overflow": False,
-             "bound_backend": "bitmask"}
+             "bound_backend": "bitmask",
+             "n_groups": 1, "max_group_survived": int(len(survivors)),
+             "pairs_scored": int(len(survivors)) * int(s.shape[0]),
+             "pairs_union": int(len(survivors)) * int(s.shape[0])}
     return vals, ids, stats
 
 
@@ -831,5 +1115,36 @@ def survival_count(codes: jax.Array, s: jax.Array, k: int,
     theta, _, _ = theta_seed_ingraph(
         codes, s, bounds, k, tile=state.tile, seed_policy=seed_policy,
         seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
-        seed_stab_tol=seed_stab_tol)
+        seed_stab_tol=seed_stab_tol,
+        degenerate=degenerate_tile_mask(state))
     return survival_mask(bounds, theta).sum(dtype=jnp.int32)
+
+
+def survival_count_grouped(codes: jax.Array, s: jax.Array, k: int,
+                           state: PrunedHeadState, *, n_groups: int,
+                           batch_tile: Optional[int] = None,
+                           seed_policy: str = "greedy",
+                           seed_tiles: int = DEFAULT_SEED_TILES,
+                           seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
+                           seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
+                           ) -> jax.Array:
+    """MAX per-group surviving-tile count for one query batch (i32) — the
+    group-aware calibration observable: the grouped ladder escalates on
+    the max per-group count, so its rungs must be sized against THAT
+    distribution, not the (larger) batch-any union count — calibrating on
+    union counts would hand the grouped route needlessly tall rungs and
+    forfeit most of the per-group win."""
+    from repro.kernels.pqtopk import ops as kernel_ops
+
+    if batch_tile is None:
+        batch_tile = kernel_ops.group_batch_tile(s.shape[0], n_groups)
+    bounds = tile_bounds(state, s)
+    theta, _, _ = theta_seed_perquery(
+        codes, s, bounds, k, tile=state.tile, seed_policy=seed_policy,
+        seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
+        seed_stab_tol=seed_stab_tol,
+        degenerate=degenerate_tile_mask(state))
+    pq_mask = survival_mask_perquery(bounds, theta)
+    _, _, _, counts = group_and_compact(pq_mask, n_groups=n_groups,
+                                        batch_tile=batch_tile)
+    return counts.max()

@@ -192,6 +192,14 @@ def _seed_kwargs(pq_cfg: Optional[PQConfig]) -> Dict[str, Any]:
             "seed_stab_tol": pq_cfg.seed_stab_tol}
 
 
+def _grouping_kwargs(pq_cfg: Optional[PQConfig]) -> Dict[str, Any]:
+    """Per-query grouping knobs for the pruned cascade, from PQConfig."""
+    if pq_cfg is None:
+        return {}
+    return {"query_grouping": pq_cfg.query_grouping,
+            "n_groups": pq_cfg.n_groups}
+
+
 def _pruned_state(params: Params) -> Optional[pruning.PrunedHeadState]:
     st = params.get("pruned")
     return st if isinstance(st, pruning.PrunedHeadState) else None
@@ -234,7 +242,8 @@ def _top_items_pruned_ingraph(params, phi, k, *,
                                        slot_budget=slot_budget,
                                        ladder=ladder,
                                        return_stats=return_rung,
-                                       **_seed_kwargs(pq_cfg))
+                                       **_seed_kwargs(pq_cfg),
+                                       **_grouping_kwargs(pq_cfg))
     if return_rung:
         vals, ids, stats = out
         return vals, ids, stats["rung_hit"]
@@ -338,6 +347,16 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     Uses the shard-aligned state threaded through ``params`` when present
     (see :func:`ensure_sharded_pruned_state`); otherwise builds one
     in-graph — still a single dispatch, just with per-call rebuild cost.
+
+    With ``pq_cfg.query_grouping`` the per-query route runs inside the
+    same Manual region: each shard seeds per-query local thetas over its
+    own tiles, the certified threshold is the per-query
+    ``pmax(theta_local)`` over shards, and each shard then buckets queries
+    by ITS local survivor sets, compacts a 2D (group, slot) table, scores
+    it, and un-permutes its winners back to request order before the
+    all-gather merge — shards may group differently (survivor overlap is
+    a local property), which is safe because every cross-shard op runs in
+    request order.
     """
     if not is_pq(params):
         raise ValueError("top_items_pruned_sharded requires a PQ head")
@@ -387,24 +406,56 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     meta_parts = state.meta_arrays()
     meta_specs = tuple(P(axis, *([None] * (a.ndim - 1)))
                        for a in meta_parts)
+    grp_kw = _grouping_kwargs(pq_cfg)
+    grouped = grp_kw.get("query_grouping", False) and \
+        grp_kw.get("n_groups", 1) > 1
+    n_groups = grp_kw.get("n_groups", pruning.DEFAULT_N_GROUPS)
+    bq = phi.shape[0]
+    bt = (kernel_ops.group_batch_tile(bq, n_groups) if grouped
+          else kernel_ops.effective_batch_tile(bq))
+    b_pad = -(-bq // bt) * bt
 
     def shard_body(codes_local, meta_local, sub_emb_, phi_):
         s = scoring.subid_scores(sub_emb_.astype(jnp.float32),
                                  phi_.astype(jnp.float32))
         bounds = pruning.bounds_from_parts(state.backend, meta_local, s)
+        degenerate = pruning.degenerate_from_parts(state.backend, meta_local,
+                                                   state.b)
         offset = jax.lax.axis_index(axis) * n_local
-        theta_local, n_seed_used, _sf = pruning.theta_seed_ingraph(
+        seed_fn = (pruning.theta_seed_perquery if grouped
+                   else pruning.theta_seed_ingraph)
+        theta_local, n_seed_used, _sf = seed_fn(
             codes_local, s, bounds, k, tile=tile, n_items=n,
-            id_offset=offset, **seed_kw)
+            id_offset=offset, degenerate=degenerate, **seed_kw)
+        # Per-query certified threshold: each shard's theta_q certifies
+        # >= k items somewhere score >= theta_q, so the per-query max over
+        # shards is still certified — and the tightest any shard proves.
         theta = jax.lax.pmax(theta_local, axis)
-        mask = pruning.survival_mask(bounds, theta)
-        # One compaction; rung buffers are prefixes of the full buffer.
-        slots_full, count = pruning.compact_mask(mask)
-        slot_lists = tuple(slots_full[:r] for r in rungs)
-        lv, li, rung = kernel_ops._pq_topk_tiles_ladder(
-            codes_local, s, k_local, slot_lists, count, tile=tile,
-            batch_tile=kernel_ops._k.DEFAULT_BATCH_TILE,
-            use_kernel=use_kernel, interpret=interpret)
+        if grouped:
+            pq_mask = pruning.survival_mask_perquery(bounds, theta)
+            perm, inv_p, slots2d, counts = pruning.group_and_compact(
+                pq_mask, n_groups=n_groups, batch_tile=bt)
+            slot_lists = tuple(slots2d[:, :r] for r in rungs)
+            lv, li, rung = kernel_ops._pq_topk_tiles_ladder(
+                codes_local, jnp.take(s, perm, axis=0), k_local, slot_lists,
+                counts, tile=tile, batch_tile=bt,
+                use_kernel=use_kernel, interpret=interpret)
+            # Back to request order before anything cross-shard.
+            lv = jnp.take(lv, inv_p, axis=0)
+            li = jnp.take(li, inv_p, axis=0)
+            count = pq_mask.any(axis=0).sum(dtype=jnp.int32)
+            max_group = counts.max()
+            pairs = (counts * jnp.int32(bt)).sum()
+        else:
+            mask = pruning.survival_mask(bounds, theta)
+            # One compaction; rung buffers are prefixes of the full buffer.
+            slots_full, count = pruning.compact_mask(mask)
+            slot_lists = tuple(slots_full[:r] for r in rungs)
+            lv, li, rung = kernel_ops._pq_topk_tiles_ladder(
+                codes_local, s, k_local, slot_lists, count, tile=tile,
+                batch_tile=bt, use_kernel=use_kernel, interpret=interpret)
+            max_group = count
+            pairs = count * jnp.int32(b_pad)
         gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
         lv = jnp.where(gid < n, lv, -jnp.inf)
         if k_local > k:
@@ -414,14 +465,17 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
         return (vals, ids, jax.lax.psum(count, axis),
                 jax.lax.pmax(n_seed_used, axis),
                 jax.lax.pmax(rung, axis),
-                jax.lax.psum(jnp.asarray(rungs, jnp.int32)[rung], axis))
+                jax.lax.psum(jnp.asarray(rungs, jnp.int32)[rung], axis),
+                jax.lax.pmax(max_group, axis),
+                jax.lax.psum(pairs, axis),
+                jax.lax.psum(count * jnp.int32(b_pad), axis))
 
     fn = manual_axis_map(
         shard_body, mesh,
         in_specs=(P(axis, None), meta_specs, P(), P()),
-        out_specs=(P(), P(), P(), P(), P(), P()))
-    vals, ids, survived, n_seed_used, rung, n_scored = fn(
-        codes_p, meta_parts, sub_emb, phi)
+        out_specs=(P(),) * 9)
+    (vals, ids, survived, n_seed_used, rung, n_scored, max_group,
+     pairs_scored, pairs_union) = fn(codes_p, meta_parts, sub_emb, phi)
     if not return_stats:
         return vals, ids
     total = n_shards * t_local
@@ -436,7 +490,12 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
              # derive it from the pmax'd rung, not the psum'd count.
              "slot_overflow": (rung == len(rungs) - 1
                                if len(rungs) > 1 else jnp.bool_(False)),
-             "bound_backend": state.backend}
+             "bound_backend": state.backend,
+             # Kernel group rows actually built (the 8-row sublane floor
+             # can collapse small batches below the requested n_groups).
+             "n_groups": b_pad // bt if grouped else 1,
+             "max_group_survived": max_group,
+             "pairs_scored": pairs_scored, "pairs_union": pairs_union}
     return vals, ids, stats
 
 

@@ -30,10 +30,22 @@ Two kernels:
      map.  Slots mapping to the sentinel tile (fully past ``n_items``)
      emit -inf candidates and never reach the final top-k.
 
-Block layout (grid = (n_slots, n_batch_tiles), batch innermost so each
-codes tile is fetched once):
+     The index array may also be **2D** ``(n_batch_tiles, n_slots)`` (the
+     per-query grouped cascade, PR 5): each kernel batch tile then walks
+     its OWN compacted slot row — slot i of batch tile j scores codes tile
+     ``tile_idx[j, i]`` — so a mixed batch whose query groups survive
+     disjoint catalogue regions does ``sum_g B_g * S_g`` work instead of
+     ``B * |union|``.  The grid flips to (n_batch_tiles, n_slots), slots
+     innermost, so each group's S block stays resident in VMEM while its
+     slot row streams codes tiles; ``-1`` sentinels keep the same
+     early-exit + clamp-to-block-0 contract per row.
+
+Block layout (1D: grid = (n_slots, n_batch_tiles), batch innermost so each
+codes tile is fetched once; 2D: grid = (n_batch_tiles, n_slots), slots
+innermost so each group's S block is fetched once):
   tile_idx (n_slots,) i32     -> scalar prefetch (SMEM)
-  codes (N, m) i8/u8/i32      -> block (TN, m)       @ row tile_idx[i]
+           or (n_batch_tiles, n_slots) i32
+  codes (N, m) i8/u8/i32      -> block (TN, m)       @ row tile_idx[...]
   s     (B, m, b) f32         -> block (TB, m, b)    @ batch tile j
   out_v (B, n_slots, K) f32   -> block (TB, 1, K)    @ (j, i)
   out_i (B, n_slots, K) i32   -> block (TB, 1, K)    @ (j, i)
@@ -132,7 +144,12 @@ def _tile_topk(scores, k: int, blocks: int):
 
 def pq_topk_fused_kernel(idx_ref, codes_ref, s_ref, out_v_ref, out_i_ref, *,
                          k: int, tile: int, n_items: int, blocks: int):
-    tile_id = idx_ref[pl.program_id(0)]
+    if len(idx_ref.shape) == 2:
+        # Grouped route: grid (n_batch_tiles, n_slots) — batch tile j's
+        # slot i reads its own row of the 2D (group, slot) table.
+        tile_id = idx_ref[pl.program_id(0), pl.program_id(1)]
+    else:
+        tile_id = idx_ref[pl.program_id(0)]
 
     # Sentinel slots (tile_id == -1): the in-graph pruned route's slot-
     # buffer padding.  Early-exit — no scoring, no top-k; and because the
@@ -192,32 +209,52 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
 
     ``tile_idx`` (n_slots,) int32 selects which codes tile each grid slot
     scores (identity for the exhaustive route, a compacted survivor list for
-    the pruned route).  ``-1`` entries are sentinel slots: their grid step
-    early-exits via ``@pl.when`` and the index map clamps their codes block
-    to 0 so the pipeline re-uses one already-fetched block instead of
-    issuing per-slot DMAs.  ``codes`` rows must cover every indexed tile;
-    ``s``'s batch must divide by ``batch_tile``.
+    the pruned route).  A 2D ``(B/batch_tile, n_slots)`` table gives every
+    batch tile its own slot row (the per-query grouped route); the grid
+    then iterates slots innermost so each group's S block is fetched once.
+    ``-1`` entries are sentinel slots: their grid step early-exits via
+    ``@pl.when`` and the index map clamps their codes block to 0 so the
+    pipeline re-uses one already-fetched block instead of issuing per-slot
+    DMAs.  ``codes`` rows must cover every indexed tile; ``s``'s batch
+    must divide by ``batch_tile``.
     """
     n, m = codes.shape
     bq, m2, b = s.shape
     assert m == m2 and n % tile == 0
     assert bq % batch_tile == 0, (bq, batch_tile)
-    n_slots = tile_idx.shape[0]
+    n_bt = bq // batch_tile
     blocks = pick_blocks(tile, k, oversample)
     kern = functools.partial(pq_topk_fused_kernel, k=k, tile=tile,
                              n_items=n_items, blocks=blocks)
+    # The 1D and 2D layouts share every block shape; they differ only in
+    # grid order (1D: batch innermost so each codes tile is fetched once;
+    # 2D: slots innermost so each group's S block is fetched once) and in
+    # how a grid step finds its codes tile.  `slot`/`bt` map a grid step
+    # to its (slot, batch-tile) coordinates under either order.
+    if tile_idx.ndim == 2:
+        assert tile_idx.shape[0] == n_bt, (tile_idx.shape, n_bt)
+        n_slots = tile_idx.shape[1]
+        grid = (n_bt, n_slots)
+        slot, bt = (lambda j, i: i), (lambda j, i: j)
+        codes_block = lambda j, i, idx_ref: jnp.maximum(idx_ref[j, i], 0)
+    else:
+        n_slots = tile_idx.shape[0]
+        grid = (n_slots, n_bt)
+        slot, bt = (lambda i, j: i), (lambda i, j: j)
+        codes_block = lambda i, j, idx_ref: jnp.maximum(idx_ref[i], 0)
+    out_spec = pl.BlockSpec(
+        (batch_tile, 1, k), lambda a, c, idx_ref: (bt(a, c), slot(a, c), 0))
     grid_spec = compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
-        grid=(n_slots, bq // batch_tile),
+        grid=grid,
         in_specs=[
             pl.BlockSpec((tile, m),
-                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), 0)),
-            pl.BlockSpec((batch_tile, m, b), lambda i, j, idx_ref: (j, 0, 0)),
+                         lambda a, c, idx_ref: (codes_block(a, c, idx_ref),
+                                                0)),
+            pl.BlockSpec((batch_tile, m, b),
+                         lambda a, c, idx_ref: (bt(a, c), 0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((batch_tile, 1, k), lambda i, j, idx_ref: (j, i, 0)),
-            pl.BlockSpec((batch_tile, 1, k), lambda i, j, idx_ref: (j, i, 0)),
-        ],
+        out_specs=[out_spec, out_spec],
     )
     return pl.pallas_call(
         kern,

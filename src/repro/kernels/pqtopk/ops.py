@@ -33,6 +33,30 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def effective_batch_tile(bq: int,
+                         batch_tile: int = _k.DEFAULT_BATCH_TILE) -> int:
+    """The batch-tile size the fused kernel will actually run for a batch
+    of ``bq`` queries (small batches round up to 8, never past the
+    default).  The grouped cascade builds its per-batch-tile slot table
+    against this, so the compaction and the kernel grid must agree."""
+    return min(batch_tile, _round_up(bq, 8))
+
+
+def group_batch_tile(bq: int, n_groups: int,
+                     batch_tile: int = _k.DEFAULT_BATCH_TILE) -> int:
+    """Batch-tile size for the grouped route: small enough that the batch
+    splits into ~``n_groups`` kernel batch tiles (each group gets its own
+    slot row), floored at 8 rows (sublane minimum) and capped at the
+    exhaustive-route tile.  Grouping trades per-step MXU batch width for
+    scored-tile sparsity — the win condition is group survivor sets being
+    (near-)disjoint, which is exactly the mixed-batch regime."""
+    target = -(-bq // max(n_groups, 1))
+    bt = 8
+    while bt < target:
+        bt *= 2
+    return min(bt, effective_batch_tile(bq, batch_tile))
+
+
 def n_tiles(n: int, tile: int) -> int:
     """Number of item tiles covering an N-item catalogue."""
     return -(-n // tile)
@@ -102,7 +126,7 @@ def pq_topk(codes: jax.Array, s: jax.Array, k: int, *,
         raise ValueError(f"k={k} > tile={tile}")
     padded = _pad_codes(codes, tile)
     idx = jnp.arange(padded.shape[0] // tile, dtype=jnp.int32)
-    bt = min(batch_tile, _round_up(bq, 8))
+    bt = effective_batch_tile(bq, batch_tile)
     tv, ti = _k.pq_topk_fused_call(padded, _pad_batch(s, bt), k,
                                    tile_idx=idx, n_items=n, tile=tile,
                                    batch_tile=bt, interpret=interpret)
@@ -113,15 +137,24 @@ def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
                    tile_idx: jax.Array, *, tile: int, batch_tile: int,
                    use_kernel: bool, interpret: bool):
     """Non-jitted core of :func:`pq_topk_tiles` (shard_map bodies call this
-    directly so the jit boundary stays at the outer dispatch)."""
+    directly so the jit boundary stays at the outer dispatch).
+
+    ``tile_idx`` may be 1D (one compacted list for the whole batch) or 2D
+    ``(n_batch_tiles, n_slots)`` (the grouped route: each kernel batch
+    tile scores its own slot row)."""
     n, m = codes.shape
     bq = s.shape[0]
     tile = min(tile, _round_up(n, 128))
     if k > tile:
         raise ValueError(f"k={k} > tile={tile}")
     padded = _pad_codes(codes, tile, sentinel=True)
+    bt = effective_batch_tile(bq, batch_tile)
+    grouped = tile_idx.ndim == 2
+    if grouped and tile_idx.shape[0] * bt < bq:
+        raise ValueError(
+            f"2D tile_idx has {tile_idx.shape[0]} batch-tile rows but the "
+            f"batch pads to {-(-bq // bt)} tiles of {bt}")
     if use_kernel:
-        bt = min(batch_tile, _round_up(bq, 8))
         tv, ti = _k.pq_topk_fused_call(padded, _pad_batch(s, bt), k,
                                        tile_idx=tile_idx, n_items=n,
                                        tile=tile, batch_tile=bt,
@@ -136,8 +169,27 @@ def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
     # all-padding tile appended past the catalogue, whose global ids are
     # >= n and therefore mask to -inf below.
     tile_idx = jnp.where(tile_idx < 0, sentinel_tile(n, tile), tile_idx)
+    codes3 = padded.reshape(-1, tile, m)
+    if grouped:
+        # Per-group gather + scoring: each batch tile's queries score only
+        # that group's slot row — the XLA mirror of the kernel's 2D grid,
+        # with the same per-row ascending order (hence identical ties).
+        n_slots = tile_idx.shape[1]
+        s3 = _pad_batch(s, bt).reshape(-1, bt, m, s.shape[-1])
+
+        def group_fn(idx_row, s_g):
+            sel = codes3[idx_row]                       # (S, tile, m)
+            sc = _ref.pq_scores(sel.reshape(n_slots * tile, m), s_g)
+            gid = (idx_row[:, None] * tile
+                   + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
+            sc = jnp.where(gid[None, :] < n, sc, NEG_INF)
+            fv, pos = topk_lib.tiled_topk(sc, k)
+            return fv, jnp.take(gid, pos)
+
+        fv, fi = jax.vmap(group_fn)(tile_idx, s3)       # (n_bt, bt, k)
+        return (fv.reshape(-1, k)[:bq], fi.reshape(-1, k)[:bq])
     n_slots = tile_idx.shape[0]
-    sel = padded.reshape(-1, tile, m)[tile_idx]             # (L, tile, m)
+    sel = codes3[tile_idx]                              # (L, tile, m)
     scores = _ref.pq_scores(sel.reshape(n_slots * tile, m), s)
     gid = (tile_idx[:, None] * tile
            + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
@@ -157,8 +209,14 @@ def _pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
     (exhaustive).  Lowers to a nested ``lax.cond`` chain: the first rung
     whose slot count holds ``count`` scores its buffer; every branch lives
     in the same traced computation, so the dispatch count never changes.
+    For the grouped route the buffers are 2D ``(n_batch_tiles, budget)``
+    rows and ``count`` is the per-group survivor-count vector — a rung is
+    taken when it holds the LARGEST group (one shared ladder; lighter
+    groups' spare slots are ``-1`` sentinels and cost ~nothing).
     -> (vals (B, k), ids (B, k), rung i32 — index of the rung taken).
     """
+    count_max = jnp.max(count)
+
     def rung_fn(i):
         def run():
             v, ii = _pq_topk_tiles(codes, s, k, slot_lists[i], tile=tile,
@@ -169,8 +227,8 @@ def _pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
         if i == len(slot_lists) - 1:
             return run
         nxt = rung_fn(i + 1)
-        budget = slot_lists[i].shape[0]
-        return lambda: jax.lax.cond(count <= budget, run, nxt)
+        budget = slot_lists[i].shape[-1]
+        return lambda: jax.lax.cond(count_max <= budget, run, nxt)
 
     return rung_fn(0)()
 

@@ -44,6 +44,16 @@ def main(argv=None):
                     help="disable the build-time slot-budget ladder "
                          "calibration for the pruned cascade (serve the "
                          "full-length compacted buffer instead)")
+    ap.add_argument("--query-grouping", action="store_true",
+                    help="per-query pruned survival (pqtopk_pruned only): "
+                         "seed theta per query, bucket queries by "
+                         "survivor-set overlap, and score each group's "
+                         "compacted tile list — sum_g B_g*S_g work "
+                         "instead of the batch-any B*|union|")
+    ap.add_argument("--n-groups", type=int, default=None,
+                    help="query-group count for --query-grouping "
+                         "(default: the arch config's PQConfig.n_groups; "
+                         "1 recovers the batch-any route)")
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -54,11 +64,16 @@ def main(argv=None):
         pq_overrides["seed_policy"] = args.seed_policy
     if args.bound_backend is not None:
         pq_overrides["bound_backend"] = args.bound_backend
+    if args.query_grouping:
+        pq_overrides["query_grouping"] = True
+    if args.n_groups is not None:
+        pq_overrides["n_groups"] = args.n_groups
     if pq_overrides:
         if getattr(cfg, "pq", None) is None:
             raise SystemExit(f"arch {args.arch!r} has no PQ head (dense "
                              "item embedding); --seed-policy/--bound-"
-                             "backend only apply to the pruned PQ cascade")
+                             "backend/--query-grouping only apply to the "
+                             "pruned PQ cascade")
         from dataclasses import replace
         cfg = replace(cfg, pq=replace(cfg.pq, **pq_overrides))
     from repro.models import seqrec as m

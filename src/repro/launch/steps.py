@@ -96,6 +96,12 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
         from dataclasses import replace as _rep
         cfg = _rep(cfg, pq_head=_rep(cfg.pq_head, bound_backend="range"))
         arch = _rep(arch, model=cfg)
+    if variant == "perquery_head" and cfg.pq_head is not None:
+        # Per-query grouped cascade cell: decode-time vocab pruning with
+        # per-query thetas + query-grouped compaction (PR 5).
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, pq_head=_rep(cfg.pq_head, query_grouping=True))
+        arch = _rep(arch, model=cfg)
     plan = shd.lm_activation_plan(
         mesh, shard_seq=variant != "noseq",
         tp_internal=variant in ("seqpar_tp", "seqpar_tp_dots"),
@@ -191,6 +197,8 @@ def _lm_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
             # Same cascade, range-bound metadata (cfg.pq_head replaced
             # above) — proves the backend is decode-loop viable too.
             "pruned_range_head": "pqtopk_pruned",
+            # Per-query grouped cascade (cfg.pq_head replaced above).
+            "perquery_head": "pqtopk_pruned",
             "approx_head": "pqtopk_approx"}.get(variant, "pqtopk")
 
     def decode(p, tok, pos, caches):
@@ -221,6 +229,11 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
         # ranges instead of uint32 presence bitmasks.
         from dataclasses import replace as _rep
         cfg = _rep(cfg, pq=_rep(cfg.pq, bound_backend="range"))
+        arch = _rep(arch, model=cfg)
+    if variant in ("perquery_head", "sharded_perquery"):
+        # Per-query grouped cascade cells (flat and one-shard_map sharded).
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, pq=_rep(cfg.pq, query_grouping=True))
         arch = _rep(arch, model=cfg)
     plan = shd.lm_activation_plan(mesh, shard_seq=False)
     b_axes = _batch_spec(mesh)
@@ -266,6 +279,10 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
               "sharded_head_bm": "pqtopk",
               "sharded_onehot": "pqtopk_onehot",
               "sharded_fused": "pqtopk_fused",
+              # Per-query grouped cascade (cfg.pq replaced above): flat
+              # and one-shard_map sharded (per-query pmax'd thetas).
+              "perquery_head": "pqtopk_pruned",
+              "sharded_perquery": "pqtopk_pruned",
               # One-shard_map pruned cascade with pmax-shared theta; the
               # dry-run's abstract state is shards=1, so this cell traces
               # the in-graph shard-aligned rebuild fallback.

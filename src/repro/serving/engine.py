@@ -148,6 +148,13 @@ class RetrievalEngine:
         rung inside the same dispatch, and the final rung is always
         exhaustive — exactness at any skew.  An explicit ``ladder`` skips
         calibration entirely; ``calibrate=False`` disables the ladder.
+
+        When ``cfg.pq.query_grouping`` is on, calibration is
+        **group-aware**: the observable is the MAX per-group survivor
+        count (``pruning.survival_count_grouped``) rather than the
+        batch-any union count, because that is what the grouped ladder
+        escalates on — union-count rungs would be needlessly tall and
+        forfeit most of the per-group win.
         """
         from repro.core import pruning, retrieval_head
         from repro.kernels.pqtopk import kernel as pqtopk_kernel
@@ -211,20 +218,28 @@ class RetrievalEngine:
         state = head["pruned"]
         seed_kw = retrieval_head._seed_kwargs(getattr(cfg, "pq", None))
 
+        pq = getattr(cfg, "pq", None)
+        grouped = pq is not None and pq.query_grouping and pq.n_groups > 1
+
         def count_fn(seqs):
             phi = seqrec_lib.sequence_embedding(params, seqs, cfg)
             s = scoring.subid_scores(head["sub_emb"].astype(jnp.float32),
                                      phi.astype(jnp.float32))
+            st = state
             if state.shards > 1:
                 # Flat counts from a per-shard layout would misread tile
                 # boundaries; bound each shard's tile block independently
                 # (same layout the sharded cascade sees) and sum.
-                st_flat = pruning.build_pruned_state(
+                st = pruning.build_pruned_state(
                     head["codes"], state.b, state.tile,
                     backend=state.backend)
-                return pruning.survival_count(head["codes"], s, k, st_flat,
-                                              **seed_kw)
-            return pruning.survival_count(head["codes"], s, k, state,
+            if grouped:
+                # Group-aware observable: the grouped ladder escalates on
+                # the max per-group count, so calibrate against that.
+                return pruning.survival_count_grouped(
+                    head["codes"], s, k, st, n_groups=pq.n_groups,
+                    **seed_kw)
+            return pruning.survival_count(head["codes"], s, k, st,
                                           **seed_kw)
 
         fn = jax.jit(count_fn)

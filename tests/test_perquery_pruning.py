@@ -1,0 +1,424 @@
+"""Per-query pruned retrieval (PR 5): per-query thetas + survival masks,
+greedy query grouping, the 2D (group, slot) compacted kernel table, and
+wrap-robust theta seeding.
+
+Coverage: bit-exact parity of the grouped cascade vs the exhaustive
+oracle AND vs the batch-any route across (bound backend, grouping on/off,
+B in {1, 8, 200}, flat/sharded, under jit, inside ``lm_decode_step``,
+Pallas-interpret 2D kernel path); an adversarial case where every query
+survives a disjoint tile set (grouping must strictly reduce scored
+slot·query pairs); the degenerate full-hull seed-ordering penalty on a
+wraparound code layout; group-aware engine calibration; and the ladder's
+max-per-group escalation rule.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import PQConfig
+from repro.core import pruning, retrieval_head, scoring, topk as topk_lib
+from repro.kernels.pqtopk import ops as pq_ops
+from repro.serving.engine import Request, RetrievalEngine
+
+
+def _oracle(codes, s, k):
+    r = scoring.score_pqtopk(codes.astype(jnp.int32), s)
+    return topk_lib.tiled_topk(r, k)
+
+
+def _mixed_case(n, m, b, bq, *, seed=0, code_dtype=jnp.int32, boost=6.0):
+    """Clipped clustered codes + per-query window-boosted skewed scores:
+    every query's survivor set concentrates on its own catalogue region —
+    the mixed-batch regime the per-query route targets."""
+    rng = np.random.default_rng(seed)
+    centers = (np.arange(n) / n * b).astype(np.int64)
+    codes = jnp.asarray(
+        np.clip(centers[:, None] + rng.integers(-1, 2, (n, m)), 0, b - 1),
+        code_dtype)
+    g = rng.standard_normal((bq, m, b))
+    g = np.sign(g) * np.abs(g) ** 3
+    for q in range(bq):
+        w = (q * b) // max(bq, 1)
+        g[q, :, max(0, w - 1):w + 3] += boost
+    return codes, jnp.asarray(g, jnp.float32)
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# ---------------------------------------------------------------------------
+# per-query masks + thetas
+# ---------------------------------------------------------------------------
+
+
+def test_perquery_mask_union_is_batchany_mask():
+    codes, s = _mixed_case(2048, 4, 64, 8)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    bounds = pruning.tile_bounds(state, s)
+    theta, _, _ = pruning.theta_seed_ingraph(codes, s, bounds, 5, tile=256)
+    pq_mask = pruning.survival_mask_perquery(bounds, theta)
+    np.testing.assert_array_equal(
+        np.asarray(pq_mask.any(axis=0)),
+        np.asarray(pruning.survival_mask(bounds, theta)))
+
+
+def test_perquery_seeding_equals_shared_at_b1():
+    """B=1: the per-query seed ordering IS the batch-max ordering and the
+    scoring paths share the tree_sum accumulation — thetas bit-equal."""
+    codes, s = _mixed_case(3001, 4, 32, 1, seed=3)
+    state = pruning.build_pruned_state(codes, 32, 256)
+    bounds = pruning.tile_bounds(state, s)
+    for policy in ("greedy", "adaptive"):
+        t1, n1, _ = pruning.theta_seed_ingraph(
+            codes, s, bounds, 7, tile=256, seed_policy=policy)
+        t2, n2, _ = pruning.theta_seed_perquery(
+            codes, s, bounds, 7, tile=256, seed_policy=policy)
+        np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+        assert int(n1) == int(n2)
+
+
+def test_perquery_theta_certified():
+    """Every query has >= k true scores >= its theta (the certification
+    the exactness argument rests on)."""
+    codes, s = _mixed_case(2048, 4, 64, 16, seed=4)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    bounds = pruning.tile_bounds(state, s)
+    theta, _, _ = pruning.theta_seed_perquery(codes, s, bounds, 5, tile=256)
+    r = np.asarray(scoring.score_pqtopk(codes, s))
+    at_least = (r >= np.asarray(theta)[:, None]).sum(axis=1)
+    assert (at_least >= 5).all()
+
+
+# ---------------------------------------------------------------------------
+# query grouping + 2D compaction
+# ---------------------------------------------------------------------------
+
+
+def test_group_queries_identical_masks_share_group():
+    mask = jnp.asarray(np.tile([True] * 4 + [False] * 12, (6, 1)))
+    assign = np.asarray(pruning.group_queries(mask, 4))
+    assert len(set(assign.tolist())) == 1
+
+
+def test_group_queries_disjoint_masks_spread():
+    m = np.zeros((4, 16), bool)
+    for q in range(4):
+        m[q, 4 * q:4 * q + 4] = True
+    assign = np.asarray(pruning.group_queries(jnp.asarray(m), 4))
+    assert len(set(assign.tolist())) == 4
+
+
+def test_group_and_compact_layout():
+    rng = np.random.default_rng(0)
+    mask = jnp.asarray(rng.random((10, 32)) < 0.2)
+    perm, inv, slots2d, counts = pruning.group_and_compact(
+        mask, n_groups=4, batch_tile=4)
+    perm, inv = np.asarray(perm), np.asarray(inv)
+    assert sorted(perm.tolist()) == list(range(10))
+    np.testing.assert_array_equal(perm[inv], np.arange(10))
+    slots2d, counts = np.asarray(slots2d), np.asarray(counts)
+    assert slots2d.shape == (3, 32) and counts.shape == (3,)   # ceil(10/4)
+    mask_np = np.asarray(mask)[perm]
+    mask_np = np.concatenate([mask_np, np.zeros((2, 32), bool)])
+    for g in range(3):
+        union = mask_np[4 * g:4 * (g + 1)].any(axis=0)
+        want = np.flatnonzero(union)
+        assert counts[g] == len(want)
+        np.testing.assert_array_equal(slots2d[g, :len(want)], want)
+        assert (slots2d[g, len(want):] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: grouped cascade vs oracle vs batch-any route
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["bitmask", "range"])
+@pytest.mark.parametrize("n_groups", [1, 4])
+@pytest.mark.parametrize("bq", [1, 8, 200])
+def test_grouped_cascade_matches_oracle(backend, n_groups, bq):
+    codes, s = _mixed_case(4099, 4, 64, bq, seed=bq)     # odd N
+    state = pruning.build_pruned_state(codes, 64, 256, backend=backend)
+    ref = _oracle(codes, s, 7)
+    out = pruning.cascade_topk_ingraph(codes, s, 7, state,
+                                       query_grouping=True,
+                                       n_groups=n_groups)
+    _assert_same(out, ref)
+    # ... and vs the batch-any route (grouping must not change answers).
+    out_any = pruning.cascade_topk_ingraph(codes, s, 7, state)
+    _assert_same(out, out_any)
+
+
+@pytest.mark.parametrize("code_dtype", [jnp.uint8, jnp.int32])
+def test_grouped_kernel_interpret_parity(code_dtype):
+    """The 2D (group, slot) Pallas path (interpret mode off TPU) is
+    bit-identical to the oracle — sentinel rows, group-keyed grid and
+    per-group merge included."""
+    codes, s = _mixed_case(1021, 4, 32, 24, seed=7, code_dtype=code_dtype)
+    state = pruning.build_pruned_state(codes, 32, 128)
+    ref = _oracle(codes, s, 5)
+    out = pruning.cascade_topk_ingraph(codes, s, 5, state,
+                                       query_grouping=True, n_groups=4,
+                                       use_kernel=True, interpret=True)
+    _assert_same(out, ref)
+
+
+def test_grouped_under_jit_and_with_ladder():
+    codes, s = _mixed_case(4099, 4, 64, 32, seed=9)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    ref = _oracle(codes, s, 7)
+
+    @jax.jit
+    def run(s_):
+        return pruning.cascade_topk_ingraph(
+            codes, s_, 7, state, query_grouping=True, n_groups=8,
+            ladder=(2, 8))
+    _assert_same(run(s), ref)
+
+
+def test_grouped_pairs_never_exceed_union_pairs():
+    codes, s = _mixed_case(4099, 4, 64, 64, seed=11)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    _, _, st = pruning.cascade_topk_ingraph(
+        codes, s, 7, state, query_grouping=True, n_groups=8,
+        return_stats=True)
+    assert set(st) == set(pruning.STATS_KEYS)
+    assert int(st["pairs_scored"]) <= int(st["pairs_union"])
+    assert int(st["max_group_survived"]) <= int(st["n_survived"])
+
+
+def test_adversarial_disjoint_survivor_sets():
+    """Every query survives a DISJOINT tile set — the worst case for the
+    batch-any rule (its union is the sum of all sets) and the best case
+    for grouping: scored pairs must shrink strictly, answers bit-equal."""
+    codes, s = _mixed_case(8192, 4, 64, 32, seed=13, boost=20.0)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    ref = _oracle(codes, s, 3)
+    v, i, st = pruning.cascade_topk_ingraph(
+        codes, s, 3, state, query_grouping=True, n_groups=8,
+        return_stats=True)
+    _assert_same((v, i), ref)
+    assert int(st["pairs_scored"]) < int(st["pairs_union"]), st
+    assert int(st["max_group_survived"]) < int(st["n_survived"])
+
+
+# ---------------------------------------------------------------------------
+# wrap-robust theta seeding (degenerate full-hull range tiles)
+# ---------------------------------------------------------------------------
+
+
+def _wrap_case(n=4096, m=4, b=64, tile=256, bq=4, seed=17):
+    """Clustered clipped codes, except the FIRST tile's codes wrap the
+    codebook ({0, b-1} rows alternating): its range hull is [0, b-1] in
+    every split (degenerate), its range bound is the unconditional max —
+    but its true items score ~nothing special."""
+    rng = np.random.default_rng(seed)
+    centers = (np.arange(n) / n * b).astype(np.int64)
+    codes_np = np.clip(centers[:, None] + rng.integers(-1, 2, (n, m)),
+                       0, b - 1)
+    codes_np[:tile] = np.where((np.arange(tile) % 2)[:, None] == 0,
+                               0, b - 1)
+    g = rng.standard_normal((bq, m, b))
+    g = np.sign(g) * np.abs(g) ** 3
+    for q in range(bq):
+        w = b // 2 + q
+        g[q, :, w:w + 2] += 6.0
+    return jnp.asarray(codes_np, jnp.int32), jnp.asarray(g, jnp.float32)
+
+
+def test_degenerate_tile_mask_detects_wrap():
+    codes, _ = _wrap_case()
+    state = pruning.build_pruned_state(codes, 64, 256, backend="range")
+    deg = np.asarray(pruning.degenerate_tile_mask(state))
+    assert deg[0] and not deg[1:].any()
+    assert pruning.degenerate_tile_mask(
+        pruning.build_pruned_state(codes, 64, 256)) is None   # bitmask
+
+
+def test_seed_order_key_pushes_degenerate_behind():
+    bounds = jnp.asarray([10.0, 5.0, 8.0, 1.0])
+    deg = jnp.asarray([True, False, False, False])
+    order = np.asarray(jnp.argsort(-pruning.seed_order_key(bounds, deg)))
+    # Tile 0 has the largest bound but is degenerate -> ordered last;
+    # clean tiles keep their bound order.
+    np.testing.assert_array_equal(order, [2, 1, 3, 0])
+
+
+def test_wrap_penalty_tightens_survival_on_range_backend():
+    codes, s = _wrap_case()
+    state = pruning.build_pruned_state(codes, 64, 256, backend="range")
+    bounds = pruning.tile_bounds(state, s)
+    deg = pruning.degenerate_tile_mask(state)
+    k = 5
+    t_plain, _, sf_plain = pruning.theta_seed_ingraph(
+        codes, s, bounds, k, tile=256, seed_tiles=1)
+    t_pen, _, sf_pen = pruning.theta_seed_perquery(
+        codes, s, bounds, k, tile=256, seed_tiles=1, degenerate=deg)
+    # Without the penalty the single seed tile is the degenerate wrap tile
+    # (largest range bound) and theta is loose; with it, each query seeds
+    # its own informative tile and certifies a strictly tighter theta.
+    assert float(sf_pen) < float(sf_plain)
+    assert (np.asarray(t_pen) >= np.asarray(t_plain)).all()
+
+
+def test_wrap_layout_cascade_still_exact_both_routes():
+    codes, s = _wrap_case()
+    for backend in ("bitmask", "range"):
+        state = pruning.build_pruned_state(codes, 64, 256, backend=backend)
+        ref = _oracle(codes, s, 5)
+        for grouping in (False, True):
+            out = pruning.cascade_topk_ingraph(
+                codes, s, 5, state, query_grouping=grouping, n_groups=4)
+            _assert_same(out, ref)
+
+
+def test_adaptive_seeding_does_not_stall_on_wrap_tiles():
+    """Adaptive growth with the penalty settles at no more seed tiles
+    than without it (degenerate tiles can only inflate the seed set)."""
+    codes, s = _wrap_case(bq=2)
+    state = pruning.build_pruned_state(codes, 64, 256, backend="range")
+    bounds = pruning.tile_bounds(state, s)
+    deg = pruning.degenerate_tile_mask(state)
+    _, n_plain, _ = pruning.theta_seed_ingraph(
+        codes, s, bounds, 5, tile=256, seed_policy="adaptive",
+        seed_tiles=1, seed_max_tiles=8)
+    _, n_pen, _ = pruning.theta_seed_ingraph(
+        codes, s, bounds, 5, tile=256, seed_policy="adaptive",
+        seed_tiles=1, seed_max_tiles=8, degenerate=deg)
+    assert int(n_pen) <= int(n_plain)
+
+
+# ---------------------------------------------------------------------------
+# ladder escalation on per-group counts
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_escalates_on_max_group_count():
+    codes, s = _mixed_case(2048, 4, 64, 16, seed=19)
+    n_tiles = 8
+    slots_small = jnp.full((4, 2), -1, jnp.int32).at[:, 0].set(0)
+    slots_full = jnp.full((4, n_tiles), -1, jnp.int32).at[:, 0].set(0)
+    for counts, want in ((jnp.asarray([1, 2, 1, 0]), 0),
+                         (jnp.asarray([1, 3, 1, 0]), 1)):
+        _, _, rung = pq_ops.pq_topk_tiles_ladder(
+            codes, s, 5, (slots_small, slots_full), counts, tile=256,
+            batch_tile=4)
+        assert int(rung) == want
+
+
+# ---------------------------------------------------------------------------
+# flat/sharded routes + decode loop + engine
+# ---------------------------------------------------------------------------
+
+
+def _grouped_cfg(**kw):
+    return PQConfig(m=4, b=16, code_dtype="uint8", query_grouping=True,
+                    n_groups=4, **kw)
+
+
+def test_top_items_grouped_route_matches_plain():
+    params = retrieval_head.init(jax.random.PRNGKey(0), 1013, 16,
+                                 _grouped_cfg())
+    phi = jax.random.normal(jax.random.PRNGKey(1), (12, 16))
+    v1, i1 = retrieval_head.top_items(params, phi, 7, method="pqtopk")
+    v2, i2 = retrieval_head.top_items(params, phi, 7,
+                                      method="pqtopk_pruned",
+                                      pq_cfg=_grouped_cfg())
+    _assert_same((v1, i1), (v2, i2))
+
+
+@pytest.mark.sharded
+def test_sharded_grouped_matches_plain():
+    mesh = jax.make_mesh((1,), ("model",))
+    params = retrieval_head.init(jax.random.PRNGKey(0), 1013, 16,
+                                 _grouped_cfg())
+    phi = jax.random.normal(jax.random.PRNGKey(2), (12, 16))
+    v1, i1 = retrieval_head.top_items(params, phi, 7, method="pqtopk")
+    v2, i2, st = retrieval_head.top_items_pruned_sharded(
+        params, phi, 7, mesh, pq_cfg=_grouped_cfg(), return_stats=True)
+    _assert_same((v1, i1), (v2, i2))
+    assert set(st) == set(pruning.STATS_KEYS)
+    # n_groups reports kernel group rows actually built: 12 queries at
+    # the 8-row sublane floor -> 2 batch tiles, not the requested 4.
+    assert int(st["n_groups"]) == 2
+    assert int(st["pairs_scored"]) <= int(st["pairs_union"])
+
+
+@pytest.mark.sharded
+def test_sharded_grouped_is_jittable():
+    mesh = jax.make_mesh((1,), ("model",))
+    params = retrieval_head.init(jax.random.PRNGKey(0), 600, 16,
+                                 _grouped_cfg())
+    params = retrieval_head.ensure_sharded_pruned_state(params, mesh,
+                                                        k_hint=7)
+    fn = jax.jit(lambda p, x: retrieval_head.top_items_pruned_sharded(
+        p, x, 7, mesh, pq_cfg=_grouped_cfg()))
+    phi = jax.random.normal(jax.random.PRNGKey(3), (9, 16))
+    v, i = fn(params, phi)
+    v1, i1 = retrieval_head.top_items(params, phi, 7, method="pqtopk")
+    _assert_same((v, i), (v1, i1))
+
+
+@pytest.mark.slow
+def test_grouped_head_inside_lm_decode_step():
+    from dataclasses import replace
+    from repro.models import transformer as T
+    arch = get_reduced("qwen2.5-14b")
+    cfg = replace(arch.model,
+                  pq_head=replace(arch.model.pq_head, query_grouping=True,
+                                  n_groups=2))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    caches = T.init_caches(cfg, 2, 16)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    pos = jnp.int32(0)
+    outs = {}
+    for meth in ("pqtopk", "pqtopk_pruned"):
+        step = jax.jit(lambda p, t_, c, m_=meth: T.lm_decode_step(
+            p, t_, pos, c, cfg, k=8, head_method=m_))
+        ids, vals, _ = step(params, tok, caches)
+        outs[meth] = (np.asarray(ids), np.asarray(vals))
+    np.testing.assert_array_equal(outs["pqtopk_pruned"][0],
+                                  outs["pqtopk"][0])
+    np.testing.assert_array_equal(outs["pqtopk_pruned"][1],
+                                  outs["pqtopk"][1])
+
+
+def test_survival_count_grouped_at_most_union():
+    codes, s = _mixed_case(4099, 4, 64, 32, seed=23)
+    state = pruning.build_pruned_state(codes, 64, 256)
+    cg = int(pruning.survival_count_grouped(codes, s, 5, state, n_groups=8))
+    cu = int(pruning.survival_count(codes, s, 5, state))
+    assert cg <= cu
+
+
+@pytest.mark.slow
+def test_engine_grouped_calibration_and_parity():
+    """Group-aware calibration installs a ladder; the grouped engine
+    serves the same winners as the batch-any engine (both exact)."""
+    from dataclasses import replace
+    from repro.models import seqrec as seqrec_lib
+    cfg = replace(get_reduced("sasrec-recjpq").model, n_items=2048)
+    cfg_g = replace(cfg, pq=replace(cfg.pq, query_grouping=True,
+                                    n_groups=4))
+    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    seqs = [rng.integers(1, cfg.n_items + 1, 8) for _ in range(6)]
+    results = {}
+    for name, c in (("any", cfg), ("grouped", cfg_g)):
+        eng = RetrievalEngine.for_seqrec(params, c, k=5, max_batch=8,
+                                         method="pqtopk_pruned")
+        assert eng.ladder is not None
+        for i, sq in enumerate(seqs):
+            eng.submit(Request(i, sq, k=5))
+        out = sorted(eng.drain(), key=lambda r: r.request_id)
+        assert all(len(r.items) == 5 for r in out)
+        results[name] = out
+        if name == "grouped":
+            assert sum(eng.rung_counts.values()) >= 1
+    for ra, rg in zip(results["any"], results["grouped"]):
+        np.testing.assert_array_equal(ra.items, rg.items)
+        np.testing.assert_array_equal(ra.scores, rg.scores)
