@@ -7,11 +7,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 pruned-vs-exhaustive retrieval sweep on skewed data
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr5.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr6.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
 fraction + seed size + bound backend + ladder / rung-hit fraction for the
-pruned route, interpret-mode markers, ...).
+pruned route, interpret-mode markers, ...).  The document also carries an
+environment ``fingerprint`` (python/jax/jaxlib versions, backend, thread
+pinning) so ``scripts/bench_compare.py`` can refuse joins of numbers
+measured on different software stacks (``--allow-mixed`` overrides).
 Rows measured through the Pallas interpreter (``"interpret": true``) time
 the emulator, not the kernel — their ``items_per_s`` is null so they can
 never enter throughput trend comparisons (see README §Benchmarks).
@@ -25,13 +28,41 @@ import json
 import sys
 
 
+def environment_fingerprint() -> dict:
+    """What was measured *on*: the software stack and thread pinning that
+    make two benchmark numbers comparable.  Persisted into every BENCH
+    json; ``scripts/bench_compare.py`` joins across PRs only when the
+    fingerprints agree (identical dicts) or are absent (legacy files)."""
+    import os
+    import platform
+
+    import jax as _jax
+    import jaxlib as _jaxlib
+
+    threads = {var: os.environ[var]
+               for var in ("OMP_NUM_THREADS", "MKL_NUM_THREADS",
+                           "OPENBLAS_NUM_THREADS", "XLA_FLAGS")
+               if os.environ.get(var)}
+    return {
+        "python": platform.python_version(),
+        "jax": _jax.__version__,
+        "jaxlib": _jaxlib.__version__,
+        "backend": _jax.default_backend(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        # Unpinned thread counts are themselves provenance: two runs with
+        # different pinning must not be joined silently.
+        "threads": threads or "unpinned",
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr5.json",
+    ap.add_argument("--json", default="BENCH_pr6.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -463,10 +494,11 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 5,
+            "pr": 6,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,
+            "fingerprint": environment_fingerprint(),
             "rows": rows,
         }
         with open(args.json, "w") as f:

@@ -1,0 +1,11 @@
+#!/usr/bin/env python
+"""Convenience launcher for the serve-path static analysis.
+
+Identical to ``python -m repro.analysis`` (see docs/ANALYSIS.md); exists
+so the analysis is discoverable next to the other CI entry scripts.
+"""
+import sys
+
+if __name__ == "__main__":
+    from repro.analysis.__main__ import main
+    sys.exit(main())

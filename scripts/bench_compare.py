@@ -11,6 +11,13 @@ rows) never enter the comparison.  A drop of more than ``--threshold``
 flagged ``REGRESSION``; ``--strict`` turns any flag into a non-zero exit
 for CI gating (the default smoke run in ``scripts/ci.sh`` only reports).
 
+Provenance: every file written since PR 6 carries an environment
+``fingerprint`` (python/jax/jaxlib versions, backend, thread pinning).
+Numbers measured on different stacks are not comparable — two files with
+*different* fingerprints refuse to join (exit 2) unless ``--allow-mixed``
+is passed.  Legacy files without a fingerprint only warn, so the existing
+trajectory keeps printing.
+
 Usage:
   python scripts/bench_compare.py              # repo-root BENCH_pr*.json
   python scripts/bench_compare.py --threshold 0.1 --strict
@@ -51,13 +58,15 @@ def row_key(row: dict) -> tuple:
 
 
 def load(paths):
-    """-> (sorted pr numbers, {key: {pr: items_per_s}})."""
-    prs, table = [], {}
+    """-> (sorted pr numbers, {key: {pr: items_per_s}},
+    {path: fingerprint-or-None})."""
+    prs, table, fingerprints = [], {}, {}
     for path in sorted(paths, key=_pr_number):
         with open(path) as f:
             doc = json.load(f)
         pr = doc.get("pr", _pr_number(path))
         prs.append(pr)
+        fingerprints[path] = doc.get("fingerprint")
         for row in doc.get("rows", []):
             ips = row.get("items_per_s")
             if ips is None:
@@ -66,7 +75,37 @@ def load(paths):
             # one file (e.g. repeated smoke invocations) must not fan out.
             cell = table.setdefault(row_key(row), {})
             cell[pr] = max(cell.get(pr, 0.0), float(ips))
-    return prs, table
+    return prs, table, fingerprints
+
+
+def check_fingerprints(fingerprints: dict, allow_mixed: bool) -> bool:
+    """Refuse cross-fingerprint joins: numbers from different software
+    stacks (jax version, backend, thread pinning) are not a trajectory.
+    Files predating the fingerprint (PR <= 5) warn but join — there is
+    nothing to compare them against.  Returns False when the join must be
+    refused."""
+    legacy = sorted(p for p, fp in fingerprints.items() if fp is None)
+    if legacy:
+        print(f"# WARN: {len(legacy)} file(s) without an environment "
+              f"fingerprint (pre-PR6): {', '.join(legacy)}",
+              file=sys.stderr)
+    distinct = {}
+    for path, fp in fingerprints.items():
+        if fp is not None:
+            distinct.setdefault(json.dumps(fp, sort_keys=True),
+                                []).append(path)
+    if len(distinct) <= 1:
+        return True
+    msg = " vs ".join(f"{sorted(ps)} {json.loads(k)}"
+                      for k, ps in sorted(distinct.items()))
+    if allow_mixed:
+        print(f"# WARN: joining {len(distinct)} distinct environment "
+              f"fingerprints (--allow-mixed): {msg}", file=sys.stderr)
+        return True
+    print(f"REFUSING to join benchmarks from {len(distinct)} different "
+          f"environments: {msg}\n(rerun with --allow-mixed to override)",
+          file=sys.stderr)
+    return False
 
 
 def fmt_key(key: tuple) -> str:
@@ -98,13 +137,19 @@ def main(argv=None) -> int:
                          "as a regression (default 0.20)")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero when any regression is flagged")
+    ap.add_argument("--allow-mixed", action="store_true",
+                    help="join files whose environment fingerprints "
+                         "differ (numbers are NOT comparable; trend is "
+                         "indicative only)")
     args = ap.parse_args(argv)
 
     paths = args.paths or sorted(glob.glob("BENCH_pr*.json"))
     if not paths:
         print("no BENCH_pr*.json files found", file=sys.stderr)
         return 1
-    prs, table = load(paths)
+    prs, table, fingerprints = load(paths)
+    if not check_fingerprints(fingerprints, args.allow_mixed):
+        return 2
     prs = sorted(dict.fromkeys(prs))
 
     header = ["benchmark"] + [f"pr{p}" for p in prs] + ["trend"]

@@ -1,152 +1,82 @@
 #!/usr/bin/env python
 """CI guard: the pruned serve route is ONE device dispatch per query batch.
 
-Three independent checks on a reduced sasrec-recjpq engine with
-``method="pqtopk_pruned"``:
+Since ISSUE 6 this is a thin wrapper over the ``repro.analysis`` framework
+(docs/ANALYSIS.md): its historical checks are registry passes now —
 
-1. **Traceability** — the whole serve function (backbone -> bounds -> theta
-   -> in-graph compaction -> compacted scoring) traces into a single jaxpr.
-   Any host orchestration (the PR 2 ``np.nonzero`` compaction) would blow
-   up here with a TracerArrayConversionError.
-2. **Dispatch counting** — wrap every memoised compiled serve variant in a
-   counter and serve a batch: exactly one entry must fire per ``run_once``.
-   The legacy cascade took 2+ dispatches (bound pass, then one compacted
-   pass per slot bucket) through a non-jitted serve fn.
-3. **Negative control** — the PR 2 host two-pass cascade must FAIL check 1
-   (its ``np.nonzero`` compaction cannot trace), proving the trace check
+1. **Traceability** (checks 1 & 4) — the ``engine_aot`` /
+   ``engine_aot_grouped`` entrypoints trace the whole serve function
+   (backbone -> bounds -> theta -> in-graph compaction -> compacted
+   scoring; plus the grouped route's bucketing scan, argsort permutation
+   and 2D compaction) into a single jaxpr under the ``dispatch-count``
+   pass.
+2. **Dispatch counting** (check 2) — the same entrypoints carry a runtime
+   dispatch counter: every memoised compiled variant is wrapped and one
+   guarded batch is served; exactly one entry must fire per ``run_once``
+   (under ``jax.transfer_guard("disallow")``).
+3. **Negative control** (check 3) — retained HERE as a framework-level
+   self-test: the PR 2 host two-pass cascade (``np.nonzero`` compaction)
+   is registered as an ad-hoc entrypoint and must FAIL the
+   ``dispatch-count`` pass — and only that pass — proving the framework
    actually discriminates single-dispatch from host-orchestrated routes.
-   The serve step also runs under ``jax.transfer_guard("disallow")``,
-   which additionally catches implicit device->host syncs on accelerator
-   backends (on the CPU backend D2H is zero-copy and unguarded, so the
-   trace check is the load-bearing one there).
-4. **Grouped per-query route** — checks 1 and 2 repeat on an engine with
-   ``PQConfig.query_grouping`` enabled: per-query theta seeding, the
-   greedy overlap-bucketing scan, the stable-argsort permutation, the 2D
-   (group, slot) compaction and the group-keyed kernel grid must ALL live
-   inside the same single dispatch per query batch.
 
 Exits non-zero on any violation; ci.sh runs this before the bench smoke.
+The broader invariants (host transfers, recompile hazards, Pallas kernel
+contracts, AST lint) run in ci.sh's ``python -m repro.analysis`` step.
 """
 from __future__ import annotations
 
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 
 def main() -> int:
-    from repro.configs import get_reduced
-    from repro.models import seqrec as seqrec_lib
-    from repro.serving.engine import Request, RetrievalEngine
+    from repro.analysis import run_default
+    from repro.analysis.core import run_analysis
+    from repro.analysis.entrypoints import BuiltEntry, Entrypoint
+    from repro.analysis.passes import default_passes
 
-    from dataclasses import replace
-
-    # A catalogue large enough for several pruning tiles, with position-
-    # clustered codes (the favourable regime: tiles get distinct bounds),
-    # so build-time calibration produces a genuine multi-rung ladder and
-    # the dispatch-count proof covers the nested lax.cond rung chain.
-    cfg = replace(get_reduced("sasrec-recjpq").model, n_items=16384)
-    rng0 = np.random.default_rng(7)
-    centers = (np.arange(cfg.n_items + 1) / (cfg.n_items + 1)
-               * cfg.pq.b).astype(np.int64)
-    codes = jnp.asarray(
-        (centers[:, None] + rng0.integers(-1, 2, (cfg.n_items + 1,
-                                                  cfg.pq.m))) % cfg.pq.b,
-        jnp.int32)
-    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg, codes=codes)
-    k = 5
-    eng = RetrievalEngine.for_seqrec(params, cfg, k=k, max_batch=8,
-                                     method="pqtopk_pruned")
-    assert eng._jit_serve, "pruned route must be a jitted serve fn"
-    # The calibrated slot-budget ladder must be active: the single-
-    # dispatch guarantee has to hold WITH the nested lax.cond rung chain
-    # in the trace (every rung is a branch of the same computation).
-    assert eng.ladder is not None and len(eng.ladder) >= 2, (
-        f"expected a calibrated ladder on the pruned engine, got "
-        f"{eng.ladder!r}")
-    print(f"calibrated ladder active: {eng.ladder}")
-
-    # 1. single-jaxpr traceability
-    sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
-    jaxpr = jax.make_jaxpr(lambda seqs: eng._serve_fn(seqs, k))(sds)
-    n_eqns = len(jaxpr.jaxpr.eqns)
-    print(f"traceable: serve fn -> one jaxpr ({n_eqns} eqns)")
-
-    # 3. negative control: the legacy host cascade must NOT trace (its
-    # compaction is a device->host sync) — otherwise check 1 proves nothing.
-    from repro.core import retrieval_head
-
-    def host_cascade(seqs):
-        phi = seqrec_lib.sequence_embedding(params, seqs, cfg)
-        return retrieval_head.top_items_pruned(params["item_emb"], phi, k)
-
-    try:
-        jax.make_jaxpr(host_cascade)(sds)
-    except Exception as e:
-        print(f"negative control: host two-pass cascade fails tracing "
-              f"({type(e).__name__}) as expected")
-    else:
-        print("FAIL: host cascade traced — the check cannot discriminate")
+    # Checks 1, 2 and 4: the engine entrypoints under the full pass list.
+    report = run_default(entrypoints=["engine_aot", "engine_aot_grouped"])
+    print(report.render())
+    if not report.ok:
+        print("FAIL: pruned serve route violates a serve-path invariant")
         return 1
+    for name in ("engine_aot", "engine_aot_grouped"):
+        res = report.result(name, "dispatch-count")
+        assert res is not None and res.info.get("runtime_dispatches") == 1, (
+            f"{name}: runtime dispatch count not proven "
+            f"({res.info if res else None})")
 
-    # Warm the compile cache outside the guards.
-    rng = np.random.default_rng(0)
-    for i in range(4):
-        eng.submit(Request(i, rng.integers(1, cfg.n_items + 1, 8), k=k))
-    eng.drain()
+    # Check 3 (negative control / framework self-test): the PR 2 host
+    # cascade must fail dispatch-count — and nothing else.
+    from repro.analysis.entrypoints import _seq_sds, _seqrec_setup
 
-    # 2 + 3. count compiled-variant entries fired during one guarded batch
-    calls = []
-    for key, fn in list(eng._compiled.items()):
-        eng._compiled[key] = (
-            lambda seqs, _f=fn, _key=key: (calls.append(_key), _f(seqs))[1])
-    for i in range(4):
-        eng.submit(Request(10 + i, rng.integers(1, cfg.n_items + 1, 8), k=k))
-    with jax.transfer_guard("disallow"):
-        results = eng.run_once()
-    assert len(results) == 4, f"served {len(results)}/4"
-    assert len(calls) == 1, (
-        f"pruned route issued {len(calls)} dispatches per query batch "
-        f"(expected exactly 1): {calls}")
-    stats = eng.stats()
-    print(f"single dispatch: 1 compiled call per batch {calls[0]}, "
-          f"transfer guard clean, "
-          f"n_compiles={int(stats['n_compiles'])}, "
-          f"rung_counts={stats['rung_counts']}")
+    def build_host_cascade() -> BuiltEntry:
+        from repro.core import retrieval_head
+        from repro.models import seqrec as seqrec_lib
 
-    # 4. the grouped per-query route: same single-dispatch guarantee with
-    # per-query thetas, the bucketing scan + argsort permutation, and the
-    # 2D (group, slot) compacted table all in the trace.
-    cfg_g = replace(cfg, pq=replace(cfg.pq, query_grouping=True,
-                                    n_groups=4))
-    eng_g = RetrievalEngine.for_seqrec(params, cfg_g, k=k, max_batch=8,
-                                       method="pqtopk_pruned")
-    assert eng_g._jit_serve and eng_g.ladder is not None
-    jaxpr_g = jax.make_jaxpr(lambda seqs: eng_g._serve_fn(seqs, k))(sds)
-    print(f"traceable: grouped serve fn -> one jaxpr "
-          f"({len(jaxpr_g.jaxpr.eqns)} eqns), ladder={eng_g.ladder}")
-    for i in range(4):
-        eng_g.submit(Request(20 + i, rng.integers(1, cfg.n_items + 1, 8),
-                             k=k))
-    eng_g.drain()
-    calls_g = []
-    for key, fn in list(eng_g._compiled.items()):
-        eng_g._compiled[key] = (
-            lambda seqs, _f=fn, _key=key: (calls_g.append(_key),
-                                           _f(seqs))[1])
-    for i in range(4):
-        eng_g.submit(Request(30 + i, rng.integers(1, cfg.n_items + 1, 8),
-                             k=k))
-    with jax.transfer_guard("disallow"):
-        results_g = eng_g.run_once()
-    assert len(results_g) == 4, f"grouped served {len(results_g)}/4"
-    assert len(calls_g) == 1, (
-        f"grouped per-query route issued {len(calls_g)} dispatches per "
-        f"query batch (expected exactly 1): {calls_g}")
-    print(f"single dispatch (grouped): 1 compiled call per batch "
-          f"{calls_g[0]}, transfer guard clean")
+        params, cfg = _seqrec_setup()
+
+        def host_cascade(seqs):
+            phi = seqrec_lib.sequence_embedding(params, seqs, cfg)
+            return retrieval_head.top_items_pruned(params["item_emb"],
+                                                   phi, 5)
+
+        return BuiltEntry(host_cascade, (_seq_sds(cfg),))
+
+    neg = Entrypoint("host_cascade_negative_control",
+                     "PR 2 host two-pass cascade (np.nonzero compaction)",
+                     build_host_cascade)
+    neg_report = run_analysis({neg.name: neg}, default_passes(),
+                              lambda _n: build_host_cascade())
+    failing = neg_report.failing_passes(neg.name)
+    if failing != ["dispatch-count"]:
+        print(neg_report.render())
+        print(f"FAIL: host cascade should fail exactly ['dispatch-count'], "
+              f"failed {failing} — the framework cannot discriminate")
+        return 1
+    print("negative control: host two-pass cascade fails dispatch-count "
+          "(and only dispatch-count) as expected")
     print("OK: pqtopk_pruned serve path is a single in-graph dispatch "
           "(calibrated ladder enabled; per-query grouped route included)")
     return 0

@@ -14,6 +14,16 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Lint gate (crash-level rules only — see ruff.toml).  Best-effort like
+# the hypothesis install: offline containers without ruff warn and skip;
+# the repro.analysis ast-lint pass below covers the codebase-specific
+# hazards regardless.
+if python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check .
+else
+    echo "WARN: ruff not installed; skipping lint gate (pip install -r requirements-dev.txt)"
+fi
+
 # Bytecode must never be committed: .gitignore covers __pycache__/*.pyc,
 # and this guard fails CI if a tracked .pyc ever reappears (it happened
 # once — a PR 4 follow-up commit shipped tests/__pycache__).
@@ -28,7 +38,7 @@ fi
 # test file stopped importing or someone deleted coverage).  pytest also
 # exits non-zero on collection errors, so a broken import fails CI rather
 # than silently shrinking the suite.
-TIER1_BASELINE=279
+TIER1_BASELINE=308
 collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
             | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
 if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
@@ -42,22 +52,31 @@ echo "collected ${collected} tests (baseline ${TIER1_BASELINE})"
 python -m pytest -x -q -m "not slow and not sharded and not hypothesis" "$@"
 python -m pytest -x -q -m "slow or sharded or hypothesis" "$@"
 
-# The pruned serve route must be ONE device dispatch per query batch
-# (single-jaxpr trace + compiled-call counting + a negative control on the
-# legacy host cascade) — now with the calibrated slot-budget ladder
-# enabled, so the nested lax.cond rung chain is part of the proof.
+# Serve-path static analysis (docs/ANALYSIS.md): every registered
+# entrypoint (flat fused/pruned, grouped per-query, sharded, lm decode,
+# compacted-tile kernels, engine AOT routes) under every pass
+# (dispatch-count, host-transfer, recompile-hazard, kernel-contract,
+# ast-lint).  Exits non-zero on ANY finding; the JSON report is a CI
+# artifact, not tracked.
+python -m repro.analysis --json ANALYSIS_REPORT.json
+
+# The pruned serve route must be ONE device dispatch per query batch —
+# since ISSUE 6 a thin wrapper over repro.analysis adding the *runtime*
+# dispatch counter (trace-level checks alone can't see host replay) and
+# the host-cascade negative control that proves the framework
+# discriminates.
 python scripts/check_single_dispatch.py
 
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
 # single-dispatch pruned cascade, bound-backend comparison sweep, the
 # per-query mixed-batch sweep, figure2) end to end so kernel-path
 # breakage surfaces in CI, not just in unit tests, and refreshes the
-# machine-readable BENCH_pr5.json (grouped-vs-batch-any slot·query pairs
-# at N=2^20 / B in {8, 64, 256} with exactness counters, plus the PR 4
-# sweeps).  table3/roofline stay out (slow dataset builds /
-# artifact-dependent).
+# machine-readable BENCH_pr6.json (now stamped with an environment
+# fingerprint — python/jax/jaxlib, backend, thread pinning — so
+# bench_compare refuses cross-environment joins).  table3/roofline stay
+# out (slow dataset builds / artifact-dependent).
 python -m benchmarks.run --skip table3 --skip roofline --repeats 1 \
-    --json BENCH_pr5.json > /dev/null
+    --json BENCH_pr6.json > /dev/null
 
 # Cross-PR perf trajectory: join all BENCH_pr*.json and report the
 # items_per_s trend per benchmark (regressions are highlighted in the

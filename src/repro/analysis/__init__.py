@@ -1,0 +1,52 @@
+"""Serve-path static analysis: jaxpr-level passes over registered
+entrypoints (docs/ANALYSIS.md).
+
+Quick use::
+
+    python -m repro.analysis                 # all passes, all entrypoints
+    python -m repro.analysis --list          # what would run
+    python -m repro.analysis -e flat_pruned --json report.json
+
+Programmatic::
+
+    from repro.analysis import run_default
+    report = run_default(entrypoints=["flat_pruned"])
+    assert report.ok, report.render()
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.analysis.core import (AnalysisPass, EntryContext, Finding,
+                                 PassResult, Report, SEV_ERROR, SEV_INFO,
+                                 STATUS_FAIL, STATUS_PASS, STATUS_SKIP,
+                                 count_primitives, find_eqns, iter_eqns,
+                                 run_analysis)
+
+__all__ = ["AnalysisPass", "EntryContext", "Finding", "PassResult",
+           "Report", "SEV_ERROR", "SEV_INFO", "STATUS_FAIL", "STATUS_PASS",
+           "STATUS_SKIP", "count_primitives", "find_eqns", "iter_eqns",
+           "run_analysis", "run_default"]
+
+
+def run_default(entrypoints: Optional[Sequence[str]] = None,
+                passes: Optional[Sequence[str]] = None) -> Report:
+    """Run the default pass list over the registry (optionally filtered by
+    entrypoint / pass name)."""
+    from repro.analysis import entrypoints as ep
+    from repro.analysis.passes import default_passes
+
+    names = list(entrypoints) if entrypoints else list(ep.REGISTRY)
+    unknown = [n for n in names if n not in ep.REGISTRY]
+    if unknown:
+        raise KeyError(f"unknown entrypoint(s) {unknown}; registered: "
+                       f"{sorted(ep.REGISTRY)}")
+    plist = default_passes()
+    if passes:
+        unknown_p = [p for p in passes
+                     if p not in {x.name for x in plist}]
+        if unknown_p:
+            raise KeyError(f"unknown pass(es) {unknown_p}; available: "
+                           f"{sorted(x.name for x in plist)}")
+        plist = [x for x in plist if x.name in set(passes)]
+    return run_analysis({n: ep.REGISTRY[n] for n in names}, plist, ep.build)

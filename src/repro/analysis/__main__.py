@@ -1,0 +1,53 @@
+"""CLI for the serve-path static analysis: ``python -m repro.analysis``.
+
+Runs the default passes over the entrypoint registry, prints a pass/fail
+table per (entrypoint, pass), optionally writes the JSON report, and
+exits non-zero on any error finding — ci.sh gates on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level static analysis of the serving routes")
+    ap.add_argument("-e", "--entrypoint", action="append", default=None,
+                    help="restrict to this entrypoint (repeatable)")
+    ap.add_argument("-p", "--pass", dest="passes", action="append",
+                    default=None,
+                    help="restrict to this pass (repeatable)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full JSON report here")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entrypoints and passes, then exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import run_default
+    from repro.analysis import entrypoints as ep
+    from repro.analysis.passes import default_passes
+
+    if args.list:
+        print("entrypoints:")
+        for name, entry in ep.REGISTRY.items():
+            print(f"  {name:22s} [{','.join(entry.tags)}] "
+                  f"{entry.description}")
+        print("passes:")
+        for p in default_passes():
+            print(f"  {p.name:22s} {p.description}")
+        return 0
+
+    report = run_default(entrypoints=args.entrypoint, passes=args.passes)
+    print(report.render())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.to_json(), f, indent=2)
+        print(f"json report -> {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

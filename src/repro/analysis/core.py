@@ -1,0 +1,315 @@
+"""Core of the serve-path static-analysis framework (docs/ANALYSIS.md).
+
+The repo's efficiency claims rest on invariants that are *structural*
+properties of the traced computation — one fused dispatch per batch, no
+host callbacks on the serve path, bounded trace-static argument domains,
+Pallas kernel contracts (VMEM budgets, tiling, the ``-1`` sentinel
+index-map clamp).  This module provides the machinery to check them
+statically, on every registered entrypoint, in CI:
+
+* :class:`Finding` / :class:`PassResult` / :class:`Report` — machine-
+  readable results (the CLI renders a table and a JSON document).
+* a jaxpr walker (:func:`iter_eqns`, :func:`find_eqns`,
+  :func:`count_primitives`) that descends into every nested jaxpr —
+  ``pjit`` bodies, ``cond`` branches, ``scan``/``while`` bodies, Pallas
+  kernel jaxprs — so a pass sees the whole computation, not just the top
+  level.
+* :class:`EntryContext` — traces an entrypoint to its closed jaxpr once
+  and caches the result (or the trace failure) for every pass.
+* :class:`AnalysisPass` — the pass protocol; :func:`run_analysis` drives
+  a pass list over an entrypoint dict and assembles the report.
+
+Passes live in :mod:`repro.analysis.passes`; the entrypoint registry in
+:mod:`repro.analysis.entrypoints`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, \
+    Optional, Sequence, Tuple
+
+SEV_ERROR = "error"   # CI-gating: the invariant is violated
+SEV_INFO = "info"     # observations that never gate
+
+STATUS_PASS = "pass"
+STATUS_FAIL = "fail"
+STATUS_SKIP = "skip"  # prerequisite missing (e.g. no jaxpr to walk)
+
+
+@dataclass
+class Finding:
+    """One violation (or observation) from one pass on one entrypoint."""
+
+    pass_name: str
+    entrypoint: str
+    severity: str              # SEV_ERROR | SEV_INFO
+    code: str                  # stable machine-readable class, e.g.
+                               # "host-callback", "sentinel-clamp"
+    message: str               # human-readable one-liner
+    details: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"pass": self.pass_name, "entrypoint": self.entrypoint,
+                "severity": self.severity, "code": self.code,
+                "message": self.message, "details": _jsonable(self.details)}
+
+
+def _jsonable(obj: Any) -> Any:
+    """Best-effort conversion of finding details to JSON-safe values."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "item"):          # numpy / jax scalars
+        try:
+            return obj.item()
+        except Exception:
+            pass
+    return repr(obj)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def subjaxprs(eqn) -> Iterator[Any]:
+    """Yield every jaxpr nested in one equation's params (``pjit`` bodies,
+    ``cond`` branches, ``scan``/``while`` bodies, the Pallas kernel jaxpr,
+    custom-derivative subcomputations, ...).  Works on raw ``Jaxpr`` and
+    ``ClosedJaxpr`` params alike — callers get the raw jaxpr."""
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield inner           # ClosedJaxpr -> its raw jaxpr
+            elif hasattr(v, "eqns"):
+                yield v               # raw Jaxpr param (pallas_call)
+
+
+def iter_eqns(jaxpr, path: Tuple[str, ...] = ()) -> Iterator[Tuple[Any, Tuple[str, ...]]]:
+    """Depth-first iteration over every equation of ``jaxpr`` and all its
+    nested jaxprs.  Yields ``(eqn, path)`` where ``path`` is the tuple of
+    enclosing primitive names (outermost first) — enough to tell a
+    top-level callback from one buried in a ``cond`` branch."""
+    raw = getattr(jaxpr, "jaxpr", jaxpr)   # accept ClosedJaxpr too
+    for eqn in raw.eqns:
+        yield eqn, path
+        for sub in subjaxprs(eqn):
+            yield from iter_eqns(sub, path + (eqn.primitive.name,))
+
+
+def find_eqns(jaxpr, names: Iterable[str]) -> List[Tuple[Any, Tuple[str, ...]]]:
+    """All ``(eqn, path)`` whose primitive name is in ``names``."""
+    names = frozenset(names)
+    return [(eqn, path) for eqn, path in iter_eqns(jaxpr)
+            if eqn.primitive.name in names]
+
+
+def count_primitives(jaxpr) -> Dict[str, int]:
+    """Primitive-name histogram over the whole (nested) jaxpr."""
+    counts: Dict[str, int] = {}
+    for eqn, _ in iter_eqns(jaxpr):
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# entry context: one trace, shared by every pass
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TraceFailure:
+    exc_type: str
+    message: str
+
+
+class EntryContext:
+    """Caches the entrypoint's closed jaxpr (or its trace failure).
+
+    Tracing is the expensive, shared prerequisite of most passes; doing it
+    once per entrypoint also guarantees every pass reasons about the SAME
+    computation.  A trace failure is itself a first-class result — the
+    dispatch-count pass turns it into a finding (host orchestration on the
+    serve path cannot trace), while jaxpr-dependent passes report
+    ``skip`` so a single root cause never multi-counts across passes.
+    """
+
+    def __init__(self, name: str, built: "Any"):
+        self.name = name
+        self.built = built
+        self._jaxpr: Optional[Any] = None
+        self.trace_failure: Optional[TraceFailure] = None
+        self._traced = False
+
+    def trace(self) -> Optional[Any]:
+        """The entrypoint's ClosedJaxpr, or None (see ``trace_failure``)."""
+        if not self._traced:
+            self._traced = True
+            import jax
+            try:
+                self._jaxpr = jax.make_jaxpr(self.built.fn)(*self.built.args)
+            except Exception as e:  # noqa: BLE001 — the failure IS the result
+                self.trace_failure = TraceFailure(type(e).__name__, str(e))
+        return self._jaxpr
+
+
+# ---------------------------------------------------------------------------
+# pass protocol + runner
+# ---------------------------------------------------------------------------
+
+class AnalysisPass:
+    """Base class for analysis passes.
+
+    ``scope`` is ``"entrypoint"`` (run once per registered entrypoint) or
+    ``"global"`` (run once per analysis, e.g. the AST lint over source
+    files).  ``requires_trace`` makes the runner skip the pass — with
+    ``STATUS_SKIP``, not a failure — when the entrypoint did not trace;
+    set it False for passes that handle trace failures themselves.
+    """
+
+    name: str = "abstract"
+    description: str = ""
+    scope: str = "entrypoint"
+    requires_trace: bool = True
+
+    def run(self, entrypoint: str, built: Any, ctx: Optional[EntryContext]
+            ) -> Tuple[List[Finding], Dict[str, Any]]:
+        raise NotImplementedError
+
+
+@dataclass
+class PassResult:
+    entrypoint: str
+    pass_name: str
+    status: str
+    findings: List[Finding] = field(default_factory=list)
+    info: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == SEV_ERROR]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"entrypoint": self.entrypoint, "pass": self.pass_name,
+                "status": self.status,
+                "findings": [f.to_json() for f in self.findings],
+                "info": _jsonable(self.info)}
+
+
+@dataclass
+class Report:
+    results: List[PassResult]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for r in self.results for f in r.errors]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def result(self, entrypoint: str, pass_name: str) -> Optional[PassResult]:
+        for r in self.results:
+            if r.entrypoint == entrypoint and r.pass_name == pass_name:
+                return r
+        return None
+
+    def failing_passes(self, entrypoint: str) -> List[str]:
+        """Names of the passes that FAILED for one entrypoint (skips are
+        not failures) — what the adversarial negative-control tests assert
+        on ("fails its pass, and only its pass")."""
+        return [r.pass_name for r in self.results
+                if r.entrypoint == entrypoint and r.status == STATUS_FAIL]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"ok": self.ok,
+                "n_errors": len(self.errors),
+                "meta": _jsonable(self.meta),
+                "results": [r.to_json() for r in self.results]}
+
+    def render(self) -> str:
+        """Human-readable fixed-width table + finding detail lines."""
+        rows = [("entrypoint", "pass", "status", "errors", "info")]
+        for r in self.results:
+            info = ",".join(f"{k}={v}" for k, v in sorted(r.info.items())
+                            if isinstance(v, (int, float, str, bool)))
+            rows.append((r.entrypoint, r.pass_name, r.status.upper(),
+                         str(len(r.errors)), info[:60]))
+        widths = [max(len(row[i]) for row in rows) for i in range(4)]
+        lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)) + "  "
+                 + row[4] for row in rows]
+        for f in self.errors:
+            lines.append(f"FINDING [{f.code}] {f.entrypoint}/{f.pass_name}: "
+                         f"{f.message}")
+        lines.append(f"{'OK' if self.ok else 'FAIL'}: "
+                     f"{len(self.results)} (entrypoint, pass) cells, "
+                     f"{len(self.errors)} error finding(s)")
+        return "\n".join(lines)
+
+
+def run_analysis(entrypoints: Mapping[str, Any],
+                 passes: Sequence[AnalysisPass],
+                 build: Callable[[str], Any]) -> Report:
+    """Run ``passes`` over ``entrypoints`` (name -> Entrypoint) and return
+    the full report.  ``build(name)`` materialises an entrypoint into a
+    BuiltEntry (see :mod:`repro.analysis.entrypoints`); build failures are
+    reported as failures of every pass on that entrypoint rather than
+    aborting the whole analysis.
+    """
+    import jax
+
+    results: List[PassResult] = []
+    entry_passes = [p for p in passes if p.scope == "entrypoint"]
+    global_passes = [p for p in passes if p.scope == "global"]
+
+    for name in entrypoints:
+        try:
+            built = build(name)
+        except Exception as e:  # noqa: BLE001 — report, don't abort
+            for p in entry_passes:
+                results.append(PassResult(name, p.name, STATUS_FAIL, [
+                    Finding(p.name, name, SEV_ERROR, "build-failure",
+                            f"entrypoint failed to build: "
+                            f"{type(e).__name__}: {e}")]))
+            continue
+        ctx = EntryContext(name, built)
+        for p in entry_passes:
+            if p.requires_trace and ctx.trace() is None:
+                results.append(PassResult(
+                    name, p.name, STATUS_SKIP,
+                    info={"reason": "entrypoint did not trace",
+                          "trace_error": ctx.trace_failure.exc_type
+                          if ctx.trace_failure else None}))
+                continue
+            try:
+                findings, info = p.run(name, built, ctx)
+            except Exception as e:  # noqa: BLE001 — a crashing pass is a fail
+                findings, info = [Finding(
+                    p.name, name, SEV_ERROR, "pass-crash",
+                    f"pass raised {type(e).__name__}: {e}")], {}
+            status = (STATUS_FAIL
+                      if any(f.severity == SEV_ERROR for f in findings)
+                      else STATUS_PASS)
+            results.append(PassResult(name, p.name, status, findings, info))
+
+    for p in global_passes:
+        try:
+            findings, info = p.run("<sources>", None, None)
+        except Exception as e:  # noqa: BLE001
+            findings, info = [Finding(p.name, "<sources>", SEV_ERROR,
+                                      "pass-crash",
+                                      f"pass raised {type(e).__name__}: {e}"
+                                      )], {}
+        status = (STATUS_FAIL if any(f.severity == SEV_ERROR
+                                     for f in findings) else STATUS_PASS)
+        results.append(PassResult("<sources>", p.name, status, findings,
+                                  info))
+
+    return Report(results, meta={"jax": jax.__version__,
+                                 "backend": jax.default_backend(),
+                                 "n_entrypoints": len(entrypoints),
+                                 "passes": [p.name for p in passes]})

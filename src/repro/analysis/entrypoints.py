@@ -1,0 +1,420 @@
+"""Entrypoint registry for the serve-path static analysis.
+
+An :class:`Entrypoint` names one serving computation worth guarding and
+knows how to build it into a :class:`BuiltEntry`: a callable plus abstract
+(or concrete) arguments that :func:`jax.make_jaxpr` can trace, together
+with the pass-facing contracts — trace-static argument specs for the
+recompile-hazard pass, the VMEM budget and expected kernel count for the
+Pallas contract pass, and (for engine entries) a runtime dispatch counter.
+
+The registry covers every serving route the repo ships (ISSUE 6 / the
+check_single_dispatch lineage):
+
+* ``flat_fused``          — serve_topk via the fused Pallas score+top-k
+                            kernel (``pqtopk_fused``)
+* ``flat_pruned``         — the single-dispatch in-graph pruned cascade
+                            with a slot-budget ladder (nested ``lax.cond``)
+* ``grouped_perquery``    — the per-query grouped cascade (bucketing scan,
+                            argsort permutation, 2D compaction)
+* ``sharded_pruned``      — the item-sharded cascade under ``shard_map``
+* ``lm_decode_step``      — the PQ-head pruned cascade inside one LM
+                            decode step (stacked-cache scan backbone)
+* ``pruned_tiles_kernel`` — the scalar-prefetch Pallas kernel on a 1D
+                            ``-1``-padded compacted tile list (interpret
+                            mode, so the contract pass sees the real
+                            ``pallas_call`` params on CPU CI)
+* ``grouped_tiles_kernel``— same kernel with the grouped 2D (batch-tile,
+                            slot) table
+* ``engine_aot``          — a calibrated RetrievalEngine on the pruned
+                            route (AOT-compiled variants, runtime dispatch
+                            counting)
+* ``engine_aot_grouped``  — the engine on the grouped route
+
+Builds are cached (`build()`), and the heavyweight shared fixtures
+(catalogue params) are built once and reused across entries.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+# NOTE: jax and the repro model stack are imported lazily inside builders
+# so `import repro.analysis` stays cheap (and so the AST lint below can
+# hold this module to its own no-module-level-jnp-constant rule).
+
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024   # bytes; ~half a TPU core's VMEM,
+                                        # leaving headroom for scratch and
+                                        # the compiler's own buffers
+
+
+@dataclass(frozen=True)
+class StaticArgSpec:
+    """One trace-static argument feeding a jit/AOT boundary.
+
+    ``sample`` is a representative set of raw client-side values;
+    ``mapper`` is the *real* production mapping from client value to the
+    trace-static key (e.g. ``RetrievalEngine.batch_k``).  The recompile
+    pass asserts ``{mapper(v) for v in sample}`` stays within ``allowed``
+    (when given) and under ``max_variants`` — so unbounded client values
+    can never key unbounded compiles.
+    """
+
+    name: str
+    sample: Tuple[Any, ...]
+    mapper: Callable[[Any], Any]
+    max_variants: int
+    allowed: Optional[frozenset] = None
+    note: str = ""
+
+
+@dataclass
+class BuiltEntry:
+    """A materialised entrypoint, ready for the passes."""
+
+    fn: Callable                      # traced by jax.make_jaxpr(fn)(*args)
+    args: Tuple[Any, ...]             # ShapeDtypeStructs or arrays
+    static_specs: Tuple[StaticArgSpec, ...] = ()
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
+    expect_pallas: int = 0            # min pallas_call count in the trace
+    dispatch_counter: Optional[Callable[[], int]] = None
+    notes: str = ""
+
+
+@dataclass(frozen=True)
+class Entrypoint:
+    name: str
+    description: str
+    build: Callable[[], BuiltEntry]
+    tags: Tuple[str, ...] = ()
+
+
+REGISTRY: Dict[str, Entrypoint] = {}
+
+
+def register(name: str, description: str, tags: Tuple[str, ...] = ()):
+    def deco(fn):
+        REGISTRY[name] = Entrypoint(name, description, fn, tags)
+        return fn
+    return deco
+
+
+@functools.lru_cache(maxsize=None)
+def build(name: str) -> BuiltEntry:
+    return REGISTRY[name].build()
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures
+# ---------------------------------------------------------------------------
+
+SEQREC_N_ITEMS = 16384      # several pruning tiles at DEFAULT_PRUNE_TILE
+STATIC_LADDER = (2, 4)      # multi-rung (normalised ladder appends the
+                            # exhaustive rung) without calibration cost
+
+
+@functools.lru_cache(maxsize=None)
+def _seqrec_setup():
+    """Reduced sasrec-recjpq scaled to a multi-tile catalogue with
+    position-clustered codes — the same fixture the dispatch guard script
+    has always used: clustering gives tiles genuinely distinct bounds, so
+    pruning (and ladder calibration, for the engine entries) is real."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from dataclasses import replace
+    from repro.configs import get_reduced
+    from repro.models import seqrec as seqrec_lib
+
+    cfg = replace(get_reduced("sasrec-recjpq").model, n_items=SEQREC_N_ITEMS)
+    rng0 = np.random.default_rng(7)
+    centers = (np.arange(cfg.n_items + 1) / (cfg.n_items + 1)
+               * cfg.pq.b).astype(np.int64)
+    codes = jnp.asarray(
+        (centers[:, None] + rng0.integers(-1, 2, (cfg.n_items + 1,
+                                                  cfg.pq.m))) % cfg.pq.b,
+        jnp.int32)
+    params = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg, codes=codes)
+    return params, cfg
+
+
+def _seq_sds(cfg, batch: int = 4):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct((batch, cfg.max_seq_len), jnp.int32)
+
+
+def _serve_entry(method: str, *, grouped: bool = False, mesh=None,
+                 ladder=None, return_rung: bool = False,
+                 expect_pallas: int = 0, k: int = 5) -> BuiltEntry:
+    from dataclasses import replace
+    from repro.models import seqrec as seqrec_lib
+
+    params, cfg = _seqrec_setup()
+    if grouped:
+        cfg = replace(cfg, pq=replace(cfg.pq, query_grouping=True,
+                                      n_groups=4))
+
+    def fn(seqs):
+        return seqrec_lib.serve_topk(params, seqs, cfg, k=k, method=method,
+                                     sharded_mesh=mesh, ladder=ladder,
+                                     return_rung=return_rung)
+
+    return BuiltEntry(fn, (_seq_sds(cfg),), expect_pallas=expect_pallas,
+                      notes=f"serve_topk method={method!r} "
+                            f"n_items={cfg.n_items} grouped={grouped} "
+                            f"sharded={mesh is not None}")
+
+
+# ---------------------------------------------------------------------------
+# serve_topk routes
+# ---------------------------------------------------------------------------
+
+@register("flat_fused",
+          "serve_topk through the fused Pallas score+top-k kernel "
+          "(method='pqtopk_fused') — backbone, subid scores and the "
+          "batch-tiled kernel grid in one trace",
+          tags=("serve", "kernel"))
+def _build_flat_fused() -> BuiltEntry:
+    return _serve_entry("pqtopk_fused", expect_pallas=1)
+
+
+@register("flat_pruned",
+          "the single-dispatch in-graph pruned cascade with a multi-rung "
+          "slot-budget ladder (nested lax.cond chain) and rung telemetry",
+          tags=("serve", "pruned"))
+def _build_flat_pruned() -> BuiltEntry:
+    return _serve_entry("pqtopk_pruned", ladder=STATIC_LADDER,
+                        return_rung=True)
+
+
+@register("grouped_perquery",
+          "the per-query grouped cascade: theta per query, overlap-"
+          "bucketing scan, stable-argsort permutation and the 2D "
+          "(group, slot) compaction, all in one trace",
+          tags=("serve", "pruned", "grouped"))
+def _build_grouped_perquery() -> BuiltEntry:
+    return _serve_entry("pqtopk_pruned", grouped=True, ladder=STATIC_LADDER,
+                        return_rung=True)
+
+
+@register("sharded_pruned",
+          "the item-sharded pruned cascade under shard_map (shard-local "
+          "cascade + O(k x shards) merge)",
+          tags=("serve", "pruned", "sharded"))
+def _build_sharded_pruned() -> BuiltEntry:
+    import jax
+    from repro.core import retrieval_head
+
+    params, cfg = _seqrec_setup()
+    mesh = jax.make_mesh((1,), ("model",))
+    params = {**params, "item_emb":
+              retrieval_head.ensure_sharded_pruned_state(
+                  params["item_emb"], mesh, k_hint=5)}
+    from repro.models import seqrec as seqrec_lib
+
+    def fn(seqs):
+        return seqrec_lib.serve_topk(params, seqs, cfg, k=5,
+                                     method="pqtopk_pruned",
+                                     sharded_mesh=mesh)
+
+    return BuiltEntry(fn, (_seq_sds(cfg),),
+                      notes="sharded serve_topk, 1-device 'model' mesh")
+
+
+@register("lm_decode_step",
+          "one LM decode step (stacked-cache layer scan) with the pruned "
+          "PQ vocabulary head — the cascade inside the decode loop",
+          tags=("decode", "pruned"))
+def _build_lm_decode() -> BuiltEntry:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_reduced
+    from repro.models import transformer as T
+
+    cfg = get_reduced("qwen2.5-14b").model
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    caches = T.init_caches(cfg, 2, 16, abstract=True)
+    tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+
+    def fn(token, c):
+        return T.lm_decode_step(params, token, jnp.int32(0), c, cfg, k=8,
+                                head_method="pqtopk_pruned")
+
+    return BuiltEntry(fn, (tok, caches),
+                      notes=f"qwen2.5-14b reduced, vocab={cfg.vocab}, "
+                            f"head_method='pqtopk_pruned'")
+
+
+# ---------------------------------------------------------------------------
+# direct Pallas kernel routes (interpret mode: the kernel grid, block
+# specs and scalar-prefetch index maps are in the trace on CPU CI too)
+# ---------------------------------------------------------------------------
+
+def _kernel_fixture(n: int = 1024, m: int = 8, b: int = 16, bq: int = 16):
+    import jax
+    import jax.numpy as jnp
+    codes = jax.ShapeDtypeStruct((n, m), jnp.int8)
+    s = jax.ShapeDtypeStruct((bq, m, b), jnp.float32)
+    return codes, s
+
+
+@register("pruned_tiles_kernel",
+          "pq_topk_tiles forced onto the scalar-prefetch Pallas kernel "
+          "(interpret mode) with a 1D -1-padded compacted tile list — "
+          "the sentinel index-map clamp contract surface",
+          tags=("kernel",))
+def _build_pruned_tiles_kernel() -> BuiltEntry:
+    import jax.numpy as jnp
+    from repro.kernels.pqtopk import ops
+
+    codes, s = _kernel_fixture()
+    tile_idx = jnp.asarray([0, -1], jnp.int32)   # one live slot + sentinel
+
+    def fn(c, sc):
+        return ops.pq_topk_tiles(c, sc, 8, tile_idx, tile=512,
+                                 use_kernel=True, interpret=True)
+
+    return BuiltEntry(fn, (codes, s), expect_pallas=1,
+                      notes="1D compacted slots, int8 codes, tile=512")
+
+
+@register("grouped_tiles_kernel",
+          "the grouped kernel grid: 2D (batch-tile, slot) table, each "
+          "kernel batch tile scoring its own -1-padded slot row",
+          tags=("kernel", "grouped"))
+def _build_grouped_tiles_kernel() -> BuiltEntry:
+    import jax.numpy as jnp
+    from repro.kernels.pqtopk import ops
+
+    codes, s = _kernel_fixture()
+    tile_idx = jnp.asarray([[0, 1], [1, -1]], jnp.int32)
+
+    def fn(c, sc):
+        return ops.pq_topk_tiles(c, sc, 8, tile_idx, tile=512,
+                                 batch_tile=8, use_kernel=True,
+                                 interpret=True)
+
+    return BuiltEntry(fn, (codes, s), expect_pallas=1,
+                      notes="2D grouped slots, batch_tile=8")
+
+
+# ---------------------------------------------------------------------------
+# engine AOT variants (runtime dispatch counting + recompile-key specs)
+# ---------------------------------------------------------------------------
+
+def _pow2_buckets(limit: int) -> frozenset:
+    out, b = set(), 1
+    while b < limit:
+        out.add(b)
+        b *= 2
+    out.add(limit)
+    return frozenset(out)
+
+
+def _count_engine_dispatches(eng, cfg, k: int, base_id: int) -> int:
+    """Warm the engine's compile cache, then wrap every memoised compiled
+    variant in a counter and serve one guarded batch: the number of
+    entries that fire is the per-batch dispatch count.  Runs under
+    ``jax.transfer_guard("disallow")`` (additionally catches implicit D2H
+    syncs on accelerator backends; on CPU D2H is zero-copy and unguarded,
+    so the trace check is the load-bearing one there)."""
+    import jax
+    import numpy as np
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(base_id)
+    for i in range(4):
+        eng.submit(Request(base_id + i,
+                           rng.integers(1, cfg.n_items + 1, 8), k=k))
+    eng.drain()                                   # warm outside the guard
+    calls = []
+    for key, f in list(eng._compiled.items()):
+        eng._compiled[key] = (
+            lambda seqs, _f=f, _key=key: (calls.append(_key), _f(seqs))[1])
+    for i in range(4):
+        eng.submit(Request(base_id + 10 + i,
+                           rng.integers(1, cfg.n_items + 1, 8), k=k))
+    with jax.transfer_guard("disallow"):
+        results = eng.run_once()
+    assert len(results) == 4, f"served {len(results)}/4"
+    return len(calls)
+
+
+def _engine_entry(*, grouped: bool, base_id: int) -> BuiltEntry:
+    from dataclasses import replace
+    from repro.serving.engine import MicroBatcher, RetrievalEngine
+
+    params, cfg = _seqrec_setup()
+    if grouped:
+        cfg = replace(cfg, pq=replace(cfg.pq, query_grouping=True,
+                                      n_groups=4))
+    k, max_batch = 5, 8
+    eng = RetrievalEngine.for_seqrec(params, cfg, k=k, max_batch=max_batch,
+                                     method="pqtopk_pruned")
+    assert eng._jit_serve, "pruned route must be a jitted serve fn"
+    # The calibrated ladder must be active: the single-dispatch guarantee
+    # has to hold WITH the nested lax.cond rung chain in the trace.
+    assert eng.ladder is not None and len(eng.ladder) >= 2, (
+        f"expected a calibrated multi-rung ladder, got {eng.ladder!r}")
+
+    import jax
+    import jax.numpy as jnp
+    sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
+
+    # Every trace-static value that keys a compiled variant, probed
+    # through the REAL production mappings (engine.batch_k / bucket):
+    specs = (
+        StaticArgSpec(
+            "batch_bucket",
+            sample=tuple(range(1, max_batch + 1)),
+            mapper=lambda n, _mb=max_batch: MicroBatcher.bucket(n, _mb),
+            allowed=_pow2_buckets(max_batch),
+            max_variants=max_batch.bit_length() + 1,
+            note="pow2 padding buckets for the request batch size"),
+        StaticArgSpec(
+            "k_bucket",
+            sample=tuple(range(1, 64)) + (200, 1000, 10 ** 9),
+            mapper=lambda kv, _e=eng: _e.batch_k([kv]),
+            allowed=_pow2_buckets(eng.max_k),
+            max_variants=eng.max_k.bit_length() + 1,
+            note="client k clamped into [1, max_k] then pow2-bucketed"),
+        StaticArgSpec(
+            "ladder_rung",
+            sample=tuple(eng.ladder),
+            mapper=lambda r: r,
+            allowed=frozenset(eng.ladder),
+            max_variants=4,
+            note="calibrated slot budgets baked into ONE serve fn (rungs "
+                 "are cond branches, never separate compiles)"),
+    )
+    if grouped:
+        specs += (StaticArgSpec(
+            "n_groups", sample=(cfg.pq.n_groups,), mapper=lambda g: g,
+            allowed=frozenset({cfg.pq.n_groups}), max_variants=1,
+            note="config-static group count"),)
+
+    return BuiltEntry(
+        fn=lambda seqs: eng._serve_fn(seqs, k),
+        args=(sds,),
+        static_specs=specs,
+        dispatch_counter=lambda: _count_engine_dispatches(eng, cfg, k,
+                                                          base_id),
+        notes=f"RetrievalEngine.for_seqrec pqtopk_pruned, calibrated "
+              f"ladder={eng.ladder}, grouped={grouped}")
+
+
+@register("engine_aot",
+          "a calibrated RetrievalEngine on the pruned route: AOT variant "
+          "keys, client-k bucketing, runtime single-dispatch counting",
+          tags=("serve", "engine", "pruned"))
+def _build_engine_aot() -> BuiltEntry:
+    return _engine_entry(grouped=False, base_id=0)
+
+
+@register("engine_aot_grouped",
+          "the engine on the grouped per-query route: same AOT/bucketing "
+          "contracts with the grouped cascade in the trace",
+          tags=("serve", "engine", "pruned", "grouped"))
+def _build_engine_aot_grouped() -> BuiltEntry:
+    return _engine_entry(grouped=True, base_id=100)

@@ -1,0 +1,15 @@
+"""The built-in analysis passes (docs/ANALYSIS.md has the catalogue)."""
+from repro.analysis.passes.dispatch import DispatchCountPass
+from repro.analysis.passes.transfer import HostTransferPass
+from repro.analysis.passes.recompile import RecompileHazardPass
+from repro.analysis.passes.pallas import PallasContractPass
+from repro.analysis.passes.astlint import AstLintPass
+
+__all__ = ["DispatchCountPass", "HostTransferPass", "RecompileHazardPass",
+           "PallasContractPass", "AstLintPass", "default_passes"]
+
+
+def default_passes():
+    """The standard pass list the CLI (and ci.sh) runs."""
+    return [DispatchCountPass(), HostTransferPass(), RecompileHazardPass(),
+            PallasContractPass(), AstLintPass()]

@@ -1,0 +1,155 @@
+"""ast-lint: source-level hazards no jaxpr can show.
+
+Two checks over the ``repro`` package sources (no imports executed —
+pure ``ast`` parsing):
+
+* **module-level ``jnp.*`` constants** — the PR 3 tracer-leak class:
+  kernel/ops modules are imported *lazily*, sometimes inside an active
+  jit trace, and a module-level ``jnp.float32(...)`` / ``jnp.asarray(...)``
+  materialised under a trace captures a tracer in module state, poisoning
+  every later call.  Module-level code must stay plain Python
+  (``float("-inf")``, not ``jnp.float32(-jnp.inf)``).  Import-time
+  execution includes class bodies and module-level ``if``/``try`` blocks,
+  so those are scanned too; function bodies run at call time and are
+  exempt.
+* **mutable default arguments** — ``def f(x, acc=[])``: the default is
+  evaluated once at import and shared across calls; with jax pytrees in
+  play this aliases state across traces.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.core import (AnalysisPass, Finding, SEV_ERROR)
+
+_FUNCTION_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _jnp_aliases(tree: ast.Module) -> set:
+    """Names bound to jax.numpy in this module ('jnp' by convention)."""
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.numpy":
+                    aliases.add(a.asname or "jax")   # bare: used as
+                    #                                  jax.numpy.<attr>
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "numpy":
+                        aliases.add(a.asname or "numpy")
+    return aliases
+
+
+def _attr_root(func: ast.expr) -> Optional[str]:
+    """Root name of an attribute chain: jnp.float32 -> 'jnp';
+    jax.numpy.asarray -> 'jax'."""
+    while isinstance(func, ast.Attribute):
+        func = func.value
+    return func.id if isinstance(func, ast.Name) else None
+
+
+def _import_time_stmts(body) -> Iterator[ast.stmt]:
+    """Statements executed at import: module/class bodies and the bodies
+    of module-level if/try/with/for — but never function bodies.  Only
+    top-level statements are yielded; ``_calls_outside_functions`` walks
+    their compound bodies (class/if/try/...) itself, stopping at
+    function boundaries, so recursing here would double-count."""
+    for stmt in body:
+        if isinstance(stmt, _FUNCTION_NODES):
+            continue
+        yield stmt
+
+
+def _calls_outside_functions(stmt: ast.stmt) -> Iterator[ast.Call]:
+    """Call nodes in a statement, not descending into nested functions
+    (their bodies execute at call time, not import time)."""
+    stack = [stmt]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, _FUNCTION_NODES):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class AstLintPass(AnalysisPass):
+    name = "ast-lint"
+    description = ("no module-level jnp.* constants (lazy-import tracer "
+                   "leak) and no mutable default args in repro sources")
+    scope = "global"
+    requires_trace = False
+
+    def __init__(self, roots: Optional[List[Path]] = None):
+        if roots is None:
+            import repro
+            # repro may be a namespace package (__file__ is None)
+            roots = [Path(next(iter(repro.__path__)))]
+        self.roots = [Path(r) for r in roots]
+
+    def lint_source(self, src: str, filename: str) -> List[Finding]:
+        findings: List[Finding] = []
+        tree = ast.parse(src, filename=filename)
+        aliases = _jnp_aliases(tree)
+
+        if aliases:
+            for stmt in _import_time_stmts(tree.body):
+                for call in _calls_outside_functions(stmt):
+                    root = _attr_root(call.func)
+                    if root not in aliases:
+                        continue
+                    # bare `import jax`: only jax.numpy.* chains count
+                    if root == "jax" and not ast.unparse(
+                            call.func).startswith("jax.numpy."):
+                        continue
+                    findings.append(Finding(
+                        self.name, "<sources>", SEV_ERROR, "module-jnp-const",
+                        f"{filename}:{call.lineno}: module-level "
+                        f"'{ast.unparse(call.func)}(...)' — materialised at "
+                        f"import; lazy import under an active trace leaks a "
+                        f"tracer into module state (use a plain Python "
+                        f"value)",
+                        details={"file": filename, "line": call.lineno,
+                                 "call": ast.unparse(call.func)}))
+
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            defaults = list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(d, ast.Call)
+                    and isinstance(d.func, ast.Name)
+                    and d.func.id in ("list", "dict", "set"))
+                if mutable:
+                    findings.append(Finding(
+                        self.name, "<sources>", SEV_ERROR, "mutable-default",
+                        f"{filename}:{d.lineno}: mutable default argument "
+                        f"in '{node.name}' — evaluated once at import and "
+                        f"shared across calls",
+                        details={"file": filename, "line": d.lineno,
+                                 "function": node.name}))
+        return findings
+
+    def run(self, entrypoint: str, built: Any, ctx: Any
+            ) -> Tuple[List[Finding], Dict[str, Any]]:
+        findings: List[Finding] = []
+        n_files = 0
+        for root in self.roots:
+            for path in sorted(root.rglob("*.py")):
+                n_files += 1
+                rel = str(path)
+                try:
+                    findings.extend(self.lint_source(
+                        path.read_text(), rel))
+                except SyntaxError as e:
+                    findings.append(Finding(
+                        self.name, "<sources>", SEV_ERROR, "syntax-error",
+                        f"{rel}: {e}", details={"file": rel}))
+        return findings, {"n_files": n_files,
+                          "roots": [str(r) for r in self.roots]}

@@ -1,0 +1,66 @@
+"""dispatch-count: prove each serve entrypoint is ONE compiled dispatch.
+
+The paper's core efficiency claim (PAPER.md §3) is that PQTopK removes
+RecJPQ's per-item host accumulators so the whole serve path becomes a
+single fused device computation.  Statically, that is exactly
+"the entrypoint traces into one closed jaxpr": any host orchestration —
+the PR 2 ``np.nonzero`` compaction, a Python loop over tiles, a
+``float(x)`` sync — blows up tracing with a concretization error, because
+the value it needs does not exist until the device runs.  The nested
+``lax.cond`` ladder, the grouped route's bucketing scan / argsort /
+2D compaction, and ``shard_map`` bodies all live *inside* that one jaxpr,
+so they are covered by construction.
+
+For engine entries the entrypoint additionally supplies a runtime
+``dispatch_counter`` (wrap every memoised AOT variant in a counter, serve
+one guarded batch) — the dynamic complement proving the engine fires
+exactly one compiled call per batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.core import (AnalysisPass, EntryContext, Finding,
+                                 SEV_ERROR, count_primitives)
+
+
+class DispatchCountPass(AnalysisPass):
+    name = "dispatch-count"
+    description = ("entrypoint traces into a single closed jaxpr (one "
+                   "compiled dispatch); engine entries also count runtime "
+                   "dispatches per served batch")
+    scope = "entrypoint"
+    requires_trace = False   # a trace failure IS this pass's finding
+
+    def run(self, entrypoint: str, built: Any, ctx: Optional[EntryContext]
+            ) -> Tuple[List[Finding], Dict[str, Any]]:
+        findings: List[Finding] = []
+        info: Dict[str, Any] = {}
+        jaxpr = ctx.trace()
+        if jaxpr is None:
+            tf = ctx.trace_failure
+            findings.append(Finding(
+                self.name, entrypoint, SEV_ERROR, "trace-failure",
+                f"entrypoint does not trace into one jaxpr "
+                f"({tf.exc_type}): host orchestration on the serve path",
+                details={"exc_type": tf.exc_type,
+                         "message": tf.message[:500]}))
+            return findings, info
+
+        prims = count_primitives(jaxpr)
+        info["n_eqns_top"] = len(jaxpr.jaxpr.eqns)
+        info["n_eqns_total"] = sum(prims.values())
+        info["cond_count"] = prims.get("cond", 0)
+        info["scan_count"] = prims.get("scan", 0)
+        info["pallas_calls"] = prims.get("pallas_call", 0)
+
+        if built.dispatch_counter is not None:
+            n = built.dispatch_counter()
+            info["runtime_dispatches"] = n
+            if n != 1:
+                findings.append(Finding(
+                    self.name, entrypoint, SEV_ERROR, "multi-dispatch",
+                    f"engine issued {n} compiled dispatches per query "
+                    f"batch (expected exactly 1)",
+                    details={"dispatches": n}))
+        return findings, info

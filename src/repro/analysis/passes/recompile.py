@@ -1,0 +1,72 @@
+"""recompile-hazard: every trace-static argument is drawn from a bounded
+bucket set.
+
+Each distinct trace-static value feeding a jit/AOT boundary keys a fresh
+XLA compile — seconds of latency and a cache entry that lives forever.
+The serving design bounds every such domain on purpose: request batch
+sizes and client ks go through power-of-two padding buckets
+(``MicroBatcher.bucket`` / ``RetrievalEngine.batch_k``), ladder rungs are
+``lax.cond`` branches of ONE computation (never separate compiles), and
+``n_groups`` is config-static.  An unbucketed client value — serving raw
+``Request.k`` straight into ``jit(static_argnums=...)`` — would let
+clients drive a recompile storm.
+
+Entrypoints declare their trace-static surfaces as
+:class:`~repro.analysis.entrypoints.StaticArgSpec`: a representative raw
+sample, the *production* mapping onto the trace-static key, the allowed
+key set, and a variant ceiling.  The pass pushes the sample through the
+mapping and verifies the image stays inside ``allowed`` and under
+``max_variants``.  Probing the real mapping (not a re-implementation)
+means a regression in e.g. ``batch_k`` fails here immediately.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.core import (AnalysisPass, EntryContext, Finding,
+                                 SEV_ERROR)
+
+
+class RecompileHazardPass(AnalysisPass):
+    name = "recompile-hazard"
+    description = ("trace-static args feeding jit/AOT boundaries map into "
+                   "bounded bucket sets (pow2 batch/k buckets, ladder "
+                   "rungs, n_groups)")
+    scope = "entrypoint"
+    requires_trace = False   # operates on declared specs, not the jaxpr
+
+    def run(self, entrypoint: str, built: Any, ctx: Optional[EntryContext]
+            ) -> Tuple[List[Finding], Dict[str, Any]]:
+        findings: List[Finding] = []
+        info: Dict[str, Any] = {"n_specs": len(built.static_specs)}
+        if not built.static_specs:
+            info["note"] = ("no client-facing trace-static arguments "
+                            "declared (fixed-shape trace entrypoint)")
+            return findings, info
+
+        for spec in built.static_specs:
+            image = {spec.mapper(v) for v in spec.sample}
+            info[f"{spec.name}_variants"] = len(image)
+            if len(image) > spec.max_variants:
+                findings.append(Finding(
+                    self.name, entrypoint, SEV_ERROR, "unbounded-static-arg",
+                    f"static arg '{spec.name}': {len(spec.sample)} client "
+                    f"values map to {len(image)} trace-static variants "
+                    f"(ceiling {spec.max_variants}) — unbounded client "
+                    f"values can key unbounded compiles",
+                    details={"spec": spec.name,
+                             "n_sample": len(spec.sample),
+                             "n_variants": len(image),
+                             "max_variants": spec.max_variants,
+                             "variants": sorted(image)[:32]}))
+            if spec.allowed is not None:
+                stray = image - set(spec.allowed)
+                if stray:
+                    findings.append(Finding(
+                        self.name, entrypoint, SEV_ERROR, "out-of-bucket",
+                        f"static arg '{spec.name}': values {sorted(stray)[:8]} "
+                        f"escape the allowed bucket set",
+                        details={"spec": spec.name,
+                                 "stray": sorted(stray)[:32],
+                                 "allowed": sorted(spec.allowed)[:32]}))
+        return findings, info

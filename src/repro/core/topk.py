@@ -12,7 +12,10 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-NEG_INF = jnp.float32(-jnp.inf)
+# A plain Python float, NOT a jnp scalar: modules can be imported lazily
+# inside an active jit trace, and materialising a module-level jnp
+# constant under a trace leaks a tracer (enforced by the ast-lint pass).
+NEG_INF = float("-inf")
 
 
 def topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:

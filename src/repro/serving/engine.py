@@ -256,6 +256,19 @@ class RetrievalEngine:
     def submit(self, req: Request):
         self.batcher.submit(req)
 
+    def batch_k(self, ks: Sequence[int]) -> int:
+        """The trace-static k this engine compiles for a batch whose client
+        ks are ``ks``: each clamped into [1, max_k] (an unvalidated
+        oversized k would abort the whole batch inside serve_fn), floored
+        at the engine's own k, then bucketed to a power of two so distinct
+        client values cannot drive unbounded jit recompiles — same policy
+        as the batch-size padding buckets.  Factored out of
+        :meth:`run_once` so the recompile-hazard analysis pass
+        (``repro.analysis.passes.recompile``) probes the real mapping that
+        keys compiled variants, not a re-implementation of it."""
+        kk = max(max(min(int(k), self.max_k) for k in ks), self.k, 1)
+        return MicroBatcher.bucket(kk, self.max_k)
+
     def _variant(self, bucket: int, kk: int) -> Callable:
         """Memoised serve variant for one (batch_bucket, k_bucket, method).
 
@@ -298,13 +311,9 @@ class RetrievalEngine:
             seqs[i, -len(s):] = s
         # Requests in one batch may disagree on k: score once at the batch
         # max and slice each request's prefix — top-k prefixes nest, so
-        # every request sees exactly its own top-k.  Client k is clamped
-        # into [1, max_k] (an unvalidated oversized k would abort the whole
-        # batch inside serve_fn) and the batch k is bucketed to a power of
-        # two so distinct client values cannot drive unbounded jit
-        # recompiles — same policy as the batch-size padding buckets.
-        kk = max(max(min(r.k, self.max_k) for r in reqs), self.k, 1)
-        kk = MicroBatcher.bucket(kk, self.max_k)
+        # every request sees exactly its own top-k.  batch_k clamps and
+        # buckets so client values cannot drive unbounded recompiles.
+        kk = self.batch_k([r.k for r in reqs])
         out = self._variant(bucket, kk)(jnp.asarray(seqs))
         if len(out) == 3:
             # Ladder-enabled pruned route: third output is the rung taken

@@ -1,0 +1,466 @@
+"""Tests for the serve-path static-analysis framework (repro.analysis).
+
+Two families:
+
+* **framework mechanics** — the jaxpr walker, the report/JSON shapes, the
+  CLI, the registry contract (>= 5 entrypoints covering every serving
+  route, >= 5 passes).
+* **adversarial negative controls** (ISSUE 6 satellite): one deliberately
+  broken route per pass — a host-syncing cascade, a callback-smuggling
+  serve fn, an unbucketed-k engine spec, an oversized VMEM block spec, an
+  unclamped sentinel index map, and tracer-leak / mutable-default
+  sources.  Each must FAIL its pass **and only its pass** (skips caused
+  by a shared root cause are not failures), proving every pass both
+  catches its hazard and stays quiet otherwise.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro import compat
+from repro.analysis import run_default
+from repro.analysis.core import (Finding, Report, STATUS_FAIL, STATUS_PASS,
+                                 STATUS_SKIP, count_primitives, find_eqns,
+                                 iter_eqns, run_analysis)
+from repro.analysis.entrypoints import (REGISTRY, BuiltEntry, Entrypoint,
+                                        StaticArgSpec)
+from repro.analysis.passes import default_passes
+from repro.analysis.passes.astlint import AstLintPass
+from repro.serving.engine import MicroBatcher, RetrievalEngine
+
+
+def run_on(built: BuiltEntry, name: str = "probe") -> Report:
+    """Run the default pass list on one ad-hoc entrypoint."""
+    entry = Entrypoint(name, "ad-hoc test entrypoint", lambda: built)
+    return run_analysis({name: entry}, default_passes(), lambda _n: built)
+
+
+# ---------------------------------------------------------------------------
+# framework mechanics
+# ---------------------------------------------------------------------------
+
+def test_walker_descends_into_nested_jaxprs():
+    """iter_eqns must see primitives buried under pjit and cond."""
+
+    def inner(x):
+        return jnp.cumsum(x) * 2
+
+    def fn(x):
+        return jax.lax.cond(x.sum() > 0, lambda v: jax.jit(inner)(v),
+                            lambda v: v, x)
+
+    jaxpr = jax.make_jaxpr(fn)(jnp.ones(4))
+    counts = count_primitives(jaxpr)
+    assert counts.get("cumsum", 0) >= 1, counts
+    hits = find_eqns(jaxpr, ["cumsum"])
+    assert hits and all("cond" in path for _, path in hits)
+
+
+def test_report_json_and_failing_passes():
+    report = run_on(BuiltEntry(lambda x: x * 2, (jnp.ones(3),)))
+    doc = json.loads(json.dumps(report.to_json()))
+    assert doc["ok"] is True
+    cells = {(r["entrypoint"], r["pass"]) for r in doc["results"]}
+    assert ("probe", "dispatch-count") in cells
+    assert report.failing_passes("probe") == []
+
+
+def test_registry_covers_required_routes():
+    """ISSUE 6 acceptance: >= 5 registered entrypoints spanning flat
+    fused, pruned, grouped per-query, sharded, and the decode step."""
+    required = {"flat_fused", "flat_pruned", "grouped_perquery",
+                "sharded_pruned", "lm_decode_step"}
+    assert required <= set(REGISTRY), sorted(REGISTRY)
+    assert len(REGISTRY) >= 5
+    assert len(default_passes()) >= 5
+
+
+def test_cli_runs_and_writes_json(tmp_path):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "report.json"
+    assert main(["--list"]) == 0
+    assert main(["-e", "pruned_tiles_kernel", "--json", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["ok"] is True and doc["results"]
+
+
+def test_kernel_entrypoints_pass_all(tmp_path):
+    """The real compacted-tile kernel routes satisfy every contract on the
+    traced pallas_call (static grid, VMEM, tiling, sentinel clamp)."""
+    report = run_default(entrypoints=["pruned_tiles_kernel",
+                                      "grouped_tiles_kernel"])
+    assert report.ok, report.render()
+    for name in ("pruned_tiles_kernel", "grouped_tiles_kernel"):
+        res = report.result(name, "kernel-contract")
+        assert res.status == STATUS_PASS
+        assert res.info["n_pallas_calls"] == 1
+
+
+@pytest.mark.slow
+def test_serve_entrypoints_pass_all():
+    """Every serve_topk route in the registry is clean under every pass
+    (the heavyweight positive control; ci.sh runs the same via the CLI)."""
+    names = ["flat_fused", "flat_pruned", "grouped_perquery",
+             "sharded_pruned", "lm_decode_step"]
+    report = run_default(entrypoints=names)
+    assert report.ok, report.render()
+    fused = report.result("flat_fused", "kernel-contract")
+    assert fused.info["n_pallas_calls"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# adversarial negative controls: each fails its pass, and only its pass
+# ---------------------------------------------------------------------------
+
+def _failing(report: Report, name: str = "probe"):
+    return report.failing_passes(name)
+
+
+def test_host_syncing_route_fails_dispatch_only():
+    """The PR 2 class of bug: host compaction (np.nonzero on a traced
+    value) cannot live in one dispatch.  dispatch-count fails with a
+    trace-failure; jaxpr-dependent passes SKIP (one root cause, one
+    failure)."""
+
+    def host_route(x):
+        mask = np.asarray(x > 0)          # device->host sync under trace
+        (idx,) = np.nonzero(mask)
+        return x[idx]
+
+    report = run_on(BuiltEntry(host_route, (jnp.arange(8.0),)))
+    assert _failing(report) == ["dispatch-count"]
+    f = report.result("probe", "dispatch-count").findings[0]
+    assert f.code == "trace-failure"
+    assert report.result("probe", "host-transfer").status == STATUS_SKIP
+    assert report.result("probe", "kernel-contract").status == STATUS_SKIP
+    # recompile does not need the trace: it passes (no specs declared)
+    assert report.result("probe", "recompile-hazard").status == STATUS_PASS
+
+
+def test_callback_route_fails_transfer_only():
+    """A pure_callback traces fine (single jaxpr!) — only the static
+    host-transfer pass catches the per-dispatch Python re-entry."""
+
+    def cb_route(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return y + 1
+
+    report = run_on(BuiltEntry(cb_route, (jnp.ones(4),)))
+    assert _failing(report) == ["host-transfer"]
+    codes = [f.code for f in report.result("probe", "host-transfer").findings]
+    assert "host-callback" in codes
+
+
+def test_debug_print_is_flagged_as_callback():
+    def noisy(x):
+        jax.debug.print("x={x}", x=x.sum())
+        return x * 2
+
+    report = run_on(BuiltEntry(noisy, (jnp.ones(4),)))
+    assert _failing(report) == ["host-transfer"]
+
+
+def test_big_host_constant_fails_transfer_only():
+    big = np.random.default_rng(0).normal(size=(1 << 19,)).astype(np.float32)
+
+    def const_route(x):
+        return x + jnp.asarray(big)[: x.shape[0]]
+
+    report = run_on(BuiltEntry(const_route, (jnp.ones(4),)))
+    assert _failing(report) == ["host-transfer"]
+    codes = [f.code for f in report.result("probe", "host-transfer").findings]
+    assert codes == ["host-constant"]
+
+
+def test_device_params_closure_is_not_flagged():
+    """The normal pattern — serve fns closing over device-resident params
+    — must NOT look like a host round-trip."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(1 << 16, 8)),
+                    jnp.float32)
+
+    def serve(x):
+        return (w * x).sum(axis=0)
+
+    report = run_on(BuiltEntry(serve, (jnp.ones(8),)))
+    assert report.ok, report.render()
+
+
+def test_unbucketed_k_fails_recompile_only():
+    """An identity client-k -> static-k mapping (no pow2 bucketing) lets
+    every distinct client value key a fresh compile."""
+    spec = StaticArgSpec(
+        "k", sample=tuple(range(1, 200)), mapper=lambda kv: kv,
+        allowed=None, max_variants=12,
+        note="deliberately unbucketed")
+    report = run_on(BuiltEntry(lambda x: x, (jnp.ones(3),),
+                               static_specs=(spec,)))
+    assert _failing(report) == ["recompile-hazard"]
+    f = report.result("probe", "recompile-hazard").findings[0]
+    assert f.code == "unbounded-static-arg"
+
+
+def test_out_of_bucket_values_fail_recompile():
+    spec = StaticArgSpec(
+        "batch", sample=(1, 2, 3, 64), mapper=lambda n: n,
+        allowed=frozenset({1, 2, 4, 8}), max_variants=8)
+    report = run_on(BuiltEntry(lambda x: x, (jnp.ones(3),),
+                               static_specs=(spec,)))
+    assert _failing(report) == ["recompile-hazard"]
+    codes = {f.code for f in
+             report.result("probe", "recompile-hazard").findings}
+    assert "out-of-bucket" in codes
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def test_oversized_vmem_block_fails_kernel_contract_only():
+    """2 x (in + out) f32 blocks of (1024, 2048) ~= 33 MiB >> the 8 MiB
+    budget."""
+    n = 2048
+
+    def fat(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(2,),
+            in_specs=[pl.BlockSpec((1024, n), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1024, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((2048, n), jnp.float32),
+            interpret=True,
+        )(x)
+
+    report = run_on(BuiltEntry(fat, (jnp.ones((2048, n)),)))
+    assert _failing(report) == ["kernel-contract"]
+    codes = {f.code for f in
+             report.result("probe", "kernel-contract").findings}
+    assert codes == {"vmem-budget"}
+
+
+def test_misaligned_int8_block_fails_tiling():
+    """int8 codes tiles must be a multiple of 32 sublanes (or the full
+    array): a 48-row block lowers in interpret mode but violates the TPU
+    (32, 128) int8 tile."""
+
+    def skewed(c):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(2,),
+            in_specs=[pl.BlockSpec((48, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((48, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((96, 128), jnp.int8),
+            interpret=True,
+        )(c)
+
+    report = run_on(BuiltEntry(skewed, (jnp.ones((96, 128), jnp.int8),)))
+    assert _failing(report) == ["kernel-contract"]
+    codes = {f.code for f in
+             report.result("probe", "kernel-contract").findings}
+    assert codes == {"tiling"}
+
+
+def _sentinel_call(clamped: bool):
+    """A miniature compacted-tile kernel: codes block driven by a scalar-
+    prefetched slot table, with or without the -1 -> 0 clamp."""
+    tile, m = 128, 8
+
+    def kernel(idx_ref, codes_ref, o_ref):
+        del idx_ref
+        o_ref[...] = codes_ref[...].astype(jnp.float32)
+
+    def fn(codes, idx):
+        index_map = ((lambda i, idx_ref: (jnp.maximum(idx_ref[i], 0), 0))
+                     if clamped else
+                     (lambda i, idx_ref: (idx_ref[i], 0)))
+        grid_spec = compat.prefetch_scalar_grid_spec(
+            num_scalar_prefetch=1,
+            grid=(2,),
+            in_specs=[pl.BlockSpec((tile, m), index_map)],
+            out_specs=pl.BlockSpec((tile, m), lambda i, idx_ref: (i, 0)),
+        )
+        return pl.pallas_call(
+            kernel, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((2 * tile, m), jnp.float32),
+            interpret=True,
+        )(idx, codes)
+
+    codes = jnp.ones((2 * tile, m), jnp.int8)
+    idx = jnp.asarray([0, -1], jnp.int32)
+    return BuiltEntry(fn, (codes, idx), expect_pallas=1)
+
+
+def test_unclamped_sentinel_index_map_fails_kernel_contract():
+    report = run_on(_sentinel_call(clamped=False))
+    assert _failing(report) == ["kernel-contract"]
+    codes = {f.code for f in
+             report.result("probe", "kernel-contract").findings}
+    assert codes == {"sentinel-clamp"}
+
+
+def test_clamped_sentinel_index_map_passes():
+    report = run_on(_sentinel_call(clamped=True))
+    assert report.ok, report.render()
+
+
+def test_missing_kernel_is_flagged():
+    """An entrypoint promising a Pallas kernel (expect_pallas) that lowers
+    to plain XLA fails kernel-contract — the route fell off the kernel."""
+    report = run_on(BuiltEntry(lambda x: x * 2, (jnp.ones(4),),
+                               expect_pallas=1))
+    assert _failing(report) == ["kernel-contract"]
+    codes = {f.code for f in
+             report.result("probe", "kernel-contract").findings}
+    assert codes == {"missing-kernel"}
+
+
+# ---------------------------------------------------------------------------
+# ast-lint negative controls (pure source-level, no imports executed)
+# ---------------------------------------------------------------------------
+
+def test_astlint_flags_module_level_jnp_constant():
+    src = ("import jax.numpy as jnp\n"
+           "NEG_INF = jnp.float32(-jnp.inf)\n"
+           "def ok():\n"
+           "    return jnp.float32(0)\n")
+    findings = AstLintPass(roots=[]).lint_source(src, "fake.py")
+    assert [f.code for f in findings] == ["module-jnp-const"]
+    assert findings[0].details["line"] == 2
+
+
+def test_astlint_flags_mutable_default():
+    src = "def f(x, acc=[]):\n    return acc\n"
+    findings = AstLintPass(roots=[]).lint_source(src, "fake.py")
+    assert [f.code for f in findings] == ["mutable-default"]
+
+
+def test_astlint_clean_module_and_call_time_jnp_ok():
+    src = ("import jax.numpy as jnp\n"
+           "NEG_INF = float('-inf')\n"
+           "class C:\n"
+           "    def m(self):\n"
+           "        return jnp.zeros(3)\n"
+           "def f(x, acc=None):\n"
+           "    return jnp.asarray(x)\n")
+    assert AstLintPass(roots=[]).lint_source(src, "fake.py") == []
+
+
+def test_astlint_flags_class_body_jnp_constant():
+    src = ("import jax.numpy as jnp\n"
+           "class C:\n"
+           "    BAD = jnp.zeros(3)\n")
+    findings = AstLintPass(roots=[]).lint_source(src, "fake.py")
+    assert [f.code for f in findings] == ["module-jnp-const"]
+
+
+def test_repro_sources_are_astlint_clean():
+    """The live tree stays clean (this is what caught and now guards the
+    topk.py NEG_INF tracer-leak instance)."""
+    findings, info = AstLintPass().run("<sources>", None, None)
+    assert findings == [], "\n".join(f.message for f in findings)
+    assert info["n_files"] > 50
+
+
+# ---------------------------------------------------------------------------
+# engine bucketing: the real mapping the recompile pass probes
+# ---------------------------------------------------------------------------
+
+def _dummy_engine(k=5, max_k=100, max_batch=8):
+    return RetrievalEngine(lambda seqs, kk: (seqs[:, :kk], seqs[:, :kk]),
+                           seq_len=16, k=k, max_k=max_k,
+                           max_batch=max_batch, jit_serve=False)
+
+
+def test_engine_batch_k_is_bounded_and_clamped():
+    eng = _dummy_engine()
+    image = {eng.batch_k([kv]) for kv in range(1, 1000)}
+    allowed = {1, 2, 4, 8, 16, 32, 64, 100}
+    assert image <= allowed, image
+    assert len(image) <= eng.max_k.bit_length() + 1
+    assert eng.batch_k([10 ** 9]) == 100          # clamped to max_k
+    assert eng.batch_k([0]) == 8                  # floored at engine k=5
+    assert eng.batch_k([3, 40, 2]) == 64          # batch max, bucketed
+
+
+def test_engine_batch_k_matches_run_once_policy():
+    """batch_k is the factored-out run_once policy: max over clamped
+    client ks, floored at engine k, pow2-bucketed."""
+    eng = _dummy_engine(k=2, max_k=64)
+    for ks in ([1], [2, 7], [63], [64, 1], [200, 3]):
+        kk = max(max(min(int(kv), eng.max_k) for kv in ks), eng.k, 1)
+        assert eng.batch_k(ks) == MicroBatcher.bucket(kk, eng.max_k)
+
+
+def test_micro_batcher_bucket_pow2():
+    assert [MicroBatcher.bucket(n, 64) for n in (1, 2, 3, 5, 33, 64, 200)] \
+        == [1, 2, 4, 8, 64, 64, 64]
+
+
+# ---------------------------------------------------------------------------
+# bench provenance (fingerprint refusal in bench_compare)
+# ---------------------------------------------------------------------------
+
+def _bench_doc(pr, fingerprint):
+    doc = {"pr": pr, "rows": [{"section": "kernel",
+                               "name": f"kernel/cell/pr{pr}",
+                               "method": "pqtopk", "median_us": 1.0,
+                               "items_per_s": 1e6, "tags": {}}]}
+    if fingerprint is not None:
+        doc["fingerprint"] = fingerprint
+    return doc
+
+
+def _write_benches(tmp_path, fps):
+    paths = []
+    for i, fp in enumerate(fps):
+        p = tmp_path / f"BENCH_pr{i + 1}.json"
+        p.write_text(json.dumps(_bench_doc(i + 1, fp)))
+        paths.append(str(p))
+    return paths
+
+
+def test_bench_compare_refuses_mixed_fingerprints(tmp_path):
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "bench_compare", "scripts/bench_compare.py")
+    bc = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bc)
+
+    fp_a = {"jax": "0.4.37", "backend": "cpu", "threads": "unpinned"}
+    fp_b = {"jax": "0.5.0", "backend": "tpu", "threads": "unpinned"}
+
+    same = _write_benches(tmp_path, [fp_a, fp_a])
+    assert bc.main(same) == 0
+    mixed = _write_benches(tmp_path, [fp_a, fp_b])
+    assert bc.main(mixed) == 2                       # refused
+    assert bc.main(mixed + ["--allow-mixed"]) == 0   # explicit override
+    legacy = _write_benches(tmp_path, [None, fp_a])  # pre-PR6 file: warn
+    assert bc.main(legacy) == 0
+
+
+def test_bench_run_fingerprint_shape():
+    from benchmarks.run import environment_fingerprint
+    fp = environment_fingerprint()
+    assert {"python", "jax", "jaxlib", "backend", "threads"} <= set(fp)
+    assert fp["jax"] == jax.__version__
+
+
+# ---------------------------------------------------------------------------
+# engine entrypoints under the framework (the heavyweight runtime proof)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_aot_single_dispatch_via_framework():
+    report = run_default(entrypoints=["engine_aot"])
+    assert report.ok, report.render()
+    res = report.result("engine_aot", "dispatch-count")
+    assert res.info["runtime_dispatches"] == 1
+    rec = report.result("engine_aot", "recompile-hazard")
+    assert rec.info["n_specs"] >= 3
