@@ -107,6 +107,7 @@ def run(full: bool = False, repeats: int = 5):
                     "n_items": n, "m": m, "method": method,
                     "scoring_ms": None if t is None
                     else t["median_s"] * 1e3,
+                    "timing": t,
                 }
                 for tag in ("survival_fraction", "n_seed_used", "interpret",
                             "bound_backend", "ladder", "rung_hit_fraction"):

@@ -7,11 +7,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 pruned-vs-exhaustive retrieval sweep on skewed data
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr6.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr7.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
 fraction + seed size + bound backend + ladder / rung-hit fraction for the
-pruned route, interpret-mode markers, ...).  The document also carries an
+pruned route, interpret-mode markers, ...).  Timed rows additionally carry
+``q25_us``/``q75_us``/``iqr_us``/``n_reps`` so trend tooling can require
+IQR separation before calling a regression (noise-robust comparisons).
+The ``churn`` section measures the mutable catalogue: interleaved
+update+query streaming at N=2^20 through the incrementally maintained
+``MutableHeadState`` (stale-but-dominating bounds, tombstone mask), with
+per-sample exactness checks against the exhaustive masked oracle.  The document also carries an
 environment ``fingerprint`` (python/jax/jaxlib versions, backend, thread
 pinning) so ``scripts/bench_compare.py`` can refuse joins of numbers
 measured on different software stacks (``--allow-mixed`` overrides).
@@ -60,9 +66,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", action="append", default=[],
-                    choices=["table3", "figure2", "kernel", "roofline"])
+                    choices=["table3", "figure2", "kernel", "churn",
+                             "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr6.json",
+    ap.add_argument("--json", default="BENCH_pr7.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -70,12 +77,21 @@ def main(argv=None) -> None:
 
     def _emit(section: str, name: str, us: float | None, derived: str = "",
               *, method: str = "", items_per_s: float | None = None,
-              tags: dict | None = None):
+              tags: dict | None = None, timing: dict | None = None):
         us_s = f"{us:.1f}" if us is not None else "nan"
         print(f"{name},{us_s},{derived}")
-        rows.append({"section": section, "name": name, "method": method,
-                     "median_us": us, "items_per_s": items_per_s,
-                     "tags": tags or {}})
+        row = {"section": section, "name": name, "method": method,
+               "median_us": us, "items_per_s": items_per_s,
+               "tags": tags or {}}
+        if timing is not None:
+            # Variance alongside the median: trend tooling treats two
+            # rows as distinguishable only when their IQR intervals
+            # separate (scripts/bench_compare.py).
+            row["q25_us"] = timing["q25_s"] * 1e6
+            row["q75_us"] = timing["q75_s"] * 1e6
+            row["iqr_us"] = timing["iqr_s"] * 1e6
+            row["n_reps"] = timing["n_reps"]
+        rows.append(row)
 
     print("name,us_per_call,derived")
 
@@ -92,7 +108,8 @@ def main(argv=None) -> None:
                   f"total_ms={r['total_ms']:.2f};backbone_ms={r['backbone_ms']:.2f}",
                   method=r["method"],
                   tags={"total_ms": r["total_ms"],
-                        "backbone_ms": r["backbone_ms"]})
+                        "backbone_ms": r["backbone_ms"]},
+                  timing=r.get("timing"))
 
     if "figure2" not in args.skip:
         from benchmarks import figure2
@@ -128,7 +145,7 @@ def main(argv=None) -> None:
                   us, derived, method=r["method"],
                   items_per_s=(None if us is None or interp
                                else r["n_items"] / us * 1e6),
-                  tags=tags)
+                  tags=tags, timing=r.get("timing"))
 
     if "kernel" not in args.skip:
         import jax
@@ -148,7 +165,7 @@ def main(argv=None) -> None:
             _emit("kernel", f"kernel/pq_scoring_262k/{name}",
                   t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}",
                   method=name, items_per_s=n / t["median_s"],
-                  tags={"n_items": n})
+                  tags={"n_items": n}, timing=t)
         # Retrieval (scoring + top-k) comparison: XLA two-stage vs the fused
         # Pallas kernel, whose HBM output is O(B*K*N/TN) not O(B*N).
         from repro import compat
@@ -160,7 +177,7 @@ def main(argv=None) -> None:
         _emit("kernel", "kernel/pq_retrieval_262k/pqtopk",
               t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}",
               method="pqtopk", items_per_s=n / t["median_s"],
-              tags={"n_items": n})
+              tags={"n_items": n}, timing=t)
         t = time_fn(lambda: pq_ops.pq_topk(codes, s, k),
                     repeats=args.repeats)
         # Off TPU the fused kernel runs in interpret mode — the number times
@@ -172,7 +189,7 @@ def main(argv=None) -> None:
               t["median_s"] * 1e6, f"items_per_s={n / t['median_s']:.3e}{tag}",
               method="pqtopk_fused",
               items_per_s=None if interp else n / t["median_s"],
-              tags={"n_items": n, "interpret": interp})
+              tags={"n_items": n, "interpret": interp}, timing=t)
         # Pruned-vs-exhaustive retrieval on skewed-score synthetic data
         # (N = 2^20): codes clustered by catalogue position (as after a
         # popularity-ordered RecJPQ assignment) + heavy-tailed sub-id
@@ -195,7 +212,7 @@ def main(argv=None) -> None:
         _emit("kernel", "kernel/pq_retrieval_1m_skewed/pqtopk",
               t["median_s"] * 1e6, f"items_per_s={n_sk / t['median_s']:.3e}",
               method="pqtopk", items_per_s=n_sk / t["median_s"],
-              tags={"n_items": n_sk, "skewed": True})
+              tags={"n_items": n_sk, "skewed": True}, timing=t)
         # Exhaustive fused: identity tile list through pq_topk_tiles — the
         # same compacted-scoring entry the cascade uses, with zero pruning.
         ident = jnp.arange(pq_ops.n_tiles(n_sk, tile_sk), dtype=jnp.int32)
@@ -206,7 +223,8 @@ def main(argv=None) -> None:
               t["median_s"] * 1e6, f"items_per_s={n_sk / t['median_s']:.3e}",
               method="pqtopk_fused", items_per_s=n_sk / t["median_s"],
               tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
-                    "lowering": "pallas" if compat.on_tpu() else "xla"})
+                    "lowering": "pallas" if compat.on_tpu() else "xla"},
+              timing=t)
         # Bound-backend comparison sweep: the single-dispatch in-graph
         # cascade (adaptive theta seeding, CALIBRATED slot-budget ladder)
         # for both metadata backends at N=2^20 skewed, on two code
@@ -299,7 +317,8 @@ def main(argv=None) -> None:
                             "stream_batches": n_stream,
                             "dispatches_per_query": 1,
                             "meta_bytes": state.nbytes,
-                            "meta_bytes_bool_pr2": state.bool_nbytes})
+                            "meta_bytes_bool_pr2": state.bool_nbytes},
+                      timing=t)
             # Headline deltas per layout: metadata footprint ratio and
             # bound-tightness loss (range survival - bitmask survival).
             st_bm, meta_bm = backend_rows["bitmask"]
@@ -334,7 +353,7 @@ def main(argv=None) -> None:
               tags={"n_items": n_sk, "skewed": True, "tile": tile_sk,
                     "bound_backend": "bitmask", "ladder": None,
                     "rung_hit_fraction": None,
-                    "dispatches_per_query": 2})
+                    "dispatches_per_query": 2}, timing=t)
         # ---------------------------------------------------------------
         # Mixed-batch per-query sweep (PR 5 headline): N=2^20 clipped
         # clustered codes, B in {8, 64, 256} queries whose score skew
@@ -452,7 +471,7 @@ def main(argv=None) -> None:
                             "ladder": list(ladder),
                             "exactness_mismatches": mismatches,
                             "stream_batches": n_stream_mx,
-                            "dispatches_per_query": 1})
+                            "dispatches_per_query": 1}, timing=t)
             st_g, pg, pu = route_rows["grouped"]
             st_a, pa, _ = route_rows["batchany"]
             _emit("kernel",
@@ -470,6 +489,123 @@ def main(argv=None) -> None:
                         "union_survived": st_a["n_survived"],
                         "max_group_survived":
                             st_g["max_group_survived"]})
+
+    if "churn" not in args.skip:
+        # -------------------------------------------------------------
+        # Streaming catalogue mutation at N=2^20 (ISSUE 7 headline):
+        # interleaved update+query through the incrementally maintained
+        # MutableHeadState — queries run against STALE (loosened) bounds
+        # plus the tombstone mask and must stay bit-exact vs the
+        # exhaustive masked oracle; the section reports the mutation
+        # cost, the stale-vs-fresh query latency gap (the price of
+        # degradation), and the retighten cost that closes it.
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from benchmarks.timing import time_fn
+        from repro.core import pruning, scoring, topk as topk_lib
+        from repro.core.mutation import MutableHeadState
+
+        rng_ch = np.random.default_rng(42)
+        n_ch, m_ch, b_ch, tile_ch, k_ch = 1 << 20, 8, 256, 1024, 10
+        centers_ch = (np.arange(n_ch) / n_ch * b_ch).astype(np.int64)
+        codes_ch = jnp.asarray(
+            np.clip(centers_ch[:, None]
+                    + rng_ch.integers(-1, 2, (n_ch, m_ch)), 0, b_ch - 1),
+            jnp.int32)
+        g_ch = rng_ch.standard_normal((1, m_ch, b_ch))
+        s_ch = jnp.asarray(np.sign(g_ch) * np.abs(g_ch) ** 3, jnp.float32)
+
+        oracle_ch = jax.jit(lambda c_, lv_, s_: topk_lib.tiled_topk(
+            jnp.where(lv_[None, :], scoring.score_pqtopk(c_, s_),
+                      -jnp.inf), k_ch))
+
+        def fresh_row():
+            return jnp.asarray(rng_ch.integers(0, b_ch, m_ch), jnp.int32)
+
+        for backend in pruning.BOUND_BACKENDS:
+            mstate = MutableHeadState.build(codes_ch, b_ch, tile_ch,
+                                            backend=backend)
+            # Head arrays enter as traced ARGUMENTS — the same data-not-
+            # constants contract the hot-swap engine compiles against.
+            cascade_ch = jax.jit(
+                lambda c_, lv_, st_, s_: pruning.cascade_topk_ingraph(
+                    c_, s_, k_ch, st_, live=lv_)[:2])
+
+            # Mutation cost (update = tombstone-free absorb + staleness).
+            victims = rng_ch.integers(1, n_ch, 64)
+            vi = iter(np.tile(victims, 100))
+            t_mut = time_fn(
+                lambda: mstate.update(int(next(vi)), fresh_row()),
+                repeats=max(args.repeats * 4, 16), warmup=4)
+            _emit("churn", f"churn/1m/update_{backend}",
+                  t_mut["median_s"] * 1e6,
+                  f"mutations_per_s={1 / t_mut['median_s']:.3e}",
+                  method="mutation_update",
+                  tags={"n_items": n_ch, "capacity": mstate.cap,
+                        "tile": tile_ch, "bound_backend": backend},
+                  timing=t_mut)
+
+            # Interleaved stream: update -> query, exactness-checked.
+            n_pairs, mismatches = 8, 0
+            for i in range(n_pairs):
+                if i % 4 == 3:
+                    mstate.delete(int(rng_ch.integers(9, n_ch)))
+                else:
+                    mstate.update(1 + i, fresh_row())
+                gg = np.random.default_rng(7000 + i).standard_normal(
+                    (1, m_ch, b_ch))
+                s_i = jnp.asarray(np.sign(gg) * np.abs(gg) ** 3,
+                                  jnp.float32)
+                ha = mstate.head_arrays()
+                v_pr, i_pr = cascade_ch(ha["codes"], ha["live"],
+                                        ha["pruned"], s_i)
+                v_ex, i_ex = oracle_ch(ha["codes"], ha["live"], s_i)
+                mismatches += int(
+                    not (np.array_equal(np.asarray(v_pr),
+                                        np.asarray(v_ex))
+                         and np.array_equal(np.asarray(i_pr),
+                                            np.asarray(i_ex))))
+
+            # Query latency on the now-stale state vs after retighten.
+            ha = mstate.head_arrays()
+            stats_stale = mstate.stats()
+            t_stale = time_fn(lambda: cascade_ch(ha["codes"], ha["live"],
+                                                 ha["pruned"], s_ch),
+                              repeats=args.repeats)
+            _emit("churn", f"churn/1m/query_stale_{backend}",
+                  t_stale["median_s"] * 1e6,
+                  f"items_per_s={n_ch / t_stale['median_s']:.3e};"
+                  f"stale_tiles={int(stats_stale['stale_tiles'])};"
+                  f"mismatches={mismatches}",
+                  method="pqtopk_pruned",
+                  items_per_s=n_ch / t_stale["median_s"],
+                  tags={"n_items": n_ch, "bound_backend": backend,
+                        "tile": tile_ch, "churned": True,
+                        "stale_tiles": stats_stale["stale_tiles"],
+                        "n_mutations": stats_stale["n_mutations"],
+                        "exactness_mismatches": mismatches,
+                        "stream_pairs": n_pairs,
+                        "dispatches_per_query": 1},
+                  timing=t_stale)
+
+            t_ret = time_fn(lambda: mstate.retighten() or None,
+                            repeats=1, warmup=0)
+            ha = mstate.head_arrays()
+            t_fresh = time_fn(lambda: cascade_ch(ha["codes"], ha["live"],
+                                                 ha["pruned"], s_ch),
+                              repeats=args.repeats)
+            _emit("churn", f"churn/1m/query_fresh_{backend}",
+                  t_fresh["median_s"] * 1e6,
+                  f"items_per_s={n_ch / t_fresh['median_s']:.3e};"
+                  f"retighten_us={t_ret['median_s'] * 1e6:.1f}",
+                  method="pqtopk_pruned",
+                  items_per_s=n_ch / t_fresh["median_s"],
+                  tags={"n_items": n_ch, "bound_backend": backend,
+                        "tile": tile_ch, "churned": False,
+                        "retighten_us": t_ret["median_s"] * 1e6,
+                        "dispatches_per_query": 1},
+                  timing=t_fresh)
 
     if "roofline" not in args.skip:
         import os
@@ -494,7 +630,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 6,
+            "pr": 7,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

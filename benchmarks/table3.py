@@ -74,6 +74,7 @@ def run(repeats: int = 7, datasets=("booking", "gowalla"),
                     "scoring_ms": t_scoring["median_s"] * 1e3,
                     "total_ms": (t_backbone["median_s"]
                                  + t_scoring["median_s"]) * 1e3,
+                    "timing": t_scoring,
                 })
     return rows
 

@@ -1,7 +1,11 @@
 """Shared wall-clock timing helpers (CPU algorithm-level benches).
 
 The paper reports median response time (mRT) per user; we do the same:
-jit, warm up, then median over repeats with block_until_ready.
+jit, warm up, then median over repeats with block_until_ready.  Every
+measurement also carries its quartiles (q25/q75) and IQR so downstream
+trend tooling (scripts/bench_compare.py) can distinguish a real
+regression from run-to-run noise: two medians whose IQR intervals
+overlap are not evidence of a change.
 """
 from __future__ import annotations
 
@@ -22,9 +26,14 @@ def time_fn(fn: Callable[[], object], *, repeats: int = 10,
         jax.block_until_ready(fn())
         times.append(time.perf_counter() - t0)
     arr = np.asarray(times)
+    q25, q75 = np.percentile(arr, (25, 75))
     return {
         "median_s": float(np.median(arr)),
         "mean_s": float(arr.mean()),
         "p99_s": float(np.percentile(arr, 99)),
         "min_s": float(arr.min()),
+        "q25_s": float(q25),
+        "q75_s": float(q75),
+        "iqr_s": float(q75 - q25),
+        "n_reps": int(repeats),
     }

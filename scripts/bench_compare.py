@@ -7,9 +7,16 @@ code_layout, grouping)`` — the tags that identify *what* was measured —
 rather than on the display name, which PRs have renamed as sweeps grew.
 Rows whose ``items_per_s`` is null (interpret-mode Pallas timings, delta
 rows) never enter the comparison.  A drop of more than ``--threshold``
-(default 20%) between consecutive PRs that measured the same row is
-flagged ``REGRESSION``; ``--strict`` turns any flag into a non-zero exit
-for CI gating (the default smoke run in ``scripts/ci.sh`` only reports).
+(default 20%) between consecutive PRs that measured the same row is a
+*candidate* regression; since PR 7 every row also carries its timing
+quartiles (``q25_us``/``q75_us``), and a candidate is only flagged
+``REGRESSION`` when the two rows' IQR intervals *separate* — the new
+median throughput sits strictly below the old row's q25-derived lower
+bound and vice versa.  Overlapping intervals are run-to-run noise, not
+evidence.  Rows missing quartiles on either side (pre-PR7 files) fall
+back to the bare threshold rule.  ``--strict`` turns any flag into a
+non-zero exit for CI gating (the default smoke run in ``scripts/ci.sh``
+only reports).
 
 Provenance: every file written since PR 6 carries an environment
 ``fingerprint`` (python/jax/jaxlib versions, backend, thread pinning).
@@ -57,8 +64,21 @@ def row_key(row: dict) -> tuple:
             tags.get("grouping") or "batchany")
 
 
+def _ips_interval(row, ips):
+    """Map the row's latency quartiles into an (lo, hi) throughput
+    interval around ``items_per_s``.  Throughput is n/latency, so the
+    q75 latency bounds throughput from below and q25 from above.
+    Returns None for rows predating the variance fields (pre-PR7)."""
+    med, q25, q75 = (row.get("median_us"), row.get("q25_us"),
+                     row.get("q75_us"))
+    if not med or not q25 or not q75:
+        return None
+    return (ips * med / q75, ips * med / q25)
+
+
 def load(paths):
-    """-> (sorted pr numbers, {key: {pr: items_per_s}},
+    """-> (sorted pr numbers,
+    {key: {pr: {"ips": float, "interval": (lo, hi)|None}}},
     {path: fingerprint-or-None})."""
     prs, table, fingerprints = [], {}, {}
     for path in sorted(paths, key=_pr_number):
@@ -74,7 +94,10 @@ def load(paths):
             # Keep the best row per (key, pr): reruns of the same cell in
             # one file (e.g. repeated smoke invocations) must not fan out.
             cell = table.setdefault(row_key(row), {})
-            cell[pr] = max(cell.get(pr, 0.0), float(ips))
+            best = cell.get(pr)
+            if best is None or float(ips) > best["ips"]:
+                cell[pr] = {"ips": float(ips),
+                            "interval": _ips_interval(row, float(ips))}
     return prs, table, fingerprints
 
 
@@ -163,11 +186,20 @@ def main(argv=None) -> int:
         for v in vals:
             if v is None:
                 continue
-            if prev is not None and prev > 0 and v < prev * (1 - args.threshold):
-                flags.append(f"REGRESSION {-100 * (1 - v / prev):.0f}%")
+            if (prev is not None and prev["ips"] > 0
+                    and v["ips"] < prev["ips"] * (1 - args.threshold)):
+                pi, vi = prev["interval"], v["interval"]
+                # With quartiles on both sides, demand *separated* IQR
+                # intervals; otherwise the drop is within measured noise.
+                if pi is None or vi is None or vi[1] < pi[0]:
+                    flags.append(
+                        f"REGRESSION {-100 * (1 - v['ips'] / prev['ips']):.0f}%")
+                else:
+                    flags.append(
+                        f"noise {-100 * (1 - v['ips'] / prev['ips']):.0f}%")
             prev = v
-        n_regressions += len(flags)
-        cells = ["-" if v is None else f"{v:.3e}" for v in vals]
+        n_regressions += sum(f.startswith("REGRESSION") for f in flags)
+        cells = ["-" if v is None else f"{v['ips']:.3e}" for v in vals]
         print(",".join([fmt_key(key)] + cells + [";".join(flags) or "ok"]))
     print(f"# {len(table)} joined rows across PRs {prs}; "
           f"{n_regressions} regression(s) at threshold "

@@ -38,7 +38,7 @@ fi
 # test file stopped importing or someone deleted coverage).  pytest also
 # exits non-zero on collection errors, so a broken import fails CI rather
 # than silently shrinking the suite.
-TIER1_BASELINE=308
+TIER1_BASELINE=321
 collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
             | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
 if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
@@ -69,14 +69,18 @@ python scripts/check_single_dispatch.py
 
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
 # single-dispatch pruned cascade, bound-backend comparison sweep, the
-# per-query mixed-batch sweep, figure2) end to end so kernel-path
-# breakage surfaces in CI, not just in unit tests, and refreshes the
-# machine-readable BENCH_pr6.json (now stamped with an environment
+# per-query mixed-batch sweep, the catalogue-churn section with its
+# sampled exactness checks, figure2) end to end so kernel-path breakage
+# surfaces in CI, not just in unit tests, and refreshes the
+# machine-readable BENCH_pr7.json (stamped with an environment
 # fingerprint — python/jax/jaxlib, backend, thread pinning — so
-# bench_compare refuses cross-environment joins).  table3/roofline stay
-# out (slow dataset builds / artifact-dependent).
-python -m benchmarks.run --skip table3 --skip roofline --repeats 1 \
-    --json BENCH_pr6.json > /dev/null
+# bench_compare refuses cross-environment joins; every row carries
+# median + IQR so bench_compare only flags IQR-separated drops).
+# table3/roofline stay out (slow dataset builds / artifact-dependent).
+# --repeats 3 (up from 1): quartiles over one sample are degenerate,
+# and the IQR-separation rule needs real spread to be meaningful.
+python -m benchmarks.run --skip table3 --skip roofline --repeats 3 \
+    --json BENCH_pr7.json > /dev/null
 
 # Cross-PR perf trajectory: join all BENCH_pr*.json and report the
 # items_per_s trend per benchmark (regressions are highlighted in the

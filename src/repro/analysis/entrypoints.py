@@ -29,6 +29,15 @@ check_single_dispatch lineage):
                             route (AOT-compiled variants, runtime dispatch
                             counting)
 * ``engine_aot_grouped``  — the engine on the grouped route
+* ``flat_tombstone``      — the pruned cascade over a mutated catalogue:
+                            tombstone mask + stale-but-dominating bounds
+                            threaded as data through ONE dispatch
+* ``tombstone_tiles_kernel`` — the compacted-tile kernel with the live
+                            block riding the same clamped sentinel index
+                            map as the codes
+* ``engine_mutable``      — the hot-swap engine: mutate + swap_head_state
+                            between batches, then prove the served batch
+                            is still ONE dispatch with ZERO new compiles
 
 Builds are cached (`build()`), and the heavyweight shared fixtures
 (catalogue params) are built once and reused across entries.
@@ -418,3 +427,155 @@ def _build_engine_aot() -> BuiltEntry:
           tags=("serve", "engine", "pruned", "grouped"))
 def _build_engine_aot_grouped() -> BuiltEntry:
     return _engine_entry(grouped=True, base_id=100)
+
+
+# ---------------------------------------------------------------------------
+# mutable-catalogue routes (ISSUE 7: tombstones, hot swap)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _mutable_setup():
+    """A MutableHeadState over the shared catalogue with a few dozen
+    deletions applied — stale (loosened) bounds plus a real tombstone
+    mask, i.e. the exact serve-path shape streaming mutation produces."""
+    import numpy as np
+    from repro.core.mutation import MutableHeadState
+
+    params, cfg = _seqrec_setup()
+    mstate = MutableHeadState.build(params["item_emb"]["codes"], cfg.pq.b)
+    rng = np.random.default_rng(11)
+    for iid in rng.choice(np.arange(1, cfg.n_items + 1), 64, replace=False):
+        mstate.delete(int(iid))
+    return params, cfg, mstate
+
+
+@register("flat_tombstone",
+          "serve_topk on a mutated catalogue: capacity-padded codes, "
+          "stale-but-dominating bounds and the tombstone mask all enter "
+          "as DATA — the whole degraded cascade must still be one trace",
+          tags=("serve", "pruned", "mutable"))
+def _build_flat_tombstone() -> BuiltEntry:
+    from repro.models import seqrec as seqrec_lib
+
+    params, cfg, mstate = _mutable_setup()
+    p = {**params, "item_emb": {**params["item_emb"],
+                                **mstate.head_arrays()}}
+
+    def fn(seqs):
+        return seqrec_lib.serve_topk(p, seqs, cfg, k=5,
+                                     method="pqtopk_pruned",
+                                     ladder=STATIC_LADDER,
+                                     return_rung=True)
+
+    return BuiltEntry(fn, (_seq_sds(cfg),),
+                      notes=f"mutable head, capacity={mstate.cap}, "
+                            f"n_live={mstate.n_live}, ladder rungs in "
+                            "trace, tombstones as data")
+
+
+@register("tombstone_tiles_kernel",
+          "the compacted-tile kernel with a live (tombstone) block: the "
+          "(1, tile) int8 mask rides the same clamped sentinel index map "
+          "as the codes blocks — the mutable kernel contract surface",
+          tags=("kernel", "mutable"))
+def _build_tombstone_tiles_kernel() -> BuiltEntry:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.pqtopk import ops
+
+    codes, s = _kernel_fixture()
+    tile_idx = jnp.asarray([0, -1], jnp.int32)   # one live slot + sentinel
+    live = jax.ShapeDtypeStruct((codes.shape[0],), jnp.bool_)
+
+    def fn(c, sc, lv):
+        return ops.pq_topk_tiles(c, sc, 8, tile_idx, tile=512, live=lv,
+                                 use_kernel=True, interpret=True)
+
+    return BuiltEntry(fn, (codes, s, live), expect_pallas=1,
+                      notes="1D compacted slots + tombstone mask block, "
+                            "tile=512")
+
+
+@register("engine_mutable",
+          "the hot-swap engine: serve, mutate the catalogue, "
+          "swap_head_state, serve again — the swapped batch must be ONE "
+          "dispatch through the SAME compiled variants (zero recompiles)",
+          tags=("serve", "engine", "pruned", "mutable"))
+def _build_engine_mutable() -> BuiltEntry:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving.engine import (MicroBatcher, Request,
+                                      RetrievalEngine)
+
+    params, cfg, mstate = _mutable_setup()
+    k, max_batch = 5, 8
+    eng = RetrievalEngine.for_seqrec_mutable(params, cfg, mstate, k=k,
+                                             max_batch=max_batch)
+    assert eng._head_state is not None, "mutable engine must be swappable"
+
+    sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
+
+    def count() -> int:
+        rng = np.random.default_rng(200)
+        for i in range(4):
+            eng.submit(Request(200 + i,
+                               rng.integers(1, cfg.n_items + 1, 8), k=k))
+        eng.drain()                               # warm outside the guard
+        n_variants = len(eng._compiled)
+        # Mutate the catalogue and hot-swap it in — the whole point is
+        # that the swapped batch below reuses the SAME compiled variant.
+        for iid in rng.choice(np.arange(1, cfg.n_items + 1), 16,
+                              replace=False):
+            if bool(np.asarray(mstate.live)[int(iid)]):
+                mstate.delete(int(iid))
+        eng.swap_head_state(mstate)
+        calls = []
+        for key, f in list(eng._compiled.items()):
+            eng._compiled[key] = (
+                lambda seqs, _f=f, _key=key:
+                (calls.append(_key), _f(seqs))[1])
+        for i in range(4):
+            eng.submit(Request(210 + i,
+                               rng.integers(1, cfg.n_items + 1, 8), k=k))
+        with jax.transfer_guard("disallow"):
+            results = eng.run_once()
+        assert len(results) == 4, f"served {len(results)}/4"
+        assert len(eng._compiled) == n_variants, (
+            f"hot swap minted {len(eng._compiled) - n_variants} new "
+            "compiled variant(s)")
+        return len(calls)
+
+    specs = (
+        StaticArgSpec(
+            "batch_bucket",
+            sample=tuple(range(1, max_batch + 1)),
+            mapper=lambda n, _mb=max_batch: MicroBatcher.bucket(n, _mb),
+            allowed=_pow2_buckets(max_batch),
+            max_variants=max_batch.bit_length() + 1,
+            note="pow2 padding buckets for the request batch size"),
+        StaticArgSpec(
+            "k_bucket",
+            sample=tuple(range(1, 64)) + (200, 1000, 10 ** 9),
+            mapper=lambda kv, _e=eng: _e.batch_k([kv]),
+            allowed=_pow2_buckets(eng.max_k),
+            max_variants=eng.max_k.bit_length() + 1,
+            note="client k clamped into [1, max_k] then pow2-bucketed"),
+        StaticArgSpec(
+            "head_swap",
+            sample=(0, 1, 2),
+            mapper=lambda _swap: "head-as-data",
+            allowed=frozenset({"head-as-data"}),
+            max_variants=1,
+            note="catalogue mutations are pure data: every swap maps to "
+                 "the one compiled head structure"),
+    )
+
+    return BuiltEntry(
+        fn=lambda seqs: eng._serve_fn(seqs, k, eng._head_state),
+        args=(sds,),
+        static_specs=specs,
+        dispatch_counter=count,
+        notes=f"for_seqrec_mutable, capacity={mstate.cap}, "
+              f"ladder={eng.ladder}, swap-then-serve under "
+              "transfer_guard")

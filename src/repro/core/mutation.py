@@ -1,0 +1,317 @@
+"""Streaming catalogue mutation over the pruned PQ head (ISSUE 7).
+
+Production catalogues churn — new items, delistings, embedding drift —
+but the cascade's exactness argument (docs/PRUNING.md) only needs tile
+bounds that *dominate* live item scores.  That asymmetry is the whole
+design:
+
+* **insert** — OR the new row's presence bits into its tile (bitmask) or
+  widen the tile's code range (range).  The tile's bound now covers the
+  new item exactly; every other item's coverage is untouched.  Exact,
+  never stale.
+* **delete** — flip the row's ``live`` bit off and leave its metadata
+  bits in place.  The bound can only be *looser* than a fresh build
+  (it still covers a code set that is a superset of the live items'),
+  so it still dominates and the cascade stays exact; the tombstoned item
+  itself is masked to ``-inf`` inside the scoring kernel and can never
+  surface in the top-k.  A per-tile staleness counter records the debt.
+* **update** — delete's bound-loosening plus insert's OR-in/widen for
+  the new codes, on the same row.  Exact, increasingly loose.
+
+Loose bounds cost *work* (fewer tiles pruned), never *answers* —
+:meth:`MutableHeadState.retighten` rebuilds the stalest tiles' metadata
+exactly (one ``dynamic_slice`` per tile, off the serve path) and resets
+their counters.  A full retighten is bit-identical to
+:func:`repro.core.pruning.build_pruned_state_masked` over the current
+codes + live mask — the rebuilt-from-scratch oracle the churn property
+tests compare against.
+
+Serving never sees any of this machinery: the engine consumes
+:meth:`head_arrays` — ``{"codes", "pruned", "live"}`` with *static*
+shapes (the catalogue is padded to a fixed power-of-two capacity and
+``live`` is a traced data array) — so hot-swapping a mutated head into
+``RetrievalEngine`` is a pure data swap, zero recompiles
+(``serving/engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import (BOUND_BACKENDS, DEFAULT_PRUNE_TILE,
+                                PrunedHeadState, build_pruned_state_masked,
+                                pack_presence)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class CapacityError(RuntimeError):
+    """Raised by insert when every capacity slot is live (the caller must
+    rebuild at a larger capacity — a shape change, hence a recompile)."""
+
+
+@jax.jit
+def _set_row(codes, live, slot, row):
+    return codes.at[slot].set(row), live.at[slot].set(True)
+
+
+@jax.jit
+def _clear_row(live, slot):
+    return live.at[slot].set(False)
+
+
+@partial(jax.jit, static_argnames=("b",))
+def _or_in_presence(packed, t, row, b):
+    """OR one row's presence bits into tile t's packed bitmask.  Built via
+    :func:`pack_presence` on the row's one-hot so the bit layout is
+    consistent with the bulk builders by construction."""
+    iota = jnp.arange(b, dtype=jnp.int32)
+    present = row.astype(jnp.int32)[:, None] == iota[None, :]      # (m, b)
+    word = pack_presence(present[None])[0]                         # (m, W)
+    return packed.at[t].set(packed[t] | word)
+
+
+@jax.jit
+def _widen_range(lo, hi, t, row):
+    c = row.astype(jnp.int16)
+    return lo.at[t].min(c), hi.at[t].max(c)
+
+
+@partial(jax.jit, static_argnames=("b", "tile"))
+def _retighten_tile_packed(packed, codes, live, t, b, tile):
+    """Exact rebuild of ONE tile's presence bitmask from its live rows."""
+    m = codes.shape[1]
+    rows = jax.lax.dynamic_slice(codes, (t * tile, 0), (tile, m))
+    lv = jax.lax.dynamic_slice(live, (t * tile,), (tile,))
+    iota = jnp.arange(b, dtype=jnp.int32)
+    present = ((rows.astype(jnp.int32)[:, :, None] == iota)
+               & lv[:, None, None]).any(axis=0)                    # (m, b)
+    return jax.lax.dynamic_update_slice(packed, pack_presence(present[None]),
+                                        (t, 0, 0))
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def _retighten_tile_range(lo, hi, codes, live, t, tile):
+    """Exact rebuild of ONE tile's [lo, hi] code range from its live rows
+    (same empty-tile clamp as ``_build_code_ranges_masked``)."""
+    m = codes.shape[1]
+    rows = jax.lax.dynamic_slice(codes, (t * tile, 0),
+                                 (tile, m)).astype(jnp.int32)
+    lv = jax.lax.dynamic_slice(live, (t * tile,), (tile,))[:, None]
+    lo_t = jnp.where(lv, rows, jnp.int32(2 ** 15 - 1)).min(axis=0)
+    hi_t = jnp.where(lv, rows, jnp.int32(0)).max(axis=0)
+    lo_t = jnp.minimum(lo_t, hi_t)
+    hi_t = jnp.maximum(hi_t, lo_t)
+    return (jax.lax.dynamic_update_slice(lo, lo_t[None].astype(jnp.int16),
+                                         (t, 0)),
+            jax.lax.dynamic_update_slice(hi, hi_t[None].astype(jnp.int16),
+                                         (t, 0)))
+
+
+class MutableHeadState:
+    """Host-side manager of a mutable PQ catalogue + its pruning metadata.
+
+    Holds capacity-padded device arrays with STATIC shapes — ``codes``
+    (cap, m), ``live`` (cap,) bool, a flat :class:`PrunedHeadState` over
+    the padded catalogue — plus host bookkeeping: a freelist of
+    tombstoned slots (insert reuses them, so capacity is an amortised
+    bound on *live* items, not on mutation count) and a per-tile
+    staleness counter driving lazy re-tightening.
+
+    Not a pytree and never traced: mutations are tiny jitted updates
+    (O(tile) or O(m·b), one compile each for the life of the process),
+    and serving reads one immutable snapshot via :meth:`head_arrays`.
+    Like the frozen head, row 0 is the id-0 padding row and stays live.
+    """
+
+    def __init__(self, codes, live, state: PrunedHeadState,
+                 staleness: np.ndarray, free: list, n_rows: int):
+        self.codes = codes
+        self.live = live
+        self.state = state
+        self.staleness = staleness
+        self.free = free
+        self.n_rows = n_rows          # high-water mark of ever-used slots
+        self.n_mutations = 0
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def build(cls, codes, b: int, tile: int = DEFAULT_PRUNE_TILE, *,
+              backend: str = "bitmask",
+              capacity: Optional[int] = None) -> "MutableHeadState":
+        """Pad ``codes`` (n, m) to a pow2 capacity (>= tile, a tile
+        multiple — so every tile slice is full and `dynamic_slice` stays
+        in bounds), mark rows [0, n) live, and build exact live-masked
+        tile metadata.  Pass ``capacity`` for extra insert headroom; any
+        later capacity change is a shape change (rebuild + recompile)."""
+        if backend not in BOUND_BACKENDS:
+            raise ValueError(f"unknown bound backend {backend!r}")
+        n, m = codes.shape
+        tile = max(1, min(int(tile), n))
+        cap = next_pow2(max(n, 1)) if capacity is None else int(capacity)
+        cap = max(cap, tile, n)
+        cap = -(-cap // tile) * tile
+        codes_cap = jnp.zeros((cap, m), codes.dtype).at[:n].set(codes)
+        live = jnp.zeros((cap,), jnp.bool_).at[:n].set(True)
+        state = build_pruned_state_masked(codes_cap, live, b, tile,
+                                          backend=backend)
+        return cls(codes_cap, live, state,
+                   staleness=np.zeros(state.n_tiles, np.int64),
+                   free=[], n_rows=n)
+
+    # -- properties -------------------------------------------------------
+
+    @property
+    def cap(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.codes.shape[1]
+
+    @property
+    def tile(self) -> int:
+        return self.state.tile
+
+    @property
+    def b(self) -> int:
+        return self.state.b
+
+    @property
+    def backend(self) -> str:
+        return self.state.backend
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    # -- mutations --------------------------------------------------------
+
+    def _check_row(self, row):
+        row = jnp.asarray(row, self.codes.dtype)
+        if row.shape != (self.m,):
+            raise ValueError(f"item row shape {row.shape} != ({self.m},)")
+        return row
+
+    def _absorb(self, slot: int, row) -> None:
+        """OR/widen tile metadata so it covers ``row`` at ``slot`` — the
+        exact-on-insert half of every mutation."""
+        t = slot // self.tile
+        if self.backend == "range":
+            lo, hi = _widen_range(self.state.code_lo, self.state.code_hi,
+                                  t, row)
+            self.state = dataclasses.replace(self.state, code_lo=lo,
+                                             code_hi=hi)
+        else:
+            packed = _or_in_presence(self.state.packed, t, row, self.b)
+            self.state = dataclasses.replace(self.state, packed=packed)
+
+    def insert(self, row) -> int:
+        """Add an item; returns its slot (= item id).  Reuses the oldest
+        tombstoned slot when one exists.  Exact: the new row's bits enter
+        the tile metadata immediately; a reused slot's tile keeps its
+        previous staleness (the dead predecessor's bits are still there)."""
+        row = self._check_row(row)
+        if self.free:
+            slot = self.free.pop(0)
+        elif self.n_rows < self.cap:
+            slot = self.n_rows
+            self.n_rows += 1
+        else:
+            raise CapacityError(
+                f"catalogue capacity {self.cap} exhausted ({self.n_live} "
+                f"live); rebuild with MutableHeadState.build(capacity="
+                f"{self.cap * 2}) and engine swap at the new shape")
+        self.codes, self.live = _set_row(self.codes, self.live, slot, row)
+        self._absorb(slot, row)
+        self.n_mutations += 1
+        return slot
+
+    def delete(self, item_id: int) -> None:
+        """Tombstone an item: live bit off, metadata untouched (bounds go
+        stale-but-dominating), slot queued for reuse."""
+        item_id = int(item_id)
+        if not (0 < item_id < self.cap):
+            raise ValueError(f"item id {item_id} out of range (0, {self.cap})"
+                             " — row 0 is the reserved padding id")
+        if not bool(self.live[item_id]):
+            raise ValueError(f"item {item_id} is not live")
+        self.live = _clear_row(self.live, item_id)
+        self.free.append(item_id)
+        self.staleness[item_id // self.tile] += 1
+        self.n_mutations += 1
+
+    def update(self, item_id: int, row) -> None:
+        """Re-code a live item in place: the new codes are absorbed
+        (exact), the old codes' bits linger (stale)."""
+        item_id = int(item_id)
+        if not (0 <= item_id < self.cap) or not bool(self.live[item_id]):
+            raise ValueError(f"item {item_id} is not live")
+        row = self._check_row(row)
+        self.codes, self.live = _set_row(self.codes, self.live, item_id, row)
+        self._absorb(item_id, row)
+        self.staleness[item_id // self.tile] += 1
+        self.n_mutations += 1
+
+    # -- maintenance ------------------------------------------------------
+
+    def retighten(self, tile_ids=None, max_tiles: Optional[int] = None):
+        """Exactly rebuild the stalest tiles' metadata (off the serve
+        path).  Default: every tile with staleness > 0, stalest first;
+        ``max_tiles`` bounds the work per call.  Returns the tile ids
+        re-tightened.  After retightening ALL stale tiles the state is
+        bit-identical to :meth:`rebuild_oracle`."""
+        if tile_ids is None:
+            order = np.argsort(-self.staleness, kind="stable")
+            tile_ids = [int(t) for t in order if self.staleness[t] > 0]
+        else:
+            tile_ids = [int(t) for t in tile_ids]
+        if max_tiles is not None:
+            tile_ids = tile_ids[:int(max_tiles)]
+        st = self.state
+        for t in tile_ids:
+            if st.backend == "range":
+                lo, hi = _retighten_tile_range(st.code_lo, st.code_hi,
+                                               self.codes, self.live, t,
+                                               tile=st.tile)
+                st = dataclasses.replace(st, code_lo=lo, code_hi=hi)
+            else:
+                packed = _retighten_tile_packed(st.packed, self.codes,
+                                                self.live, t, b=st.b,
+                                                tile=st.tile)
+                st = dataclasses.replace(st, packed=packed)
+            self.staleness[t] = 0
+        self.state = st
+        return tile_ids
+
+    def rebuild_oracle(self) -> PrunedHeadState:
+        """From-scratch exact state over the current codes + live mask —
+        the bit-parity reference for retighten and the churn tests."""
+        return build_pruned_state_masked(self.codes, self.live, self.b,
+                                         self.tile, backend=self.backend)
+
+    # -- serving snapshot -------------------------------------------------
+
+    def head_arrays(self) -> Dict[str, object]:
+        """Immutable snapshot for the serving head: merge into
+        ``params["item_emb"]`` (or hand to ``engine.swap_head_state``).
+        All shapes/dtypes are mutation-invariant, so swapping snapshots
+        never recompiles."""
+        return {"codes": self.codes, "pruned": self.state,
+                "live": self.live}
+
+    def stats(self) -> Dict[str, float]:
+        return {"capacity": float(self.cap), "n_live": float(self.n_live),
+                "n_free": float(len(self.free)),
+                "n_mutations": float(self.n_mutations),
+                "stale_tiles": float(int((self.staleness > 0).sum())),
+                "max_staleness": float(int(self.staleness.max()))}

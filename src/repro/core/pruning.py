@@ -327,6 +327,81 @@ def build_pruned_state(codes: jax.Array, b: int,
                            n_local=n_local)
 
 
+@partial(jax.jit, static_argnames=("b", "tile"))
+def _build_present_masked(codes: jax.Array, live: jax.Array, b: int,
+                          tile: int) -> jax.Array:
+    """Presence scatter over LIVE rows only — dead rows (tombstones,
+    capacity padding of a mutable catalogue) are scattered off the end of
+    the tile axis and dropped, so they contribute no presence bits and the
+    result equals a fresh build over the live items alone."""
+    n, m = codes.shape
+    n_tiles = -(-n // tile)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    t_ids = jnp.where(live, rows // tile, jnp.int32(n_tiles))
+    present = jnp.zeros((n_tiles, m, b), jnp.bool_)
+    for k in range(m):
+        present = present.at[t_ids, k, codes[:, k].astype(jnp.int32)].set(
+            True, mode="drop")
+    return present
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def _build_code_ranges_masked(codes: jax.Array, live: jax.Array, tile: int
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Live-masked variant of :func:`_build_code_ranges`: dead rows are
+    excluded from the min/max exactly like tile-alignment padding rows."""
+    n, m = codes.shape
+    n_tiles = -(-n // tile)
+    pad = n_tiles * tile - n
+    c = codes.astype(jnp.int32)
+    lv = live
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        lv = jnp.pad(lv, (0, pad))
+    c3 = c.reshape(n_tiles, tile, m)
+    real = lv.reshape(n_tiles, tile, 1)
+    lo = jnp.where(real, c3, jnp.int32(2 ** 15 - 1)).min(axis=1)
+    hi = jnp.where(real, c3, jnp.int32(0)).max(axis=1)
+    # A fully-dead tile degenerates to lo=32767 > hi=0; clamp it to the
+    # one-code range [0, 0] so the segment-max gather indices stay in
+    # bounds.  Its bound is then the code-0 max — sound for a tile whose
+    # every item the live mask removes from the top-k anyway.
+    lo = jnp.minimum(lo, hi)
+    hi = jnp.maximum(hi, lo)
+    return lo.astype(jnp.int16), hi.astype(jnp.int16)
+
+
+def build_pruned_state_masked(codes: jax.Array, live: jax.Array, b: int,
+                              tile: int = DEFAULT_PRUNE_TILE, *,
+                              backend: str = "bitmask") -> PrunedHeadState:
+    """Flat (shards=1) state whose metadata covers LIVE rows only.
+
+    This is the mutable catalogue's fresh-build / re-tighten oracle
+    (core/mutation.py): tombstoned and capacity-padding rows contribute
+    nothing, so the bounds are as tight as a from-scratch build over the
+    live items alone.  ``build_pruned_state(codes, ...)`` equals
+    ``build_pruned_state_masked(codes, ones, ...)`` bit-for-bit.
+    """
+    if backend not in BOUND_BACKENDS:
+        raise ValueError(f"unknown bound backend {backend!r}; "
+                         f"one of {BOUND_BACKENDS}")
+    if backend == "range" and b > 2 ** 15:
+        raise ValueError(f"bound backend 'range' stores int16 ranges; "
+                         f"b={b} exceeds int16")
+    n = codes.shape[0]
+    if live.shape != (n,):
+        raise ValueError(f"live mask shape {live.shape} != ({n},)")
+    t = max(1, min(int(tile), n))
+    if backend == "range":
+        lo, hi = _build_code_ranges_masked(codes, live, t)
+        return PrunedHeadState(None, tile=t, n_items=n, b=b, shards=1,
+                               n_local=n, backend="range",
+                               code_lo=lo, code_hi=hi)
+    return PrunedHeadState(
+        pack_presence(_build_present_masked(codes, live, b, t)),
+        tile=t, n_items=n, b=b, shards=1, n_local=n)
+
+
 def abstract_pruned_state(n_items: int, m: int, b: int,
                           tile: int = DEFAULT_PRUNE_TILE, *,
                           shards: int = 1,
@@ -555,7 +630,8 @@ def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
                        seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                        n_items: Optional[int] = None,
                        id_offset=0,
-                       degenerate: Optional[jax.Array] = None):
+                       degenerate: Optional[jax.Array] = None,
+                       live: Optional[jax.Array] = None):
     """In-graph theta seeding -> (theta (B,), n_seed_used i32, survival f32).
 
     ``seed_policy="greedy"``: one exact pass over the ``seed_tiles`` most
@@ -571,6 +647,14 @@ def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
     ``degenerate`` (T,) bool de-prioritises full-hull range tiles in the
     seed ordering (:func:`seed_order_key`); theta certification is
     unaffected by ordering.
+
+    ``live`` (n,) bool (tombstone mask over LOCAL rows, mutable
+    catalogues) excludes dead items from the exact seed scores.  This is
+    a correctness requirement, not an optimisation: a dead high-scorer
+    would certify a theta that live items cannot reach, and the scoring
+    pass (which masks dead items to -inf) could then return fewer than k
+    items above theta — the cascade would no longer be exact over the
+    live catalogue.
     """
     from repro.kernels.pqtopk import ref as pq_ref
 
@@ -592,6 +676,8 @@ def theta_seed_ingraph(codes: jax.Array, s: jax.Array, bounds: jax.Array,
         local = (tile_ids[:, None] * tile
                  + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
         valid = (id_offset + local < limit) & (local < n)
+        if live is not None:
+            valid = valid & live[local]
         return jnp.where(valid[None, :], sc, NEG_INF)
 
     def merge(vals, sc):
@@ -653,7 +739,8 @@ def theta_seed_perquery(codes: jax.Array, s: jax.Array, bounds: jax.Array,
                         seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                         n_items: Optional[int] = None,
                         id_offset=0,
-                        degenerate: Optional[jax.Array] = None):
+                        degenerate: Optional[jax.Array] = None,
+                        live: Optional[jax.Array] = None):
     """Per-query theta seeding -> (theta (B,), n_seed_used i32, survival).
 
     Unlike :func:`theta_seed_ingraph` — which seeds one SHARED tile set
@@ -697,6 +784,10 @@ def theta_seed_perquery(codes: jax.Array, s: jax.Array, bounds: jax.Array,
                  + jnp.arange(tile, dtype=jnp.int32)[None, None, :]
                  ).reshape(bq, -1)
         valid = (id_offset + local < limit) & (local < n)
+        if live is not None:
+            # Same tombstone exclusion as theta_seed_ingraph: a dead
+            # high-scorer must not certify a theta live items can't reach.
+            valid = valid & live[local]
         return jnp.where(valid, sc, NEG_INF)
 
     def merge(vals, sc):
@@ -915,6 +1006,7 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
                          ladder=None,
                          query_grouping: bool = False,
                          n_groups: int = DEFAULT_N_GROUPS,
+                         live: Optional[jax.Array] = None,
                          use_kernel: Optional[bool] = None,
                          interpret: Optional[bool] = None,
                          return_stats: bool = False):
@@ -944,6 +1036,16 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
     survivor count (one shared ladder, sentinel slots make light groups
     free).  ``n_groups=1`` recovers the batch-any route exactly.
 
+    ``live`` (n,) bool is the mutable-catalogue tombstone mask: dead rows
+    (delisted items, capacity padding) are excluded from theta seeding and
+    masked to ``-inf`` inside the scoring pass, and their winner ids are
+    remapped to the sentinel id ``n`` — so a tombstoned item can never
+    surface in the top-k, while stale (loosened) tile bounds still
+    dominate every LIVE item's score and the result stays bit-identical
+    to a cascade over a freshly rebuilt live-only head
+    (docs/PRUNING.md §Catalogue mutation).  ``live`` is a traced *data*
+    array, so flipping tombstones never recompiles.
+
     Pure function of (codes, s, state): jittable, vmappable, decode-loop
     and shard_map safe.  Bit-identical to ``score_pqtopk + tiled_topk``
     (values AND ids, ties included).  With ``return_stats`` the traced
@@ -966,6 +1068,9 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
             f"sharded layout")
     tile = state.tile
     bq = s.shape[0]
+    if live is not None and live.shape[0] != codes.shape[0]:
+        raise ValueError(f"live mask covers {live.shape[0]} rows but the "
+                         f"catalogue has {codes.shape[0]}")
     bounds = tile_bounds(state, s)
     t_total = bounds.shape[1]
     if ladder is None and slot_budget is not None:
@@ -974,7 +1079,7 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
     seed_kw = dict(seed_policy=seed_policy, seed_tiles=seed_tiles,
                    seed_max_tiles=seed_max_tiles,
                    seed_stab_tol=seed_stab_tol,
-                   degenerate=degenerate_tile_mask(state))
+                   degenerate=degenerate_tile_mask(state), live=live)
     grouped = query_grouping and n_groups > 1
     if grouped:
         bt = kernel_ops.group_batch_tile(bq, n_groups)
@@ -986,7 +1091,7 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
         slot_lists = [slots2d[:, :r] for r in rungs]
         vals, ids, rung = kernel_ops.pq_topk_tiles_ladder(
             codes, jnp.take(s, perm, axis=0), k, slot_lists, counts,
-            tile=tile, batch_tile=bt, use_kernel=use_kernel,
+            tile=tile, batch_tile=bt, live=live, use_kernel=use_kernel,
             interpret=interpret)
         vals = jnp.take(vals, inv, axis=0)
         ids = jnp.take(ids, inv, axis=0)
@@ -1009,7 +1114,7 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
         slots_full, count = compact_mask(mask)
         slot_lists = [slots_full[:r] for r in rungs]
         vals, ids, rung = kernel_ops.pq_topk_tiles_ladder(
-            codes, s, k, slot_lists, count, tile=tile,
+            codes, s, k, slot_lists, count, tile=tile, live=live,
             use_kernel=use_kernel, interpret=interpret)
         bt = kernel_ops.effective_batch_tile(bq)
         max_group = count
@@ -1106,7 +1211,8 @@ def survival_count(codes: jax.Array, s: jax.Array, k: int,
                    seed_policy: str = "greedy",
                    seed_tiles: int = DEFAULT_SEED_TILES,
                    seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
-                   seed_stab_tol: float = DEFAULT_SEED_STAB_TOL) -> jax.Array:
+                   seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
+                   live: Optional[jax.Array] = None) -> jax.Array:
     """Surviving-tile count for one query batch (i32 scalar) — the cheap
     bounds+theta prefix of the cascade, no scoring pass.  What the engine's
     one-shot calibration runs to collect the survival stats that
@@ -1116,7 +1222,7 @@ def survival_count(codes: jax.Array, s: jax.Array, k: int,
         codes, s, bounds, k, tile=state.tile, seed_policy=seed_policy,
         seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
         seed_stab_tol=seed_stab_tol,
-        degenerate=degenerate_tile_mask(state))
+        degenerate=degenerate_tile_mask(state), live=live)
     return survival_mask(bounds, theta).sum(dtype=jnp.int32)
 
 
@@ -1127,6 +1233,7 @@ def survival_count_grouped(codes: jax.Array, s: jax.Array, k: int,
                            seed_tiles: int = DEFAULT_SEED_TILES,
                            seed_max_tiles: int = DEFAULT_SEED_MAX_TILES,
                            seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
+                           live: Optional[jax.Array] = None,
                            ) -> jax.Array:
     """MAX per-group surviving-tile count for one query batch (i32) — the
     group-aware calibration observable: the grouped ladder escalates on
@@ -1143,7 +1250,7 @@ def survival_count_grouped(codes: jax.Array, s: jax.Array, k: int,
         codes, s, bounds, k, tile=state.tile, seed_policy=seed_policy,
         seed_tiles=seed_tiles, seed_max_tiles=seed_max_tiles,
         seed_stab_tol=seed_stab_tol,
-        degenerate=degenerate_tile_mask(state))
+        degenerate=degenerate_tile_mask(state), live=live)
     pq_mask = survival_mask_perquery(bounds, theta)
     _, _, _, counts = group_and_compact(pq_mask, n_groups=n_groups,
                                         batch_tile=batch_tile)

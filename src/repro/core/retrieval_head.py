@@ -147,6 +147,11 @@ def top_items(params: Params, phi: jax.Array, k: int,
     the route additionally return the ladder rung taken — still one
     dispatch).
     """
+    if params.get("live") is not None and method != "pqtopk_pruned":
+        raise ValueError(
+            f"params carry a tombstone mask ('live') but method {method!r} "
+            f"would ignore it and could return delisted items; mutable "
+            f"catalogues serve via 'pqtopk_pruned'")
     if method == "pqtopk_fused":
         if not is_pq(params):
             raise ValueError("method 'pqtopk_fused' requires a PQ head")
@@ -220,8 +225,13 @@ def _top_items_pruned_ingraph(params, phi, k, *,
     device->host sync.  Bit-identical to the exhaustive oracle; jit /
     decode-loop safe.  ``return_rung=True`` appends the ladder rung taken
     (i32) to the outputs — same single dispatch.
+
+    A ``"live"`` entry in params (mutable catalogues, core/mutation.py)
+    is the tombstone mask: threaded into the cascade as traced data, so
+    churn never recompiles and dead items never reach the top-k.
     """
     codes, sub_emb = params["codes"], params["sub_emb"]
+    live = params.get("live")
     s = scoring.subid_scores(sub_emb.astype(jnp.float32),
                              phi.astype(jnp.float32))
     state = _pruned_state(params)
@@ -240,7 +250,7 @@ def _top_items_pruned_ingraph(params, phi, k, *,
     out = pruning.cascade_topk_ingraph(codes, s, k, state,
                                        tile=DEFAULT_PRUNE_TILE,
                                        slot_budget=slot_budget,
-                                       ladder=ladder,
+                                       ladder=ladder, live=live,
                                        return_stats=return_rung,
                                        **_seed_kwargs(pq_cfg),
                                        **_grouping_kwargs(pq_cfg))
@@ -362,6 +372,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
         raise ValueError("top_items_pruned_sharded requires a PQ head")
     from repro.kernels.pqtopk import ops as kernel_ops
     codes, sub_emb = params["codes"], params["sub_emb"]
+    live = params.get("live")
     n = codes.shape[0]
     n_shards = mesh.shape[axis]
     pad = (-n) % n_shards
@@ -415,7 +426,8 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
           else kernel_ops.effective_batch_tile(bq))
     b_pad = -(-bq // bt) * bt
 
-    def shard_body(codes_local, meta_local, sub_emb_, phi_):
+    def shard_body(codes_local, meta_local, sub_emb_, phi_,
+                   live_local=None):
         s = scoring.subid_scores(sub_emb_.astype(jnp.float32),
                                  phi_.astype(jnp.float32))
         bounds = pruning.bounds_from_parts(state.backend, meta_local, s)
@@ -426,7 +438,8 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                    else pruning.theta_seed_ingraph)
         theta_local, n_seed_used, _sf = seed_fn(
             codes_local, s, bounds, k, tile=tile, n_items=n,
-            id_offset=offset, degenerate=degenerate, **seed_kw)
+            id_offset=offset, degenerate=degenerate, live=live_local,
+            **seed_kw)
         # Per-query certified threshold: each shard's theta_q certifies
         # >= k items somewhere score >= theta_q, so the per-query max over
         # shards is still certified — and the tightest any shard proves.
@@ -438,7 +451,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
             slot_lists = tuple(slots2d[:, :r] for r in rungs)
             lv, li, rung = kernel_ops._pq_topk_tiles_ladder(
                 codes_local, jnp.take(s, perm, axis=0), k_local, slot_lists,
-                counts, tile=tile, batch_tile=bt,
+                counts, tile=tile, batch_tile=bt, live=live_local,
                 use_kernel=use_kernel, interpret=interpret)
             # Back to request order before anything cross-shard.
             lv = jnp.take(lv, inv_p, axis=0)
@@ -453,11 +466,17 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
             slot_lists = tuple(slots_full[:r] for r in rungs)
             lv, li, rung = kernel_ops._pq_topk_tiles_ladder(
                 codes_local, s, k_local, slot_lists, count, tile=tile,
-                batch_tile=bt, use_kernel=use_kernel, interpret=interpret)
+                batch_tile=bt, live=live_local, use_kernel=use_kernel,
+                interpret=interpret)
             max_group = count
             pairs = count * jnp.int32(b_pad)
         gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
         lv = jnp.where(gid < n, lv, -jnp.inf)
+        if live_local is not None:
+            # Dead winners already carry the LOCAL sentinel id (n_local);
+            # re-point every -inf candidate at the GLOBAL sentinel n so
+            # the cross-shard merge sees one uniform "no item" id.
+            gid = jnp.where(lv == -jnp.inf, jnp.int32(n), gid)
         if k_local > k:
             lv, sel = jax.lax.top_k(lv, k)
             gid = jnp.take_along_axis(gid, sel, axis=1)
@@ -470,12 +489,29 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                 jax.lax.psum(pairs, axis),
                 jax.lax.psum(count * jnp.int32(b_pad), axis))
 
-    fn = manual_axis_map(
-        shard_body, mesh,
-        in_specs=(P(axis, None), meta_specs, P(), P()),
-        out_specs=(P(),) * 9)
+    if live is None:
+        fn = manual_axis_map(
+            shard_body, mesh,
+            in_specs=(P(axis, None), meta_specs, P(), P()),
+            out_specs=(P(),) * 9)
+        outs = fn(codes_p, meta_parts, sub_emb, phi)
+    else:
+        # Tombstone mask rides the mesh axis alongside the codes (shard
+        # padding rows are dead); everything else is the same ONE
+        # shard_map — churn is pure data, so zero recompiles per swap.
+        live_p = jnp.pad(live, (0, pad)) if pad else live
+
+        def body_live(codes_local, meta_local, live_local, sub_emb_, phi_):
+            return shard_body(codes_local, meta_local, sub_emb_, phi_,
+                              live_local=live_local)
+
+        fn = manual_axis_map(
+            body_live, mesh,
+            in_specs=(P(axis, None), meta_specs, P(axis), P(), P()),
+            out_specs=(P(),) * 9)
+        outs = fn(codes_p, meta_parts, live_p, sub_emb, phi)
     (vals, ids, survived, n_seed_used, rung, n_scored, max_group,
-     pairs_scored, pairs_union) = fn(codes_p, meta_parts, sub_emb, phi)
+     pairs_scored, pairs_union) = outs
     if not return_stats:
         return vals, ids
     total = n_shards * t_local
@@ -519,6 +555,11 @@ def top_items_sharded(params: Params, phi: jax.Array, k: int, mesh,
     if method == "pqtopk_pruned":
         return top_items_pruned_sharded(params, phi, k, mesh, axis,
                                         pq_cfg=pq_cfg, ladder=ladder)
+    if params.get("live") is not None:
+        raise ValueError(
+            f"params carry a tombstone mask ('live') but method {method!r} "
+            "would ignore it and could return delisted items; mutable "
+            "catalogues serve via 'pqtopk_pruned'")
     n = params["codes"].shape[0]
     n_shards = mesh.shape[axis]
     pad = (-n) % n_shards

@@ -142,8 +142,17 @@ def _tile_topk(scores, k: int, blocks: int):
     return v, jnp.take_along_axis(cand_i, sel, axis=1)
 
 
-def pq_topk_fused_kernel(idx_ref, codes_ref, s_ref, out_v_ref, out_i_ref, *,
-                         k: int, tile: int, n_items: int, blocks: int):
+def pq_topk_fused_kernel(idx_ref, codes_ref, s_ref, *rest,
+                         k: int, tile: int, n_items: int, blocks: int,
+                         has_live: bool = False):
+    if has_live:
+        # Tombstone route (mutable catalogues): a (1, TN) int8 live row
+        # rides along each codes tile under the SAME clamped index map, so
+        # delisted items are masked to -inf inside the tile top-k — before
+        # they can crowd a live winner out of the per-tile candidate set.
+        live_ref, out_v_ref, out_i_ref = rest
+    else:
+        out_v_ref, out_i_ref = rest
     if len(idx_ref.shape) == 2:
         # Grouped route: grid (n_batch_tiles, n_slots) — batch tile j's
         # slot i reads its own row of the 2D (group, slot) table.
@@ -171,7 +180,10 @@ def pq_topk_fused_kernel(idx_ref, codes_ref, s_ref, out_v_ref, out_i_ref, *,
         # Mask padding beyond the true catalogue size; legacy past-catalogue
         # sentinel tiles land entirely here.
         global_col = col + tile_id * tile
-        scores = jnp.where(global_col < n_items, scores, NEG_INF)
+        ok = global_col < n_items
+        if has_live:
+            ok = ok & (live_ref[...] != 0)            # (1, TN) broadcast
+        scores = jnp.where(ok, scores, NEG_INF)
         vals, cols = _tile_topk(scores, k, blocks)
         out_v_ref[...] = vals[:, None, :]
         out_i_ref[...] = (cols + tile_id * tile)[:, None, :]
@@ -203,6 +215,7 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
                        tile: int = DEFAULT_TILE,
                        batch_tile: int = DEFAULT_BATCH_TILE,
                        oversample: int = DEFAULT_OVERSAMPLE,
+                       live: jax.Array = None,
                        interpret: bool = False):
     """-> (vals (B, n_slots, K), ids (B, n_slots, K)) per-slot winners with
     *global* item ids; merge outside.
@@ -217,6 +230,14 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
     pipeline re-uses one already-fetched block instead of issuing per-slot
     DMAs.  ``codes`` rows must cover every indexed tile; ``s``'s batch
     must divide by ``batch_tile``.
+
+    ``live`` (N/tile, tile) int8 is the optional tombstone mask, row t the
+    liveness of codes tile t (0 = delisted / padding).  It streams through
+    VMEM as a (1, tile) block under the SAME clamped index map as the
+    codes tile, so each slot masks ITS tile's dead items to -inf inside
+    the tile top-k; the sentinel-clamp contract (``-1`` -> block 0) is
+    unchanged.  Extra HBM traffic: 1 byte/item — noise next to the m
+    bytes/item of codes.
     """
     n, m = codes.shape
     bq, m2, b = s.shape
@@ -224,8 +245,11 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
     assert bq % batch_tile == 0, (bq, batch_tile)
     n_bt = bq // batch_tile
     blocks = pick_blocks(tile, k, oversample)
+    if live is not None:
+        assert live.shape == (n // tile, tile), (live.shape, n, tile)
     kern = functools.partial(pq_topk_fused_kernel, k=k, tile=tile,
-                             n_items=n_items, blocks=blocks)
+                             n_items=n_items, blocks=blocks,
+                             has_live=live is not None)
     # The 1D and 2D layouts share every block shape; they differ only in
     # grid order (1D: batch innermost so each codes tile is fetched once;
     # 2D: slots innermost so each group's S block is fetched once) and in
@@ -244,16 +268,25 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
         codes_block = lambda i, j, idx_ref: jnp.maximum(idx_ref[i], 0)
     out_spec = pl.BlockSpec(
         (batch_tile, 1, k), lambda a, c, idx_ref: (bt(a, c), slot(a, c), 0))
+    in_specs = [
+        pl.BlockSpec((tile, m),
+                     lambda a, c, idx_ref: (codes_block(a, c, idx_ref),
+                                            0)),
+        pl.BlockSpec((batch_tile, m, b),
+                     lambda a, c, idx_ref: (bt(a, c), 0, 0)),
+    ]
+    operands = [codes, s]
+    if live is not None:
+        # Same clamped tile index map as codes: sentinel slots re-read an
+        # already-fetched live row exactly like they re-read codes block 0.
+        in_specs.append(pl.BlockSpec(
+            (1, tile),
+            lambda a, c, idx_ref: (codes_block(a, c, idx_ref), 0)))
+        operands.append(live)
     grid_spec = compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile, m),
-                         lambda a, c, idx_ref: (codes_block(a, c, idx_ref),
-                                                0)),
-            pl.BlockSpec((batch_tile, m, b),
-                         lambda a, c, idx_ref: (bt(a, c), 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[out_spec, out_spec],
     )
     return pl.pallas_call(
@@ -264,4 +297,4 @@ def pq_topk_fused_call(codes: jax.Array, s: jax.Array, k: int, *,
             jax.ShapeDtypeStruct((bq, n_slots, k), jnp.int32),
         ],
         interpret=interpret,
-    )(tile_idx.astype(jnp.int32), codes, s)
+    )(tile_idx.astype(jnp.int32), *operands)

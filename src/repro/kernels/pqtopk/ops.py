@@ -94,6 +94,13 @@ def _merge_slot_winners(tv: jax.Array, ti: jax.Array, k: int):
     return fv, jnp.take_along_axis(ti.reshape(bq, slots * kk), fi, axis=1)
 
 
+def _remap_dead(fv: jax.Array, fi: jax.Array, n: int):
+    """Tombstone-route winner cleanup: any ``-inf`` winner (a dead item, a
+    sentinel slot, or a catalogue with < k live items) gets the sentinel id
+    ``n`` — callers see one uniform "no item here" id, never a dead row."""
+    return fv, jnp.where(fv == NEG_INF, jnp.int32(n), fi)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def pq_scores(codes: jax.Array, s: jax.Array, *, tile: int = _k.DEFAULT_TILE,
               interpret: bool | None = None) -> jax.Array:
@@ -135,19 +142,32 @@ def pq_topk(codes: jax.Array, s: jax.Array, k: int, *,
 
 def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
                    tile_idx: jax.Array, *, tile: int, batch_tile: int,
-                   use_kernel: bool, interpret: bool):
+                   use_kernel: bool, interpret: bool, live=None):
     """Non-jitted core of :func:`pq_topk_tiles` (shard_map bodies call this
     directly so the jit boundary stays at the outer dispatch).
 
     ``tile_idx`` may be 1D (one compacted list for the whole batch) or 2D
     ``(n_batch_tiles, n_slots)`` (the grouped route: each kernel batch
-    tile scores its own slot row)."""
+    tile scores its own slot row).
+
+    ``live`` (N,) bool tombstone mask (mutable catalogues): dead items'
+    scores are masked to -inf *inside* the tile top-k — post-hoc masking
+    would be inexact, a dead item can crowd a live winner out of a tile's
+    local candidate set — and dead winners' ids are remapped to the
+    sentinel id ``n`` so they are indistinguishable from padding."""
     n, m = codes.shape
     bq = s.shape[0]
     tile = min(tile, _round_up(n, 128))
     if k > tile:
         raise ValueError(f"k={k} > tile={tile}")
     padded = _pad_codes(codes, tile, sentinel=True)
+    live2 = None
+    if live is not None:
+        lv = live.astype(jnp.int8)
+        pad = padded.shape[0] - n
+        if pad:
+            lv = jnp.pad(lv, (0, pad))      # padding + sentinel tile: dead
+        live2 = lv.reshape(-1, tile)
     bt = effective_batch_tile(bq, batch_tile)
     grouped = tile_idx.ndim == 2
     if grouped and tile_idx.shape[0] * bt < bq:
@@ -158,8 +178,11 @@ def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
         tv, ti = _k.pq_topk_fused_call(padded, _pad_batch(s, bt), k,
                                        tile_idx=tile_idx, n_items=n,
                                        tile=tile, batch_tile=bt,
-                                       interpret=interpret)
-        return _merge_slot_winners(tv[:bq], ti[:bq], k)
+                                       live=live2, interpret=interpret)
+        fv, fi = _merge_slot_winners(tv[:bq], ti[:bq], k)
+        if live is not None:
+            fv, fi = _remap_dead(fv, fi, n)
+        return fv, fi
     # XLA path: gather the surviving tiles' codes, score them with the
     # shared-accumulation-order oracle, top-k over the compacted axis and
     # map positions back to global ids.  tile_idx is ascending (plus
@@ -182,26 +205,38 @@ def _pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
             sc = _ref.pq_scores(sel.reshape(n_slots * tile, m), s_g)
             gid = (idx_row[:, None] * tile
                    + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
-            sc = jnp.where(gid[None, :] < n, sc, NEG_INF)
+            ok = gid < n
+            if live2 is not None:
+                ok = ok & (live2[idx_row].reshape(-1) != 0)
+            sc = jnp.where(ok[None, :], sc, NEG_INF)
             fv, pos = topk_lib.tiled_topk(sc, k)
             return fv, jnp.take(gid, pos)
 
         fv, fi = jax.vmap(group_fn)(tile_idx, s3)       # (n_bt, bt, k)
-        return (fv.reshape(-1, k)[:bq], fi.reshape(-1, k)[:bq])
+        fv, fi = fv.reshape(-1, k)[:bq], fi.reshape(-1, k)[:bq]
+        if live is not None:
+            fv, fi = _remap_dead(fv, fi, n)
+        return fv, fi
     n_slots = tile_idx.shape[0]
     sel = codes3[tile_idx]                              # (L, tile, m)
     scores = _ref.pq_scores(sel.reshape(n_slots * tile, m), s)
     gid = (tile_idx[:, None] * tile
            + jnp.arange(tile, dtype=jnp.int32)[None, :]).reshape(-1)
-    scores = jnp.where(gid[None, :] < n, scores, NEG_INF)
+    ok = gid < n
+    if live2 is not None:
+        ok = ok & (live2[tile_idx].reshape(-1) != 0)
+    scores = jnp.where(ok[None, :], scores, NEG_INF)
     fv, pos = topk_lib.tiled_topk(scores, k)
-    return fv, jnp.take(gid, pos)
+    fv, fi = fv, jnp.take(gid, pos)
+    if live is not None:
+        fv, fi = _remap_dead(fv, fi, n)
+    return fv, fi
 
 
 def _pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
                           slot_lists, count: jax.Array, *, tile: int,
                           batch_tile: int, use_kernel: bool,
-                          interpret: bool):
+                          interpret: bool, live=None):
     """Non-jitted ladder core (shard_map bodies call this directly).
 
     ``slot_lists`` is a tuple of ``-1``-padded compacted tile buffers of
@@ -222,7 +257,7 @@ def _pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
             v, ii = _pq_topk_tiles(codes, s, k, slot_lists[i], tile=tile,
                                    batch_tile=batch_tile,
                                    use_kernel=use_kernel,
-                                   interpret=interpret)
+                                   interpret=interpret, live=live)
             return v, ii, jnp.int32(i)
         if i == len(slot_lists) - 1:
             return run
@@ -236,6 +271,7 @@ def _pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
 def pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
                          slot_lists, count: jax.Array, *, tile: int,
                          batch_tile: int = _k.DEFAULT_BATCH_TILE,
+                         live: jax.Array | None = None,
                          use_kernel: bool | None = None,
                          interpret: bool | None = None):
     """Slot-budget-ladder scoring over compacted tile buffers (the
@@ -250,7 +286,7 @@ def pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
     return _pq_topk_tiles_ladder(
         codes, s, k, tuple(jnp.asarray(sl, jnp.int32) for sl in slot_lists),
         count, tile=tile, batch_tile=batch_tile, use_kernel=use_kernel,
-        interpret=interpret)
+        interpret=interpret, live=live)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "tile", "batch_tile",
@@ -258,6 +294,7 @@ def pq_topk_tiles_ladder(codes: jax.Array, s: jax.Array, k: int,
 def pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
                   tile_idx: jax.Array, *, tile: int = _k.DEFAULT_TILE,
                   batch_tile: int = _k.DEFAULT_BATCH_TILE,
+                  live: jax.Array | None = None,
                   use_kernel: bool | None = None,
                   interpret: bool | None = None):
     """Fused scoring + top-k over a compacted tile list (the cascade's
@@ -277,4 +314,5 @@ def pq_topk_tiles(codes: jax.Array, s: jax.Array, k: int,
         interpret = not compat.on_tpu()
     return _pq_topk_tiles(codes, s, k, tile_idx.astype(jnp.int32),
                           tile=tile, batch_tile=batch_tile,
-                          use_kernel=use_kernel, interpret=interpret)
+                          use_kernel=use_kernel, interpret=interpret,
+                          live=live)

@@ -54,6 +54,29 @@ def main(argv=None):
                     help="query-group count for --query-grouping "
                          "(default: the arch config's PQConfig.n_groups; "
                          "1 recovers the batch-any route)")
+    ap.add_argument("--mutable", action="store_true",
+                    help="serve through a MutableHeadState (pow2-padded "
+                         "capacity + tombstone mask): the catalogue "
+                         "mutates between batches and the engine "
+                         "hot-swaps the head arrays with zero recompiles "
+                         "(forces the pqtopk_pruned route)")
+    ap.add_argument("--churn-steps", type=int, default=0,
+                    help="with --mutable: catalogue mutations "
+                         "(update/delete/insert mix) applied + hot-"
+                         "swapped between every served batch")
+    ap.add_argument("--fail-at", type=int, action="append", default=None,
+                    help="batch indices whose dispatch raises a "
+                         "SimulatedFailure (repeatable flag); the engine "
+                         "retries with exponential backoff and sheds "
+                         "after --max-retries instead of crashing")
+    ap.add_argument("--fail-repeats", type=int, default=1,
+                    help="consecutive failing attempts per --fail-at "
+                         "batch (> --max-retries exercises shedding)")
+    ap.add_argument("--slow-at", type=int, action="append", default=None,
+                    help="batch indices delayed by --slow-ms (synthetic "
+                         "stragglers; flagged in stats)")
+    ap.add_argument("--slow-ms", type=float, default=50.0)
+    ap.add_argument("--max-retries", type=int, default=2)
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -79,10 +102,40 @@ def main(argv=None):
     from repro.models import seqrec as m
     params = m.init_seqrec(jax.random.PRNGKey(0), cfg)
 
-    engine = RetrievalEngine.for_seqrec(params, cfg, k=args.k,
-                                        max_batch=args.max_batch,
-                                        method=args.method,
-                                        calibrate=not args.no_calibrate)
+    faults = None
+    if args.fail_at or args.slow_at:
+        from repro.training.fault_tolerance import ServeFaultInjector
+        faults = ServeFaultInjector(fail_at_batches=tuple(args.fail_at or ()),
+                                    fail_repeats=args.fail_repeats,
+                                    slow_at_batches=tuple(args.slow_at or ()),
+                                    slow_ms=args.slow_ms)
+
+    mstate = None
+    if args.mutable:
+        if args.method not in (None, "pqtopk_pruned"):
+            raise SystemExit("--mutable serves the tombstone-masked pruned "
+                             f"cascade; --method {args.method} has no live-"
+                             "mask route")
+        if getattr(cfg, "pq", None) is None:
+            raise SystemExit(f"arch {args.arch!r} has no PQ head; --mutable "
+                             "needs sub-item codes to mutate")
+        from repro.core.mutation import MutableHeadState
+        mstate = MutableHeadState.build(
+            params["item_emb"]["codes"], cfg.pq.b,
+            backend=cfg.pq.bound_backend)
+        engine = RetrievalEngine.for_seqrec_mutable(
+            params, cfg, mstate, k=args.k, max_batch=args.max_batch,
+            calibrate=not args.no_calibrate, faults=faults,
+            max_retries=args.max_retries)
+    else:
+        if args.churn_steps:
+            raise SystemExit("--churn-steps requires --mutable")
+        engine = RetrievalEngine.for_seqrec(params, cfg, k=args.k,
+                                            max_batch=args.max_batch,
+                                            method=args.method,
+                                            calibrate=not args.no_calibrate,
+                                            faults=faults,
+                                            max_retries=args.max_retries)
     rng = np.random.default_rng(0)
     # Warm the jit caches (per padding bucket) before the timed stream.
     for b in (1, args.max_batch):
@@ -92,19 +145,52 @@ def main(argv=None):
         engine.drain()
     engine.latencies_ms.clear()
     engine.timeouts = 0
+    def churn(step_rng):
+        # Update-heavy mix with occasional deletes/inserts, mirroring a
+        # live catalogue feed; every mutation only loosens bounds (or is
+        # exact, for inserts) so the swapped head stays serve-correct.
+        for _ in range(args.churn_steps):
+            op = step_rng.random()
+            row = step_rng.integers(0, cfg.pq.b, mstate.m)
+            if op < 0.2 and (mstate.free or mstate.n_rows < mstate.cap):
+                mstate.insert(row)
+            elif op < 0.5:
+                victim = int(step_rng.integers(1, cfg.n_items + 1))
+                if bool(mstate.live[victim]):
+                    mstate.delete(victim)
+            else:
+                victim = int(step_rng.integers(1, cfg.n_items + 1))
+                if bool(mstate.live[victim]):
+                    mstate.update(victim, row)
+        engine.swap_head_state(mstate)
+
     t0 = time.monotonic()
+    results = []
     for i in range(args.requests):
         hist_len = int(rng.integers(2, cfg.max_seq_len))
         seq = rng.integers(1, cfg.n_items + 1, hist_len)
         engine.submit(Request(i, seq, k=args.k))
-    results = engine.drain()
+        if len(engine.batcher.queue) >= args.max_batch:
+            results += engine.drain()
+            if mstate is not None and args.churn_steps:
+                churn(rng)
+    results += engine.drain()
     wall = time.monotonic() - t0
     stats = engine.stats()
     print(f"served {len(results)} requests in {wall:.2f}s "
           f"({len(results) / wall:.1f} req/s) method={engine.method}")
     print(f"mRT={stats['mRT_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
           f"timeouts={int(stats['timeouts'])} "
-          f"n_compiles={int(stats['n_compiles'])}")
+          f"n_compiles={int(stats['n_compiles'])} "
+          f"retried={int(stats['retried'])} shed={int(stats['shed'])} "
+          f"stragglers={int(stats['stragglers'])}")
+    if mstate is not None:
+        ms = mstate.stats()
+        print(f"catalogue: capacity={int(ms['capacity'])} "
+              f"n_live={int(ms['n_live'])} "
+              f"n_mutations={int(ms['n_mutations'])} "
+              f"stale_tiles={int(ms['stale_tiles'])} "
+              f"n_swaps={int(stats['n_swaps'])}")
     if engine.ladder is not None:
         print(f"ladder={engine.ladder} "
               f"rung_hit_fraction={stats['rung_hit_fraction']:.2f} "

@@ -238,6 +238,17 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     plan = shd.lm_activation_plan(mesh, shard_seq=False)
     b_axes = _batch_spec(mesh)
     params_abs = SR.abstract_seqrec(cfg)
+    if variant == "mutable_head":
+        # Streaming-catalogue serve cell: the pruned head rides with the
+        # tombstone mask exactly as RetrievalEngine.swap_head_state
+        # threads it (core/mutation.py head_arrays) — `live` is head
+        # DATA, not a recompile axis, so this cell traces the same
+        # single-dispatch cascade with dead rows masked in-kernel.
+        emb_abs = params_abs["item_emb"]
+        params_abs = {**params_abs,
+                      "item_emb": {**emb_abs,
+                                   "live": S((emb_abs["codes"].shape[0],),
+                                             jnp.bool_)}}
     p_shard = shd.param_shardings(mesh, params_abs, shd.seqrec_param_rules())
 
     if shape.kind == "train":
@@ -274,6 +285,9 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
               # Range-bound backend (cfg.pq replaced above): same
               # single-dispatch cascade off int16 min/max code ranges.
               "pruned_range_head": "pqtopk_pruned",
+              # Tombstone-masked cascade over a mutating catalogue
+              # (params carry item_emb/live; see core/mutation.py).
+              "mutable_head": "pqtopk_pruned",
               "approx_head": "pqtopk_approx",
               "sharded_head": "pqtopk",
               "sharded_head_bm": "pqtopk",

@@ -22,6 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.training.fault_tolerance import (SimulatedFailure,
+                                            StragglerMonitor)
+
 
 @dataclass
 class Request:
@@ -29,7 +32,13 @@ class Request:
     payload: Any                      # user seq (np.ndarray) / prompt ids
     k: int = 10
     arrival: float = field(default_factory=time.monotonic)
-    deadline_ms: float = 1000.0
+    # Requests past their deadline are SHED before dispatch (run_once)
+    # and count as timeouts.  The default is deliberately lenient — a
+    # cold engine's first dispatch compiles, which on a loaded host can
+    # take seconds, and a request with no explicit latency contract
+    # should be served late rather than dropped.  Pass a tight
+    # deadline_ms to opt into real shedding.
+    deadline_ms: float = 60_000.0
 
 
 @dataclass
@@ -39,6 +48,10 @@ class Result:
     scores: np.ndarray
     latency_ms: float
     timed_out: bool = False
+    # A shed request was never scored: either it was already past its
+    # deadline before dispatch (load shedding — items/scores empty), or
+    # its batch exhausted the retry budget after injected/real failures.
+    shed: bool = False
 
 
 class MicroBatcher:
@@ -76,7 +89,11 @@ class RetrievalEngine:
     def __init__(self, serve_fn: Callable[[jax.Array, int], Tuple[jax.Array, jax.Array]],
                  *, seq_len: int, k: int = 10, max_k: Optional[int] = None,
                  max_batch: int = 64, method: Optional[str] = None,
-                 jit_serve: bool = True, ladder: Optional[Tuple[int, ...]] = None):
+                 jit_serve: bool = True, ladder: Optional[Tuple[int, ...]] = None,
+                 head_state: Optional[Any] = None,
+                 faults: Optional[Any] = None, max_retries: int = 2,
+                 retry_backoff_ms: float = 1.0,
+                 straggler_factor: float = 3.0):
         """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores).
 
         ``method`` is informational here (the scoring route is baked into
@@ -107,6 +124,24 @@ class RetrievalEngine:
         the rung taken — which the engine tallies into ``rung_counts`` so
         ``stats()["rung_hit_fraction"]`` reports how often serving stayed
         on a non-exhaustive rung.
+
+        ``head_state`` makes the engine **hot-swappable**: ``serve_fn``
+        then takes a third argument — a pytree of head arrays (codes,
+        pruned metadata, tombstone mask) — which the engine threads as
+        *data* into every dispatch and :meth:`swap_head_state` replaces
+        between batches.  Compiled variants close over ``self`` and read
+        the head late, so a swap with identical structure/shapes/dtypes
+        costs ZERO recompiles — that invariant is what makes streaming
+        catalogue mutation servable (docs/PRUNING.md §Catalogue
+        mutation).
+
+        ``faults`` (a ``ServeFaultInjector``) plus ``max_retries`` /
+        ``retry_backoff_ms`` give :meth:`run_once` graceful degradation:
+        a failed dispatch retries with exponential backoff, exhausted
+        retries shed the batch (``Result.shed``) instead of crashing, and
+        already-expired requests are shed before padding/dispatch.  A
+        ``StragglerMonitor`` (``straggler_factor`` x rolling median)
+        flags slow batches into ``stats()["stragglers"]``.
         """
         self._serve_fn = serve_fn
         self._jit_serve = jit_serve
@@ -122,6 +157,21 @@ class RetrievalEngine:
         self.batcher = MicroBatcher(max_batch=max_batch)
         self.latencies_ms: List[float] = []
         self.timeouts = 0
+        self._head_state = head_state
+        self._head_treedef = None
+        self._head_sds = None
+        if head_state is not None:
+            self._head_treedef = jax.tree_util.tree_structure(head_state)
+            self._head_sds = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), head_state)
+        self.faults = faults
+        self.max_retries = max_retries
+        self.retry_backoff_ms = retry_backoff_ms
+        self.straggler_monitor = StragglerMonitor(factor=straggler_factor)
+        self.retried = 0
+        self.shed = 0
+        self.n_swaps = 0
+        self._batch_index = 0
 
     @classmethod
     def for_seqrec(cls, params, cfg, *, k: int = 10, max_batch: int = 64,
@@ -129,6 +179,9 @@ class RetrievalEngine:
                    calibrate: Optional[bool] = None,
                    survival_stats: Optional[Sequence[int]] = None,
                    ladder: Optional[Tuple[int, ...]] = None,
+                   faults: Optional[Any] = None,
+                   max_retries: int = 2,
+                   retry_backoff_ms: float = 1.0,
                    ) -> "RetrievalEngine":
         """Stand up an engine on a seqrec model with an explicit scoring
         route.  ``method=None`` falls back to ``cfg.serve_method`` — the
@@ -201,7 +254,70 @@ class RetrievalEngine:
                                          return_rung=with_rung)
 
         return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
-                   max_batch=max_batch, method=method, ladder=ladder)
+                   max_batch=max_batch, method=method, ladder=ladder,
+                   faults=faults, max_retries=max_retries,
+                   retry_backoff_ms=retry_backoff_ms)
+
+    @classmethod
+    def for_seqrec_mutable(cls, params, cfg, mstate, *, k: int = 10,
+                           max_batch: int = 64,
+                           calibrate: Optional[bool] = None,
+                           survival_stats: Optional[Sequence[int]] = None,
+                           ladder: Optional[Tuple[int, ...]] = None,
+                           faults: Optional[Any] = None,
+                           max_retries: int = 2,
+                           retry_backoff_ms: float = 1.0,
+                           ) -> "RetrievalEngine":
+        """Engine over a **mutable catalogue**: serve the single-dispatch
+        pruned cascade against a ``mutation.MutableHeadState`` whose
+        codes / bounds / tombstone mask are threaded through every
+        dispatch as data and hot-swapped between batches with
+        :meth:`swap_head_state` — zero recompiles per mutation because
+        the pow2-padded capacity keeps every shape static.
+
+        The serve fn merges the swapped head arrays over ``params``'s
+        item head: ``codes`` (capacity rows), the incrementally
+        maintained ``pruned`` state (bounds may be stale after deletes —
+        still dominating, hence still exact), and ``live`` (the
+        tombstone mask the cascade's theta seeding and kernel both
+        honour, so delisted items can never surface).  Calibration runs
+        against the initial head with the mask threaded through
+        ``pruning.survival_count``.
+        """
+        from repro.core import pruning
+        from repro.kernels.pqtopk import kernel as pqtopk_kernel
+        from repro.models import seqrec as seqrec_lib
+        head0 = mstate.head_arrays() if hasattr(mstate, "head_arrays") \
+            else dict(mstate)
+        max_k = min(cfg.n_items, pqtopk_kernel.DEFAULT_TILE)
+
+        def merged(head):
+            return {**params, "item_emb": {**params["item_emb"],
+                                           "codes": head["codes"],
+                                           "pruned": head["pruned"],
+                                           "live": head["live"]}}
+
+        if ladder is None and calibrate is not False:
+            counts = (list(survival_stats)
+                      if survival_stats is not None else
+                      cls._observe_survival(merged(head0), cfg, k=k,
+                                            max_batch=max_batch))
+            state = head0["pruned"]
+            ladder = pruning.calibrate_ladder(counts, state.n_tiles, k,
+                                              state.tile)
+        with_rung = ladder is not None
+
+        def serve_fn(seqs, kk, head):
+            return seqrec_lib.serve_topk(merged(head), seqs, cfg, k=kk,
+                                         method="pqtopk_pruned",
+                                         ladder=ladder,
+                                         return_rung=with_rung)
+
+        return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
+                   max_batch=max_batch, method="pqtopk_pruned",
+                   ladder=ladder, head_state=head0, faults=faults,
+                   max_retries=max_retries,
+                   retry_backoff_ms=retry_backoff_ms)
 
     @staticmethod
     def _observe_survival(params, cfg, *, k: int, max_batch: int,
@@ -233,14 +349,15 @@ class RetrievalEngine:
                 st = pruning.build_pruned_state(
                     head["codes"], state.b, state.tile,
                     backend=state.backend)
+            live = head.get("live")
             if grouped:
                 # Group-aware observable: the grouped ladder escalates on
                 # the max per-group count, so calibrate against that.
                 return pruning.survival_count_grouped(
                     head["codes"], s, k, st, n_groups=pq.n_groups,
-                    **seed_kw)
+                    live=live, **seed_kw)
             return pruning.survival_count(head["codes"], s, k, st,
-                                          **seed_kw)
+                                          live=live, **seed_kw)
 
         fn = jax.jit(count_fn)
         rng = np.random.default_rng(seed)
@@ -283,8 +400,16 @@ class RetrievalEngine:
             if self._jit_serve:
                 sds = jax.ShapeDtypeStruct((bucket, self.seq_len), jnp.int32)
                 try:
-                    exe = self._fn.lower(sds, kk).compile()
-                    fn = lambda seqs, _e=exe: _e(seqs)
+                    if self._head_state is not None:
+                        # Head arrays are DATA: lower against their
+                        # shapes/dtypes once, read ``self._head_state``
+                        # late at every call so swap_head_state takes
+                        # effect with zero recompiles.
+                        exe = self._fn.lower(sds, kk, self._head_sds).compile()
+                        fn = lambda seqs, _e=exe: _e(seqs, self._head_state)
+                    else:
+                        exe = self._fn.lower(sds, kk).compile()
+                        fn = lambda seqs, _e=exe: _e(seqs)
                 except (jax.errors.TracerArrayConversionError,
                         jax.errors.TracerBoolConversionError,
                         jax.errors.ConcretizationTypeError):
@@ -294,27 +419,123 @@ class RetrievalEngine:
                     # Genuine compile failures (OOM, lowering bugs) are NOT
                     # swallowed: they raise here, before any request of the
                     # batch is half-served, and never inflate n_compiles.
-                    fn = lambda seqs, _k=kk: self._fn(seqs, _k)
+                    if self._head_state is not None:
+                        fn = lambda seqs, _k=kk: self._fn(
+                            seqs, _k, self._head_state)
+                    else:
+                        fn = lambda seqs, _k=kk: self._fn(seqs, _k)
+            elif self._head_state is not None:
+                fn = lambda seqs, _k=kk: self._serve_fn(
+                    seqs, _k, self._head_state)
             else:
                 fn = lambda seqs, _k=kk: self._serve_fn(seqs, _k)
             self._compiled[key] = fn
         return fn
 
+    def swap_head_state(self, head) -> None:
+        """Replace the served head arrays between batches — zero recompiles.
+
+        Accepts either the pytree ``head_arrays()`` returns or any object
+        exposing that method (e.g. ``mutation.MutableHeadState``).  The
+        swap is validated structurally: the pytree treedef (which carries
+        the pruned state's static metadata — tile, capacity, backend) and
+        every leaf's shape/dtype must match what the engine compiled
+        against, because those are baked into the AOT executables.  The
+        pow2-capacity design in ``core.mutation`` exists precisely so
+        live churn never trips this check; a capacity *growth* must build
+        a new engine (a new compile is then honest and expected)."""
+        if self._head_state is None:
+            raise ValueError(
+                "engine was not built with a swappable head; use "
+                "for_seqrec_mutable (or pass head_state=) to enable "
+                "hot swapping")
+        if hasattr(head, "head_arrays"):
+            head = head.head_arrays()
+        leaves, treedef = jax.tree_util.tree_flatten(head)
+        if treedef != self._head_treedef:
+            raise ValueError(
+                f"swapped head structure {treedef} differs from the "
+                f"compiled structure {self._head_treedef}; hot swap "
+                "requires identical static metadata")
+        for old, new in zip(jax.tree_util.tree_leaves(self._head_sds),
+                            leaves):
+            if old.shape != new.shape or old.dtype != new.dtype:
+                raise ValueError(
+                    f"hot swap would change a head leaf from "
+                    f"{old.shape}/{old.dtype} to {new.shape}/{new.dtype}; "
+                    "capacity and dtypes are compile-static — rebuild the "
+                    "engine to grow the catalogue")
+        self._head_state = jax.tree_util.tree_unflatten(treedef, leaves)
+        self.n_swaps += 1
+
+    def _shed_result(self, r: Request, now: float) -> Result:
+        lat = (now - r.arrival) * 1e3
+        timed_out = lat > r.deadline_ms
+        self.shed += 1
+        self.timeouts += int(timed_out)
+        self.latencies_ms.append(lat)
+        return Result(r.request_id, np.empty(0, np.int32),
+                      np.empty(0, np.float32), lat, timed_out=timed_out,
+                      shed=True)
+
     def run_once(self) -> List[Result]:
         reqs = self.batcher.next_batch()
         if not reqs:
             return []
-        bucket = MicroBatcher.bucket(len(reqs), self.batcher.max_batch)
+        batch_index = self._batch_index
+        self._batch_index += 1
+        # Load shedding BEFORE padding/dispatch: a request already past
+        # its deadline would burn a batch slot producing an answer nobody
+        # is waiting for — and worse, widen the padding bucket for the
+        # requests that are still alive.
+        now = time.monotonic()
+        results: List[Result] = []
+        alive: List[Request] = []
+        for r in reqs:
+            if (now - r.arrival) * 1e3 > r.deadline_ms:
+                results.append(self._shed_result(r, now))
+            else:
+                alive.append(r)
+        if not alive:
+            return results
+        bucket = MicroBatcher.bucket(len(alive), self.batcher.max_batch)
         seqs = np.zeros((bucket, self.seq_len), np.int32)
-        for i, r in enumerate(reqs):
+        for i, r in enumerate(alive):
             s = np.asarray(r.payload)[-self.seq_len:]
             seqs[i, -len(s):] = s
         # Requests in one batch may disagree on k: score once at the batch
         # max and slice each request's prefix — top-k prefixes nest, so
         # every request sees exactly its own top-k.  batch_k clamps and
         # buckets so client values cannot drive unbounded recompiles.
-        kk = self.batch_k([r.k for r in reqs])
-        out = self._variant(bucket, kk)(jnp.asarray(seqs))
+        kk = self.batch_k([r.k for r in alive])
+        fn = self._variant(bucket, kk)
+        seqs_j = jnp.asarray(seqs)
+        # Bounded retry with exponential backoff: only *injected/declared*
+        # failures (SimulatedFailure) are retried — they model transient
+        # node faults.  Genuine serve bugs still raise.  Exhausted retries
+        # shed the batch instead of crashing the serving loop.
+        t0 = time.monotonic()
+        out = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                if self.faults is not None:
+                    self.faults.check(batch_index)
+                out = fn(seqs_j)
+                break
+            except SimulatedFailure:
+                if attempt >= self.max_retries:
+                    break
+                self.retried += 1
+                time.sleep(self.retry_backoff_ms * (2 ** attempt) / 1e3)
+        if self.faults is not None:
+            delay = self.faults.delay_s(batch_index)
+            if delay:
+                time.sleep(delay)  # synthetic straggler, lands in elapsed
+        self.straggler_monitor.record(batch_index, time.monotonic() - t0)
+        now = time.monotonic()
+        if out is None:
+            results.extend(self._shed_result(r, now) for r in alive)
+            return results
         if len(out) == 3:
             # Ladder-enabled pruned route: third output is the rung taken
             # (an i32 scalar riding the same dispatch) — tally it so
@@ -324,17 +545,15 @@ class RetrievalEngine:
         else:
             ids, scores = out
         ids, scores = np.asarray(ids), np.asarray(scores)
-        now = time.monotonic()
-        out = []
-        for i, r in enumerate(reqs):
+        for i, r in enumerate(alive):
             lat = (now - r.arrival) * 1e3
             timed_out = lat > r.deadline_ms
             self.timeouts += int(timed_out)
             self.latencies_ms.append(lat)
             rk = max(1, min(r.k, kk))
-            out.append(Result(r.request_id, ids[i, :rk], scores[i, :rk],
-                              lat, timed_out))
-        return out
+            results.append(Result(r.request_id, ids[i, :rk],
+                                  scores[i, :rk], lat, timed_out))
+        return results
 
     def drain(self) -> List[Result]:
         out = []
@@ -350,7 +569,12 @@ class RetrievalEngine:
             "p99_ms": float(np.percentile(lat, 99)),
             "timeouts": float(self.timeouts),
             "n_compiles": float(len(self._compiled)),
+            "retried": float(self.retried),
+            "shed": float(self.shed),
+            "stragglers": float(len(self.straggler_monitor.flagged)),
         }
+        if self._head_state is not None:
+            out["n_swaps"] = float(self.n_swaps)
         if self.ladder is not None:
             # Fraction of served batches that stayed on a non-exhaustive
             # rung (the last rung of the normalised ladder scores every

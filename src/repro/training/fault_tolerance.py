@@ -34,6 +34,46 @@ class FailureInjector:
 
 
 @dataclass
+class ServeFaultInjector:
+    """Serving-side chaos schedule: deterministically fail and/or slow
+    specific serve batches.
+
+    ``fail_at_batches`` lists batch indices whose dispatch raises
+    :class:`SimulatedFailure`; each listed batch fails ``fail_repeats``
+    consecutive attempts (so ``fail_repeats`` <= the engine's retry budget
+    exercises retry-and-recover, and a larger value exercises
+    retries-exhausted shedding).  ``slow_at_batches`` lists batch indices
+    that incur one extra ``slow_ms`` delay — a synthetic straggler the
+    engine's :class:`StragglerMonitor` should flag.  Both schedules are
+    keyed on the engine's monotonically increasing batch counter, so a
+    chaos run is reproducible."""
+    fail_at_batches: Sequence[int] = ()
+    fail_repeats: int = 1
+    slow_at_batches: Sequence[int] = ()
+    slow_ms: float = 0.0
+    _fail_counts: Dict[int, int] = field(default_factory=dict)
+    _slowed: set = field(default_factory=set)
+
+    def check(self, batch_index: int):
+        """Raise on this attempt if the batch's failure budget remains."""
+        if batch_index in self.fail_at_batches:
+            c = self._fail_counts.get(batch_index, 0)
+            if c < self.fail_repeats:
+                self._fail_counts[batch_index] = c + 1
+                raise SimulatedFailure(
+                    f"injected serve failure at batch {batch_index} "
+                    f"(attempt {c + 1}/{self.fail_repeats})")
+
+    def delay_s(self, batch_index: int) -> float:
+        """Extra seconds to sleep for this batch (fires once per batch)."""
+        if batch_index in self.slow_at_batches \
+                and batch_index not in self._slowed:
+            self._slowed.add(batch_index)
+            return self.slow_ms / 1e3
+        return 0.0
+
+
+@dataclass
 class StragglerMonitor:
     """Step-deadline straggler mitigation: track a rolling median step time;
     steps slower than ``factor``x median are flagged (on a real cluster the

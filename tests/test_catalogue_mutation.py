@@ -1,0 +1,373 @@
+"""Streaming catalogue mutation: exactness under churn, hot swap, faults.
+
+The load-bearing property (docs/PRUNING.md §Catalogue mutation): after ANY
+interleaving of insert / delete / update with queries, the pruned cascade
+over the incrementally maintained ``MutableHeadState`` — stale bounds,
+tombstone mask and all — returns bit-identical top-k to an exhaustive
+oracle over the current live catalogue, and a full ``retighten()`` makes
+the metadata bit-identical to a from-scratch rebuild.  On top of that the
+serving engine must hot-swap mutated heads with ZERO recompiles and
+degrade gracefully (retry, shed) under injected faults.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning, scoring
+from repro.core.mutation import CapacityError, MutableHeadState, next_pow2
+
+M, B, D, K, TILE = 4, 16, 32, 8, 64
+N0 = 500                       # initial rows -> capacity 512 = 8 tiles
+
+
+def _mk_catalogue(seed=0, n=N0):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, B, (n, M), np.int32).astype(np.int8))
+    sub_emb = jnp.asarray(rng.normal(size=(M, B, D // M)).astype(np.float32))
+    return codes, sub_emb, rng
+
+
+def _oracle_fn(sub_emb):
+    """Exhaustive masked top-k with THE accumulation order (tree_sum)."""
+
+    @jax.jit
+    def oracle(codes, live, phi):
+        s = scoring.subid_scores(sub_emb, phi)
+        parts = [s[:, j, codes[:, j].astype(jnp.int32)] for j in range(M)]
+        sc = jnp.where(live[None, :], scoring.tree_sum(parts), -jnp.inf)
+        return jax.lax.top_k(sc, K)
+
+    return oracle
+
+
+def _churn_step(mstate, rng):
+    """One random mutation; returns the op applied (for diagnostics)."""
+    live_np = np.asarray(mstate.live)
+    live_ids = np.where(live_np)[0]
+    live_ids = live_ids[live_ids > 0]          # row 0 is the padding id
+    op = rng.choice(["insert", "delete", "update"], p=[0.3, 0.35, 0.35])
+    row = jnp.asarray(rng.integers(0, B, M, np.int64).astype(np.int8))
+    if op == "insert":
+        try:
+            mstate.insert(row)
+        except CapacityError:
+            op = "delete"
+    if op == "delete" and live_ids.size > K + 4:
+        mstate.delete(int(rng.choice(live_ids)))
+    elif op == "update":
+        mstate.update(int(rng.choice(live_ids)), row)
+    return op
+
+
+@pytest.mark.parametrize("backend", ["bitmask", "range"])
+def test_churn_flat_exactness(backend):
+    """>= 200 interleaved mutation/query steps, flat route, under jit:
+    every query bit-matches the exhaustive masked oracle and never
+    surfaces a tombstoned item."""
+    codes, sub_emb, rng = _mk_catalogue()
+    mstate = MutableHeadState.build(codes, B, TILE, backend=backend)
+    oracle = _oracle_fn(sub_emb)
+
+    @jax.jit
+    def cascade(c, lv, state, phi):
+        s = scoring.subid_scores(sub_emb, phi)
+        v, i, *_ = pruning.cascade_topk_ingraph(c, s, K, state, tile=TILE,
+                                                live=lv)
+        return v, i
+
+    n_steps, n_queries = 220, 0
+    for step in range(n_steps):
+        if rng.random() < 0.3 or step == n_steps - 1:
+            phi = jnp.asarray(rng.normal(size=(3, D)).astype(np.float32))
+            ha = mstate.head_arrays()
+            v, i = cascade(ha["codes"], ha["live"], ha["pruned"], phi)
+            ov, oi = oracle(ha["codes"], ha["live"], phi)
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(ov),
+                                          err_msg=f"step {step}")
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(oi),
+                                          err_msg=f"step {step}")
+            dead = np.where(~np.asarray(ha["live"]))[0]
+            assert not np.isin(np.asarray(i), dead).any(), f"step {step}"
+            n_queries += 1
+        else:
+            _churn_step(mstate, rng)
+    assert n_queries >= 40
+    assert mstate.stats()["n_mutations"] > 0
+
+
+@pytest.mark.parametrize("backend", ["bitmask", "range"])
+def test_churn_sharded_exactness(backend):
+    """The same churn property through the item-sharded route (ONE
+    shard_map; 1-device 'model' mesh) under jit."""
+    from repro.configs.base import PQConfig
+    from repro.core import retrieval_head as rh
+
+    codes, sub_emb, rng = _mk_catalogue(seed=1)
+    mstate = MutableHeadState.build(codes, B, TILE, backend=backend)
+    oracle = _oracle_fn(sub_emb)
+    mesh = jax.make_mesh((1,), ("model",))
+    cfg = PQConfig(m=M, b=B, bound_backend=backend)
+
+    @jax.jit
+    def sharded(c, lv, state, phi):
+        params = {"codes": c, "sub_emb": sub_emb, "live": lv,
+                  "pruned": state}
+        return rh.top_items_pruned_sharded(params, phi, K, mesh,
+                                           pq_cfg=cfg)
+
+    n_steps, n_queries = 200, 0
+    for step in range(n_steps):
+        if rng.random() < 0.25 or step == n_steps - 1:
+            phi = jnp.asarray(rng.normal(size=(3, D)).astype(np.float32))
+            ha = mstate.head_arrays()
+            v, i = sharded(ha["codes"], ha["live"], ha["pruned"], phi)
+            ov, oi = oracle(ha["codes"], ha["live"], phi)
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(ov),
+                                          err_msg=f"step {step}")
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(oi),
+                                          err_msg=f"step {step}")
+            n_queries += 1
+        else:
+            _churn_step(mstate, rng)
+    assert n_queries >= 30
+
+
+@pytest.mark.parametrize("backend", ["bitmask", "range"])
+def test_retighten_matches_rebuild(backend):
+    """After churn, retighten() makes the incremental state bit-identical
+    to a from-scratch masked rebuild, and resets the staleness tally."""
+    codes, _, rng = _mk_catalogue(seed=2)
+    mstate = MutableHeadState.build(codes, B, TILE, backend=backend)
+    for _ in range(120):
+        _churn_step(mstate, rng)
+    assert mstate.stats()["stale_tiles"] > 0
+    mstate.retighten()
+    assert mstate.stats()["stale_tiles"] == 0.0
+    got = jax.tree_util.tree_leaves(mstate.state)
+    want = jax.tree_util.tree_leaves(mstate.rebuild_oracle())
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_insert_is_exact_without_retighten():
+    """Inserts alone never loosen bounds: the incremental state stays
+    bit-identical to the oracle with zero staleness."""
+    codes, _, rng = _mk_catalogue(seed=3, n=100)
+    mstate = MutableHeadState.build(codes, B, TILE, capacity=256)
+    for _ in range(50):
+        mstate.insert(jnp.asarray(rng.integers(0, B, M, np.int64)
+                                  .astype(np.int8)))
+    assert mstate.stats()["stale_tiles"] == 0.0
+    got = jax.tree_util.tree_leaves(mstate.state)
+    want = jax.tree_util.tree_leaves(mstate.rebuild_oracle())
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_capacity_freelist_and_validation():
+    codes, _, rng = _mk_catalogue(seed=4, n=62)
+    mstate = MutableHeadState.build(codes, B, tile=16)
+    assert mstate.cap == next_pow2(62)         # 64, a tile multiple
+    row = jnp.asarray(rng.integers(0, B, M, np.int64).astype(np.int8))
+    s1 = mstate.insert(row)
+    s2 = mstate.insert(row)
+    assert {s1, s2} == {62, 63}
+    with pytest.raises(CapacityError):
+        mstate.insert(row)
+    mstate.delete(s1)
+    mstate.delete(s2)
+    assert mstate.insert(row) == s1            # FIFO freelist reuse
+    with pytest.raises(ValueError):
+        mstate.delete(0)                       # padding row is not yours
+    with pytest.raises(ValueError):
+        mstate.delete(s2 + 1000)
+    with pytest.raises(ValueError):
+        mstate.update(s2, row)                 # s2 is tombstoned
+    mstate.delete(s1)
+    with pytest.raises(ValueError):
+        mstate.delete(s1)                      # double delete
+
+
+def test_live_guard_on_non_pruned_methods():
+    """A head carrying a tombstone mask must refuse methods that would
+    ignore it (they could return delisted items)."""
+    from repro.core import retrieval_head as rh
+
+    codes, sub_emb, rng = _mk_catalogue(seed=5, n=64)
+    params = {"codes": codes, "sub_emb": sub_emb,
+              "live": jnp.ones(64, jnp.bool_)}
+    phi = jnp.asarray(rng.normal(size=(2, D)).astype(np.float32))
+    with pytest.raises(ValueError, match="tombstone"):
+        rh.top_items(params, phi, K, method="pqtopk")
+    with pytest.raises(ValueError, match="tombstone"):
+        rh.top_items_sharded(params, phi, K, jax.make_mesh((1,), ("model",)),
+                             method="pqtopk_fused")
+
+
+# ---------------------------------------------------------------------------
+# engine: hot swap, parity, graceful degradation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def seqrec_fixture():
+    from repro.configs import get_reduced
+    from repro.models import seqrec as m
+
+    cfg = get_reduced("sasrec-recjpq").model
+    params = m.init_seqrec(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _mutate(mstate, rng, n_del=12, n_upd=6, n_ins=3):
+    deleted = []
+    live_ids = [int(i) for i in np.where(np.asarray(mstate.live))[0] if i > 0]
+    for iid in rng.choice(live_ids, n_del + n_upd, replace=False):
+        if len(deleted) < n_del:
+            mstate.delete(int(iid))
+            deleted.append(int(iid))
+        else:
+            mstate.update(int(iid), jnp.asarray(
+                rng.integers(0, mstate.b, mstate.m, np.int64),
+                mstate.codes.dtype))
+    for _ in range(n_ins):
+        mstate.insert(jnp.asarray(
+            rng.integers(0, mstate.b, mstate.m, np.int64),
+            mstate.codes.dtype))
+    return deleted
+
+
+def test_engine_hot_swap_zero_recompiles_and_parity(seqrec_fixture):
+    from repro.models import seqrec as m
+    from repro.serving.engine import Request, RetrievalEngine
+
+    params, cfg = seqrec_fixture
+    head = params["item_emb"]
+    mstate = MutableHeadState.build(head["codes"], cfg.pq.b, tile=64)
+    eng = RetrievalEngine.for_seqrec_mutable(params, cfg, mstate, k=5,
+                                             max_batch=8)
+    rng = np.random.default_rng(0)
+
+    def serve(base, nreq=8):
+        for i in range(nreq):
+            seq = rng.integers(1, cfg.n_items + 1, rng.integers(2, 16))
+            eng.submit(Request(base + i, seq, k=5))
+        return eng.drain()
+
+    serve(0)
+    nc0 = eng.stats()["n_compiles"]
+    deleted = _mutate(mstate, rng)
+    eng.swap_head_state(mstate)
+    res = serve(100)
+    st = eng.stats()
+    assert st["n_compiles"] == nc0, "hot swap must not mint a new compile"
+    assert st["n_swaps"] == 1.0
+    for r in res:
+        assert not np.isin(np.asarray(r.items), deleted).any()
+
+    # Bit parity vs a from-scratch oracle state, with the head threaded
+    # as a traced argument exactly like the engine threads it (a closure
+    # constant would let XLA fold differently and break bit-comparison).
+    ha = mstate.head_arrays()
+    oracle_head = {"codes": ha["codes"], "pruned": mstate.rebuild_oracle(),
+                   "live": ha["live"]}
+    ofn = jax.jit(lambda s, h: m.serve_topk(
+        {**params, "item_emb": {**head, **h}}, s, cfg, k=5,
+        method="pqtopk_pruned"))
+    qs = rng.integers(1, cfg.n_items + 1,
+                      (4, cfg.max_seq_len)).astype(np.int32)
+    oi, ov = ofn(jnp.asarray(qs), oracle_head)
+    for i in range(4):
+        eng.submit(Request(200 + i, qs[i], k=5))
+    got = {r.request_id: r for r in eng.drain()}
+    for i in range(4):
+        np.testing.assert_array_equal(got[200 + i].items, np.asarray(oi)[i])
+        np.testing.assert_array_equal(got[200 + i].scores,
+                                      np.asarray(ov)[i])
+
+
+def test_engine_swap_validation(seqrec_fixture):
+    from repro.serving.engine import RetrievalEngine
+
+    params, cfg = seqrec_fixture
+    head = params["item_emb"]
+    mstate = MutableHeadState.build(head["codes"], cfg.pq.b, tile=64)
+    eng = RetrievalEngine.for_seqrec_mutable(params, cfg, mstate, k=5,
+                                             max_batch=8, calibrate=False)
+    with pytest.raises(ValueError, match="structure"):
+        eng.swap_head_state({"codes": mstate.codes, "live": mstate.live})
+    other = MutableHeadState.build(head["codes"], cfg.pq.b, tile=64,
+                                   capacity=4 * mstate.cap)
+    with pytest.raises(ValueError):
+        eng.swap_head_state(other)             # capacity growth: rebuild
+    # a plain engine refuses swapping outright
+    eng2 = RetrievalEngine.for_seqrec(params, cfg, k=5, max_batch=8,
+                                      method="pqtopk_pruned",
+                                      calibrate=False)
+    with pytest.raises(ValueError, match="swappable"):
+        eng2.swap_head_state(mstate)
+
+
+def test_engine_fault_injection_retry_and_shed(seqrec_fixture):
+    from repro.serving.engine import Request, RetrievalEngine
+    from repro.training.fault_tolerance import ServeFaultInjector
+
+    params, cfg = seqrec_fixture
+    mstate = MutableHeadState.build(params["item_emb"]["codes"], cfg.pq.b,
+                                    tile=64)
+    rng = np.random.default_rng(1)
+
+    # batch 0 fails once (retry recovers); batch 1 out-fails the budget
+    # (batch shed, loop alive); batch 2 is slowed (straggler flagged).
+    faults = ServeFaultInjector(fail_at_batches=(0, 1), fail_repeats=1,
+                                slow_at_batches=(2,), slow_ms=30.0)
+    faults._fail_counts[1] = -10               # batch 1: 11 failures
+    eng = RetrievalEngine.for_seqrec_mutable(
+        params, cfg, mstate, k=5, max_batch=4, faults=faults,
+        max_retries=1, retry_backoff_ms=0.1, calibrate=False)
+    eng.straggler_monitor.factor = 1.5
+    eng.straggler_monitor._times = [0.01] * 10  # prime the rolling median
+
+    def one_batch(base):
+        for i in range(4):
+            eng.submit(Request(base + i,
+                               rng.integers(1, cfg.n_items + 1, 8), k=5))
+        return eng.run_once()
+
+    r0 = one_batch(0)                          # fails once, retried, OK
+    assert len(r0) == 4 and not any(r.shed for r in r0)
+    r1 = one_batch(10)                         # retries exhausted -> shed
+    assert len(r1) == 4 and all(r.shed for r in r1)
+    assert all(r.items.size == 0 for r in r1)
+    r2 = one_batch(20)                         # slowed, still served
+    assert len(r2) == 4 and not any(r.shed for r in r2)
+    st = eng.stats()
+    assert st["retried"] >= 2.0
+    assert st["shed"] == 4.0
+    assert st["stragglers"] >= 1.0
+
+
+def test_engine_sheds_expired_before_dispatch(seqrec_fixture):
+    from repro.serving.engine import Request, RetrievalEngine
+
+    params, cfg = seqrec_fixture
+    mstate = MutableHeadState.build(params["item_emb"]["codes"], cfg.pq.b,
+                                    tile=64)
+    eng = RetrievalEngine.for_seqrec_mutable(params, cfg, mstate, k=5,
+                                             max_batch=8, calibrate=False)
+    rng = np.random.default_rng(2)
+    stale = time.monotonic() - 10.0
+    eng.submit(Request(0, rng.integers(1, cfg.n_items + 1, 8), k=5,
+                       arrival=stale, deadline_ms=1.0))
+    # Generous deadline: the first dispatch compiles, and on a loaded CI
+    # host that can exceed the 1s default — this test is about the
+    # *expired* request being shed pre-dispatch, not about timing.
+    eng.submit(Request(1, rng.integers(1, cfg.n_items + 1, 8), k=5,
+                       deadline_ms=600_000.0))
+    res = {r.request_id: r for r in eng.run_once()}
+    assert res[0].shed and res[0].timed_out and res[0].items.size == 0
+    assert not res[1].shed and res[1].items.shape == (5,)
+    st = eng.stats()
+    assert st["shed"] == 1.0 and st["timeouts"] == 1.0
