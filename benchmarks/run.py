@@ -5,9 +5,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   figure2/*   — scoring latency vs catalogue size, m in {8, 64}   [Fig. 2]
   kernel/*    — PQ scoring algorithm micro-bench (XLA paths) + the
                 pruned-vs-exhaustive retrieval sweep on skewed data
+  serving/*   — latency under load through the replicated fabric
+                (ReplicaRouter, K in {1, 2, 4}, with/without a chaos
+                plan): per-request p50/p99 + req/s end to end
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr7.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr8.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
 fraction + seed size + bound backend + ladder / rung-hit fraction for the
@@ -56,6 +59,11 @@ def environment_fingerprint() -> dict:
         "backend": _jax.default_backend(),
         "machine": platform.machine(),
         "cpu_count": os.cpu_count(),
+        # The cores this process may actually run on (taskset pinning in
+        # ci.sh shows up here): a 1-core and an 8-core affinity mask are
+        # different machines as far as latency numbers are concerned.
+        "cpu_affinity": (sorted(os.sched_getaffinity(0))
+                         if hasattr(os, "sched_getaffinity") else None),
         # Unpinned thread counts are themselves provenance: two runs with
         # different pinning must not be joined silently.
         "threads": threads or "unpinned",
@@ -67,9 +75,9 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "churn",
-                             "roofline"])
+                             "serving", "roofline"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr7.json",
+    ap.add_argument("--json", default="BENCH_pr8.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -607,6 +615,95 @@ def main(argv=None) -> None:
                         "dispatches_per_query": 1},
                   timing=t_fresh)
 
+    if "serving" not in args.skip:
+        # -------------------------------------------------------------
+        # Latency under load through the replicated fabric (ISSUE 8):
+        # the same request stream through ReplicaRouter with K replicas,
+        # healthy and under a deterministic chaos plan.  Per config:
+        # per-request latency quartiles (the row's timing dict), req/s,
+        # and the fabric counters (hedges, re-dispatches, sheds) so the
+        # robustness cost is visible next to the latency it buys.
+        import time as time_lib
+        from dataclasses import replace as _replace
+
+        import jax
+        import numpy as np
+        from repro.configs.base import get_reduced
+        from repro.models import seqrec as seqrec_lib
+        from repro.serving.engine import Request
+        from repro.serving.router import ReplicaRouter
+        from repro.training.fault_tolerance import ReplicaFaultPlan
+
+        arch_srv = get_reduced("sasrec-recjpq")
+        cfg_srv = _replace(arch_srv.model, n_items=8192)
+        params_srv = seqrec_lib.init_seqrec(jax.random.PRNGKey(0), cfg_srv)
+        n_req, mb_srv, k_srv = 192, 8, 10
+        ladder_srv = None
+        for n_rep in (1, 2, 4):
+            for chaos in (False, True):
+                if chaos and n_rep == 1:
+                    continue            # replica-level chaos needs spares
+                plans = ({1: ReplicaFaultPlan(crash_windows=((2, 5),))}
+                         if chaos else None)
+                router = ReplicaRouter.for_seqrec(
+                    params_srv, cfg_srv, n_replicas=n_rep, k=k_srv,
+                    max_batch=mb_srv, method="pqtopk_pruned",
+                    ladder=ladder_srv, calibrate=ladder_srv is None,
+                    fault_plans=plans, hedge=n_rep > 1)
+                ladder_srv = router.engines[0].ladder
+                rng_srv = np.random.default_rng(0)
+                with router:
+                    # Warm every pow2 padding bucket the trickle can form:
+                    # a lazy compile inside the timed stream would read as
+                    # a multi-second straggler and poison the p99.
+                    router.warmup(buckets=tuple(
+                        2 ** j for j in range(mb_srv.bit_length())))
+                    t0 = time_lib.monotonic()
+                    for i in range(n_req):
+                        seq = rng_srv.integers(1, cfg_srv.n_items + 1, 16)
+                        router.submit(Request(i, seq, k=k_srv))
+                        router.pump()
+                    res = router.drain()
+                    wall = time_lib.monotonic() - t0
+                    st_r = router.stats()
+                assert len(res) == n_req, f"lost {n_req - len(res)} requests"
+                lat_s = np.sort(np.asarray([r.latency_ms for r in res])) / 1e3
+                q25, med, q75 = np.quantile(lat_s, (0.25, 0.5, 0.75))
+                timing = {"median_s": med, "q25_s": q25, "q75_s": q75,
+                          "iqr_s": q75 - q25, "n_reps": len(res)}
+                n_shed = sum(1 for r in res if r.shed)
+                ej = sum(r_["ejections"] for r_ in st_r["replicas"].values())
+                re_ad = sum(r_["readmissions"]
+                            for r_ in st_r["replicas"].values())
+                suffix = "_chaos" if chaos else ""
+                _emit("serving",
+                      f"serving/load_K{n_rep}{suffix}/pqtopk_pruned",
+                      med * 1e6,
+                      f"req_per_s={n_req / wall:.1f};"
+                      f"p99_ms={st_r['p99_ms']:.2f};"
+                      f"hedges={int(st_r['hedges'])};"
+                      f"redispatched={int(st_r['redispatched'])};"
+                      f"shed={n_shed}",
+                      method="pqtopk_pruned",
+                      items_per_s=cfg_srv.n_items * (n_req - n_shed) / wall,
+                      tags={"n_items": cfg_srv.n_items,
+                            "n_replicas": n_rep, "chaos": chaos,
+                            "n_requests": n_req, "max_batch": mb_srv,
+                            "req_per_s": n_req / wall,
+                            "p50_ms": st_r["p50_ms"],
+                            "p99_ms": st_r["p99_ms"],
+                            "hedges": int(st_r["hedges"]),
+                            "hedge_wins": int(st_r["hedge_wins"]),
+                            "redispatched": int(st_r["redispatched"]),
+                            "duplicates_suppressed":
+                                int(st_r["duplicates_suppressed"]),
+                            "shed": n_shed,
+                            "degrade_events": int(st_r["degrade_events"]),
+                            "ejections": ej, "readmissions": re_ad,
+                            "ladder": (list(ladder_srv)
+                                       if ladder_srv else None)},
+                      timing=timing)
+
     if "roofline" not in args.skip:
         import os
         from benchmarks import roofline
@@ -630,7 +727,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 7,
+            "pr": 8,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

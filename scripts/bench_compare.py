@@ -23,7 +23,11 @@ Provenance: every file written since PR 6 carries an environment
 Numbers measured on different stacks are not comparable — two files with
 *different* fingerprints refuse to join (exit 2) unless ``--allow-mixed``
 is passed.  Legacy files without a fingerprint only warn, so the existing
-trajectory keeps printing.
+trajectory keeps printing.  ``--split-environments`` instead partitions
+the files by fingerprint and reports each partition as its own
+trajectory — the strict-gating mode for a history that spans an
+environment change (e.g. the PR 8 switch to pinned threads): regressions
+are only ever judged within one environment, never across the seam.
 
 Usage:
   python scripts/bench_compare.py              # repo-root BENCH_pr*.json
@@ -151,30 +155,9 @@ def fmt_key(key: tuple) -> str:
     return "/".join(str(p) for p in parts)
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("paths", nargs="*", default=None,
-                    help="BENCH json files (default: ./BENCH_pr*.json)")
-    ap.add_argument("--threshold", type=float, default=0.20,
-                    help="fractional drop between consecutive PRs flagged "
-                         "as a regression (default 0.20)")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit non-zero when any regression is flagged")
-    ap.add_argument("--allow-mixed", action="store_true",
-                    help="join files whose environment fingerprints "
-                         "differ (numbers are NOT comparable; trend is "
-                         "indicative only)")
-    args = ap.parse_args(argv)
-
-    paths = args.paths or sorted(glob.glob("BENCH_pr*.json"))
-    if not paths:
-        print("no BENCH_pr*.json files found", file=sys.stderr)
-        return 1
-    prs, table, fingerprints = load(paths)
-    if not check_fingerprints(fingerprints, args.allow_mixed):
-        return 2
-    prs = sorted(dict.fromkeys(prs))
-
+def report(prs, table, args) -> int:
+    """Print the trajectory table for one environment partition; returns
+    the number of flagged regressions."""
     header = ["benchmark"] + [f"pr{p}" for p in prs] + ["trend"]
     print(",".join(header))
     n_regressions = 0
@@ -204,6 +187,66 @@ def main(argv=None) -> int:
     print(f"# {len(table)} joined rows across PRs {prs}; "
           f"{n_regressions} regression(s) at threshold "
           f"{args.threshold:.0%}", file=sys.stderr)
+    return n_regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="BENCH json files (default: ./BENCH_pr*.json)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="fractional drop between consecutive PRs flagged "
+                         "as a regression (default 0.20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any regression is flagged")
+    ap.add_argument("--allow-mixed", action="store_true",
+                    help="join files whose environment fingerprints "
+                         "differ (numbers are NOT comparable; trend is "
+                         "indicative only)")
+    ap.add_argument("--split-environments", action="store_true",
+                    help="partition the files by environment fingerprint "
+                         "and report each partition as its own trajectory "
+                         "(regressions judged only within a partition)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or sorted(glob.glob("BENCH_pr*.json"))
+    if not paths:
+        print("no BENCH_pr*.json files found", file=sys.stderr)
+        return 1
+    prs, table, fingerprints = load(paths)
+
+    if args.split_environments:
+        groups: dict = {}
+        for p in sorted(paths, key=_pr_number):
+            fp = fingerprints[p]
+            key = (json.dumps(fp, sort_keys=True) if fp is not None
+                   else "<no-fingerprint>")
+            groups.setdefault(key, []).append(p)
+        # Only the partition containing the newest PR gates --strict:
+        # that is the environment the head PR actually measured in.
+        # Regressions frozen into historical partitions (e.g. the
+        # unpinned pre-PR8 files) are reported but can never fail a CI
+        # run that did not produce them.
+        latest = max(prs) if prs else -1
+        n_gated = 0
+        for key, ps in sorted(groups.items(),
+                              key=lambda kv: _pr_number(kv[1][0])):
+            print(f"# environment partition ({len(ps)} file(s): "
+                  f"{', '.join(os.path.basename(p) for p in ps)}): {key}")
+            prs_g, table_g, _ = load(ps)
+            prs_g = sorted(dict.fromkeys(prs_g))
+            n = report(prs_g, table_g, args)
+            if latest in prs_g:
+                n_gated += n
+            elif n:
+                print(f"# {n} historical regression(s) in a partition "
+                      f"without pr{latest}: reported, not gated",
+                      file=sys.stderr)
+        return 1 if (args.strict and n_gated) else 0
+
+    if not check_fingerprints(fingerprints, args.allow_mixed):
+        return 2
+    n_regressions = report(sorted(dict.fromkeys(prs)), table, args)
     return 1 if (args.strict and n_regressions) else 0
 
 

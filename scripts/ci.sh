@@ -38,7 +38,7 @@ fi
 # test file stopped importing or someone deleted coverage).  pytest also
 # exits non-zero on collection errors, so a broken import fails CI rather
 # than silently shrinking the suite.
-TIER1_BASELINE=321
+TIER1_BASELINE=336
 collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
             | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
 if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
@@ -70,20 +70,34 @@ python scripts/check_single_dispatch.py
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
 # single-dispatch pruned cascade, bound-backend comparison sweep, the
 # per-query mixed-batch sweep, the catalogue-churn section with its
-# sampled exactness checks, figure2) end to end so kernel-path breakage
-# surfaces in CI, not just in unit tests, and refreshes the
-# machine-readable BENCH_pr7.json (stamped with an environment
-# fingerprint — python/jax/jaxlib, backend, thread pinning — so
-# bench_compare refuses cross-environment joins; every row carries
-# median + IQR so bench_compare only flags IQR-separated drops).
-# table3/roofline stay out (slow dataset builds / artifact-dependent).
-# --repeats 3 (up from 1): quartiles over one sample are degenerate,
-# and the IQR-separation rule needs real spread to be meaningful.
-python -m benchmarks.run --skip table3 --skip roofline --repeats 3 \
-    --json BENCH_pr7.json > /dev/null
+# sampled exactness checks, the replicated-fabric latency-under-load
+# section, figure2) end to end so kernel-path breakage surfaces in CI,
+# not just in unit tests, and refreshes the machine-readable
+# BENCH_pr8.json.  table3/roofline stay out (slow dataset builds /
+# artifact-dependent).  --repeats 3 (up from 1): quartiles over one
+# sample are degenerate, and the IQR-separation rule needs real spread
+# to be meaningful.
+#
+# Thread pinning (PR 8): single-threaded BLAS/Eigen and a one-core
+# affinity mask where taskset exists.  Unpinned thread pools made every
+# latency number hostage to scheduler noise; the pinning lands in the
+# environment fingerprint, so pinned and unpinned files can never be
+# silently joined into one trajectory.
+export OMP_NUM_THREADS=1 MKL_NUM_THREADS=1 OPENBLAS_NUM_THREADS=1
+export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_cpu_multi_thread_eigen=false"
+PIN=""
+if command -v taskset >/dev/null 2>&1; then
+    PIN="taskset -c 0"
+fi
+${PIN} python -m benchmarks.run --skip table3 --skip roofline --repeats 3 \
+    --json BENCH_pr8.json > /dev/null
 
-# Cross-PR perf trajectory: join all BENCH_pr*.json and report the
-# items_per_s trend per benchmark (regressions are highlighted in the
-# printed table, not fatal — CPU container timings are too noisy to
-# gate on).
-python scripts/bench_compare.py
+# Cross-PR perf trajectory, two views.  Informational: the whole history
+# joined across the pinning seam (--allow-mixed; trend only, never
+# gated).  Gate: --split-environments partitions files by environment
+# fingerprint and --strict fails CI on an IQR-separated regression
+# WITHIN the current (pinned) partition — the first trajectory stable
+# enough to gate on; historical unpinned regressions report but cannot
+# fail a run that did not produce them.
+python scripts/bench_compare.py --allow-mixed
+python scripts/bench_compare.py --strict --split-environments

@@ -38,6 +38,11 @@ check_single_dispatch lineage):
 * ``engine_mutable``      — the hot-swap engine: mutate + swap_head_state
                             between batches, then prove the served batch
                             is still ONE dispatch with ZERO new compiles
+* ``router_replicated``   — the replicated fabric: K health-checked
+                            replicas behind one submit/drain — a
+                            healthy-path batch is ONE compiled dispatch
+                            on exactly one replica, and replica id never
+                            keys a compile
 
 Builds are cached (`build()`), and the heavyweight shared fixtures
 (catalogue params) are built once and reused across entries.
@@ -579,3 +584,117 @@ def _build_engine_mutable() -> BuiltEntry:
         notes=f"for_seqrec_mutable, capacity={mstate.cap}, "
               f"ladder={eng.ladder}, swap-then-serve under "
               "transfer_guard")
+
+
+# ---------------------------------------------------------------------------
+# replicated fabric (ISSUE 8: router)
+# ---------------------------------------------------------------------------
+
+@register("router_replicated",
+          "the replicated serving fabric: health-checked replicas behind "
+          "one submit/drain — a healthy-path batch is ONE compiled "
+          "dispatch on exactly one replica (no fan-out, no duplicated "
+          "work) and replica id never keys a compile",
+          tags=("serve", "engine", "pruned", "router"))
+def _build_router_replicated() -> BuiltEntry:
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.engine import MicroBatcher
+    from repro.serving.router import ReplicaRouter
+
+    params, cfg = _seqrec_setup()
+    k, max_batch = 5, 8
+    router = ReplicaRouter.for_seqrec(params, cfg, n_replicas=2, k=k,
+                                      max_batch=max_batch,
+                                      method="pqtopk_pruned", hedge=False)
+    router.warmup()
+    eng = router.engines[0]
+    assert eng.ladder is not None and len(eng.ladder) >= 2, (
+        f"expected a calibrated multi-rung ladder, got {eng.ladder!r}")
+    assert all(e.ladder == eng.ladder for e in router.engines), (
+        "replicas must share the lead engine's calibrated ladder")
+
+    sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
+
+    def count() -> int:
+        import numpy as np
+        from repro.serving.engine import Request
+
+        rng = np.random.default_rng(300)
+
+        def feed(base: int, n: int):
+            for i in range(n):
+                router.submit(Request(
+                    base + i, rng.integers(1, cfg.n_items + 1, 8), k=k))
+
+        # Warm through real router traffic: two full buckets form in one
+        # scheduling pass and land on the two least-loaded replicas, so
+        # every replica serves before we start counting.
+        feed(300, 2 * max_batch)
+        router.drain()
+        assert all(rs.completed >= 1 for rs in router.replicas), (
+            "warm traffic did not reach every replica")
+        calls: list = []
+        for eng_i in router.engines:
+            for key, f in list(eng_i._compiled.items()):
+                eng_i._compiled[key] = (
+                    lambda seqs, _f=f, _key=key:
+                    (calls.append(_key), _f(seqs))[1])
+        feed(340, max_batch)                 # exactly ONE full-bucket job
+        # The transfer-guard context manager is thread-local and the
+        # router launches/completes batches on its worker threads, so
+        # the guard has to go through the global config for this serve.
+        prev = getattr(jax.config, "jax_transfer_guard", None) or "allow"
+        jax.config.update("jax_transfer_guard", "disallow")
+        try:
+            results = router.drain()
+        finally:
+            jax.config.update("jax_transfer_guard", prev)
+        assert len(results) == max_batch, (
+            f"served {len(results)}/{max_batch}")
+        assert not any(r.shed for r in results)
+        assert not any(r.degraded for r in results), (
+            "healthy-path batch must not carry degradation tags")
+        return len(calls)
+
+    specs = (
+        StaticArgSpec(
+            "batch_bucket",
+            sample=tuple(range(1, max_batch + 1)),
+            mapper=lambda n, _mb=max_batch: MicroBatcher.bucket(n, _mb),
+            allowed=_pow2_buckets(max_batch),
+            max_variants=max_batch.bit_length() + 1,
+            note="pow2 padding buckets for the request batch size"),
+        StaticArgSpec(
+            "k_bucket",
+            sample=tuple(range(1, 64)) + (200, 1000, 10 ** 9),
+            mapper=lambda kv, _e=eng: _e.batch_k([kv]),
+            allowed=_pow2_buckets(eng.max_k),
+            max_variants=eng.max_k.bit_length() + 1,
+            note="client k clamped into [1, max_k] then pow2-bucketed"),
+        StaticArgSpec(
+            "ladder_rung",
+            sample=tuple(eng.ladder),
+            mapper=lambda r: r,
+            allowed=frozenset(eng.ladder),
+            max_variants=4,
+            note="one shared calibrated ladder across the fleet (rungs "
+                 "are cond branches, never separate compiles)"),
+        StaticArgSpec(
+            "replica",
+            sample=tuple(range(router.n_replicas)),
+            mapper=lambda _rid: "shared-trace",
+            allowed=frozenset({"shared-trace"}),
+            max_variants=1,
+            note="replica id is pure routing state: every replica "
+                 "compiles the one identical serve structure"),
+    )
+
+    return BuiltEntry(
+        fn=lambda seqs: eng._serve_fn(seqs, k),
+        args=(sds,),
+        static_specs=specs,
+        dispatch_counter=count,
+        notes=f"ReplicaRouter.for_seqrec x{router.n_replicas} replicas, "
+              f"shared ladder={eng.ladder}, hedging off, global "
+              "transfer_guard over the worker threads")

@@ -1004,6 +1004,7 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
                          seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                          slot_budget: Optional[int] = None,
                          ladder=None,
+                         pin_rung: bool = False,
                          query_grouping: bool = False,
                          n_groups: int = DEFAULT_N_GROUPS,
                          live: Optional[jax.Array] = None,
@@ -1076,6 +1077,16 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
     if ladder is None and slot_budget is not None:
         ladder = (int(slot_budget),)
     rungs = normalize_ladder(ladder, t_total, k, tile)
+    if pin_rung:
+        # Load-adaptive degradation (serving/router.py): pin the cascade
+        # to its CHEAPEST calibrated rung and drop the escalation chain —
+        # bounded cost per batch, but survivors past the rung's budget are
+        # silently truncated (ascending tile order), so the result may
+        # miss true winners.  This is the ONLY cascade mode that can cost
+        # exactness; callers must tag every result served through it
+        # (Result.degraded), and with no sub-exhaustive rung in the
+        # ladder the pin degenerates to the exact exhaustive route.
+        rungs = rungs[:1]
     seed_kw = dict(seed_policy=seed_policy, seed_tiles=seed_tiles,
                    seed_max_tiles=seed_max_tiles,
                    seed_stab_tol=seed_stab_tol,

@@ -131,7 +131,8 @@ def score_candidates(params: Params, phi: jax.Array, item_ids: jax.Array,
 def top_items(params: Params, phi: jax.Array, k: int,
               method: str = "pqtopk", tile: int = 8192,
               pq_cfg: Optional[PQConfig] = None,
-              ladder=None, return_rung: bool = False,
+              ladder=None, pin_rung: bool = False,
+              return_rung: bool = False,
               ) -> Tuple[jax.Array, jax.Array]:
     """TopK(score, K) — returns (values (B,k), item ids (B,k)).
 
@@ -152,6 +153,9 @@ def top_items(params: Params, phi: jax.Array, k: int,
             f"params carry a tombstone mask ('live') but method {method!r} "
             f"would ignore it and could return delisted items; mutable "
             f"catalogues serve via 'pqtopk_pruned'")
+    if pin_rung and method != "pqtopk_pruned":
+        raise ValueError("pin_rung (the load-degraded cascade) is only "
+                         "meaningful for method='pqtopk_pruned'")
     if method == "pqtopk_fused":
         if not is_pq(params):
             raise ValueError("method 'pqtopk_fused' requires a PQ head")
@@ -163,7 +167,7 @@ def top_items(params: Params, phi: jax.Array, k: int,
         if not is_pq(params):
             raise ValueError("method 'pqtopk_pruned' requires a PQ head")
         return _top_items_pruned_ingraph(params, phi, k, pq_cfg=pq_cfg,
-                                         ladder=ladder,
+                                         ladder=ladder, pin_rung=pin_rung,
                                          return_rung=return_rung)
     if method == "pqtopk_approx":
         if not is_pq(params):
@@ -213,7 +217,8 @@ def _pruned_state(params: Params) -> Optional[pruning.PrunedHeadState]:
 def _top_items_pruned_ingraph(params, phi, k, *,
                               pq_cfg: Optional[PQConfig] = None,
                               slot_budget: Optional[int] = None,
-                              ladder=None, return_rung: bool = False):
+                              ladder=None, pin_rung: bool = False,
+                              return_rung: bool = False):
     """The single-dispatch pruned route: one traced computation.
 
     Reads the :class:`pruning.PrunedHeadState` threaded through the param
@@ -250,7 +255,8 @@ def _top_items_pruned_ingraph(params, phi, k, *,
     out = pruning.cascade_topk_ingraph(codes, s, k, state,
                                        tile=DEFAULT_PRUNE_TILE,
                                        slot_budget=slot_budget,
-                                       ladder=ladder, live=live,
+                                       ladder=ladder, pin_rung=pin_rung,
+                                       live=live,
                                        return_stats=return_rung,
                                        **_seed_kwargs(pq_cfg),
                                        **_grouping_kwargs(pq_cfg))

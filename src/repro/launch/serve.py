@@ -15,6 +15,69 @@ from repro.configs.base import get_config, get_reduced
 from repro.serving.engine import Request, RetrievalEngine
 
 
+def _ms(v) -> str:
+    """Latency field for humans; None (no traffic) is 'n/a', never 0.00."""
+    return "n/a" if v is None else f"{v:.2f}ms"
+
+
+def _serve_replicated(args, params, cfg):
+    """Drive the ReplicaRouter fabric: K engine replicas behind one
+    submit/pump/drain loop, optionally under a deterministic chaos plan."""
+    from repro.serving.router import ReplicaRouter
+
+    fault_plans = None
+    if args.chaos:
+        from repro.training.fault_tolerance import ReplicaFaultPlan
+        # Replica 1 dies for a few dispatches (ejection + re-dispatch +
+        # half-open re-admission); replica 2, when present, straggles
+        # (hedging + straggler strikes).  Indices are per-replica dispatch
+        # counters, so the schedule is reproducible under any interleaving.
+        fault_plans = {1: ReplicaFaultPlan(crash_windows=((1, 4),))}
+        if args.replicas > 2:
+            fault_plans[2] = ReplicaFaultPlan(slow_windows=((0, 3),),
+                                              slow_ms=250.0)
+    router = ReplicaRouter.for_seqrec(
+        params, cfg, n_replicas=args.replicas, k=args.k,
+        max_batch=args.max_batch, method=args.method,
+        calibrate=not args.no_calibrate,
+        fault_plans=fault_plans, hedge=not args.no_hedge)
+    rng = np.random.default_rng(0)
+    with router:
+        router.warmup()
+        t0 = time.monotonic()
+        for i in range(args.requests):
+            hist_len = int(rng.integers(2, cfg.max_seq_len))
+            seq = rng.integers(1, cfg.n_items + 1, hist_len)
+            router.submit(Request(i, seq, k=args.k))
+            router.pump()
+        results = router.drain()
+        wall = time.monotonic() - t0
+        stats = router.stats()
+    eng = router.engines[0]
+    print(f"served {len(results)} requests in {wall:.2f}s "
+          f"({len(results) / wall:.1f} req/s) replicas={args.replicas} "
+          f"method={eng.method} chaos={args.chaos}")
+    print(f"p50={_ms(stats['p50_ms'])} p99={_ms(stats['p99_ms'])} "
+          f"hedges={stats['hedges']} hedge_wins={stats['hedge_wins']} "
+          f"dup_suppressed={stats['duplicates_suppressed']} "
+          f"redispatched={stats['redispatched']}")
+    print(f"degrade_level={stats['degrade_level']} "
+          f"degrade_events={stats['degrade_events']} "
+          f"recover_events={stats['recover_events']} "
+          f"shed_load={stats['shed_load']} "
+          f"degraded={dict(stats['degraded_results'])}")
+    for rid, rs in stats["replicas"].items():
+        print(f"  replica[{rid}] state={rs['state']} "
+              f"dispatched={rs['dispatched']} completed={rs['completed']} "
+              f"failures={rs['failures']} stragglers={rs['stragglers']} "
+              f"ejections={rs['ejections']} "
+              f"readmissions={rs['readmissions']} "
+              f"n_compiles={rs['n_compiles']}")
+    if eng.ladder is not None:
+        print(f"ladder={eng.ladder} (shared across replicas)")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="sasrec-recjpq")
@@ -77,6 +140,19 @@ def main(argv=None):
                          "stragglers; flagged in stats)")
     ap.add_argument("--slow-ms", type=float, default=50.0)
     ap.add_argument("--max-retries", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1 serves through the ReplicaRouter fabric: "
+                         "pipelined dispatch over health-checked engine "
+                         "replicas with hedging and the load-adaptive "
+                         "degradation ladder")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --replicas: install a deterministic "
+                         "ReplicaFaultPlan (a crash window on replica 1, "
+                         "a straggle window on replica 2 when present) so "
+                         "ejection, re-dispatch, hedging and re-admission "
+                         "are all visible in the printed stats")
+    ap.add_argument("--no-hedge", action="store_true",
+                    help="with --replicas: disable hedged dispatch")
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -109,6 +185,18 @@ def main(argv=None):
                                     fail_repeats=args.fail_repeats,
                                     slow_at_batches=tuple(args.slow_at or ()),
                                     slow_ms=args.slow_ms)
+
+    if args.replicas > 1:
+        if args.mutable or args.churn_steps:
+            raise SystemExit("--replicas fronts immutable engine replicas; "
+                             "--mutable/--churn-steps use the single-engine "
+                             "path")
+        if args.fail_at or args.slow_at:
+            raise SystemExit("--fail-at/--slow-at inject inside ONE engine; "
+                             "replica-level chaos is --chaos")
+        return _serve_replicated(args, params, cfg)
+    if args.chaos:
+        raise SystemExit("--chaos needs --replicas > 1")
 
     mstate = None
     if args.mutable:
@@ -179,7 +267,7 @@ def main(argv=None):
     stats = engine.stats()
     print(f"served {len(results)} requests in {wall:.2f}s "
           f"({len(results) / wall:.1f} req/s) method={engine.method}")
-    print(f"mRT={stats['mRT_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
+    print(f"mRT={_ms(stats['mRT_ms'])} p99={_ms(stats['p99_ms'])} "
           f"timeouts={int(stats['timeouts'])} "
           f"n_compiles={int(stats['n_compiles'])} "
           f"retried={int(stats['retried'])} shed={int(stats['shed'])} "

@@ -155,20 +155,27 @@ def sequence_embedding(params: Params, item_seq: jax.Array, cfg: SeqRecConfig,
 
 def serve_topk(params: Params, item_seq: jax.Array, cfg: SeqRecConfig, *,
                k: int = 10, method: str = "pqtopk", sharded_mesh=None,
-               ladder=None, return_rung: bool = False):
+               ladder=None, pin_rung: bool = False,
+               return_rung: bool = False):
     """Full serving path: backbone -> phi -> scoring -> TopK (Table 3).
 
     ``sharded_mesh``: item-sharded distributed retrieval (shard-local
     PQTopK + O(k x shards) merge instead of an O(B x N) score gather).
 
-    ``ladder``/``return_rung`` apply to ``method="pqtopk_pruned"`` only:
-    the calibrated slot-budget ladder for the cascade, and whether to
-    additionally return the rung taken (i32 scalar — still one dispatch;
-    the serving engine uses it to track ``rung_hit_fraction``)."""
+    ``ladder``/``pin_rung``/``return_rung`` apply to
+    ``method="pqtopk_pruned"`` only: the calibrated slot-budget ladder for
+    the cascade, whether to pin it to its cheapest rung (the router's
+    load-degraded mode — bounded cost, possibly inexact, every result
+    served through it must be tagged), and whether to additionally return
+    the rung taken (i32 scalar — still one dispatch; the serving engine
+    uses it to track ``rung_hit_fraction``)."""
     phi = constrain(sequence_embedding(params, item_seq, cfg), "phi")
     if method != "pqtopk_pruned" and return_rung:
         raise ValueError("return_rung is only meaningful for the pruned "
                          "cascade (method='pqtopk_pruned')")
+    if pin_rung and sharded_mesh is not None:
+        raise ValueError("pin_rung is not threaded through the sharded "
+                         "cascade; degrade the flat replicas instead")
     if sharded_mesh is not None:
         if method == "pqtopk_pruned" and return_rung:
             vals, ids, stats = retrieval_head.top_items_pruned_sharded(
@@ -181,7 +188,7 @@ def serve_topk(params: Params, item_seq: jax.Array, cfg: SeqRecConfig, *,
     else:
         out = retrieval_head.top_items(params["item_emb"], phi, k,
                                        method=method, pq_cfg=cfg.pq,
-                                       ladder=ladder,
+                                       ladder=ladder, pin_rung=pin_rung,
                                        return_rung=return_rung)
         if return_rung:
             vals, ids, rung = out

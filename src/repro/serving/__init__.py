@@ -1,5 +1,8 @@
-from repro.serving.engine import (DecodeEngine, MicroBatcher, Request,
-                                  Result, RetrievalEngine)
+from repro.serving.engine import (DecodeEngine, InFlightBatch, MicroBatcher,
+                                  PreparedBatch, Request, Result,
+                                  RetrievalEngine)
+from repro.serving.router import ReplicaRouter, ReplicaState
 
-__all__ = ["DecodeEngine", "MicroBatcher", "Request", "Result",
+__all__ = ["DecodeEngine", "InFlightBatch", "MicroBatcher", "PreparedBatch",
+           "ReplicaRouter", "ReplicaState", "Request", "Result",
            "RetrievalEngine"]

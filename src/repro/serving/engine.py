@@ -50,29 +50,64 @@ class Result:
     timed_out: bool = False
     # A shed request was never scored: either it was already past its
     # deadline before dispatch (load shedding — items/scores empty), or
-    # its batch exhausted the retry budget after injected/real failures.
+    # its batch exhausted the retry budget after injected/real failures,
+    # or the router's degradation ladder dropped it under overload.
     shed: bool = False
+    # Exactness contract (docs/SERVING.md): every step of the router's
+    # load-degradation ladder that can change what the client receives is
+    # tagged here ("k_cap", "k_cap+rung_pin", "load_shed", ...).  An empty
+    # tag on a non-shed result asserts the full exact serving path ran —
+    # the chaos harness holds those results bit-identical to the
+    # single-engine oracle.
+    degraded: str = ""
+    # Which replica served this result (-1: single-engine / shed before
+    # dispatch) and whether it was raced against a hedge re-issue.
+    replica: int = -1
+    hedged: bool = False
 
 
 class MicroBatcher:
     """Greedy size/timeout batcher with power-of-two padding buckets so jit
-    recompiles stay bounded."""
+    recompiles stay bounded.
+
+    ``max_wait_ms`` is the partial-batch dispatch deadline: a batch is
+    ``ready`` once it is full OR its oldest enqueued request has waited
+    longer than ``max_wait_ms`` — the pipelined router loop polls
+    :meth:`ready` so a trickle of requests dispatches after the wait
+    expires instead of blocking on a full bucket (the synchronous
+    ``drain`` path always flushes, so it never waits)."""
 
     def __init__(self, max_batch: int = 64, max_wait_ms: float = 2.0):
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.queue: collections.deque[Request] = collections.deque()
+        self._enq_t: collections.deque[float] = collections.deque()
 
     def submit(self, req: Request):
         self.queue.append(req)
+        self._enq_t.append(time.monotonic())
+
+    def oldest_wait_ms(self, now: Optional[float] = None) -> float:
+        """How long the head-of-queue request has been waiting (0.0 when
+        the queue is empty)."""
+        if not self._enq_t:
+            return 0.0
+        return ((time.monotonic() if now is None else now)
+                - self._enq_t[0]) * 1e3
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        """True when a batch should dispatch: full bucket, or the oldest
+        request has out-waited ``max_wait_ms``."""
+        if len(self.queue) >= self.max_batch:
+            return True
+        return bool(self.queue) and self.oldest_wait_ms(now) >= self.max_wait_ms
 
     def next_batch(self) -> List[Request]:
         out = []
-        start = time.monotonic()
         while self.queue and len(out) < self.max_batch:
             out.append(self.queue.popleft())
-            if (time.monotonic() - start) * 1e3 > self.max_wait_ms:
-                break
+            if self._enq_t:
+                self._enq_t.popleft()
         return out
 
     @staticmethod
@@ -81,6 +116,33 @@ class MicroBatcher:
         while b < n:
             b *= 2
         return min(b, max_batch)
+
+
+@dataclass
+class PreparedBatch:
+    """Host-side work of one dispatch, done: deadline-shed applied (twice
+    — once on entry and once more after the variant compile, so a request
+    whose deadline expired *during* a cold-start AOT compile is shed, not
+    served late), requests padded into their pow2 bucket, the compiled
+    variant resolved.  ``launch`` turns this into device work."""
+    requests: List[Request]           # alive, in batch-row order
+    seqs: Any                         # (bucket, seq_len) jnp.int32
+    fn: Callable                      # compiled variant (takes seqs)
+    kk: int                           # trace-static batch k
+    batch_index: int
+    degraded: str = ""
+
+
+@dataclass
+class InFlightBatch:
+    """One asynchronously dispatched batch: the device owns ``out`` until
+    :meth:`RetrievalEngine.complete` blocks on it.  The pipelined router
+    loop keeps up to ``dispatch_depth`` of these per replica in flight
+    while the host pads/dispatches the next batch."""
+    prep: PreparedBatch
+    out: Any
+    t0: float
+    straggler: bool = False           # set by complete()
 
 
 class RetrievalEngine:
@@ -93,7 +155,8 @@ class RetrievalEngine:
                  head_state: Optional[Any] = None,
                  faults: Optional[Any] = None, max_retries: int = 2,
                  retry_backoff_ms: float = 1.0,
-                 straggler_factor: float = 3.0):
+                 straggler_factor: float = 3.0,
+                 serve_fn_pinned: Optional[Callable] = None):
         """``serve_fn(item_seq (B,S) int32, k)`` -> (ids (B,k), scores).
 
         ``method`` is informational here (the scoring route is baked into
@@ -142,11 +205,24 @@ class RetrievalEngine:
         already-expired requests are shed before padding/dispatch.  A
         ``StragglerMonitor`` (``straggler_factor`` x rolling median)
         flags slow batches into ``stats()["stragglers"]``.
+
+        ``serve_fn_pinned`` is the optional *degraded* serve route the
+        router's load ladder steps down to (``rung_pin``): same signature
+        as ``serve_fn``, typically the pruned cascade pinned to its
+        cheapest calibrated rung (bounded cost, possibly inexact — every
+        result served through it is tagged ``Result.degraded``).
+        Compiled variants are memoised separately per (bucket, k, method,
+        pinned) key.
         """
         self._serve_fn = serve_fn
         self._jit_serve = jit_serve
         self._fn = (jax.jit(serve_fn, static_argnums=(1,)) if jit_serve
                     else serve_fn)
+        self._serve_fn_pinned = serve_fn_pinned
+        self._fn_pinned = None
+        if serve_fn_pinned is not None:
+            self._fn_pinned = (jax.jit(serve_fn_pinned, static_argnums=(1,))
+                               if jit_serve else serve_fn_pinned)
         self._compiled: Dict[Tuple[int, int, Optional[str]], Callable] = {}
         self.seq_len = seq_len
         self.k = k
@@ -253,10 +329,30 @@ class RetrievalEngine:
                                          ladder=ladder,
                                          return_rung=with_rung)
 
+        # Degraded route for the router's load ladder: the same cascade
+        # pinned to its cheapest calibrated rung (no exhaustive
+        # escalation — bounded cost, possibly inexact, so every result
+        # served through it is tagged).  Only built when the ladder has a
+        # genuinely non-exhaustive rung: a one-tile catalogue's pinned
+        # rung IS the exhaustive rung and would degrade nothing.
+        serve_fn_pinned = None
+        if method == "pqtopk_pruned" and ladder is not None \
+                and sharded_mesh is None:
+            state = params["item_emb"].get("pruned") \
+                if retrieval_head.is_pq(params["item_emb"]) else None
+            n_tiles = getattr(state, "n_tiles", None)
+            if n_tiles is None or min(ladder) < n_tiles:
+                def serve_fn_pinned(seqs, kk):
+                    return seqrec_lib.serve_topk(params, seqs, cfg, k=kk,
+                                                 method=method,
+                                                 ladder=ladder,
+                                                 pin_rung=True)
+
         return cls(serve_fn, seq_len=cfg.max_seq_len, k=k, max_k=max_k,
                    max_batch=max_batch, method=method, ladder=ladder,
                    faults=faults, max_retries=max_retries,
-                   retry_backoff_ms=retry_backoff_ms)
+                   retry_backoff_ms=retry_backoff_ms,
+                   serve_fn_pinned=serve_fn_pinned)
 
     @classmethod
     def for_seqrec_mutable(cls, params, cfg, mstate, *, k: int = 10,
@@ -386,17 +482,25 @@ class RetrievalEngine:
         kk = max(max(min(int(k), self.max_k) for k in ks), self.k, 1)
         return MicroBatcher.bucket(kk, self.max_k)
 
-    def _variant(self, bucket: int, kk: int) -> Callable:
-        """Memoised serve variant for one (batch_bucket, k_bucket, method).
+    def _variant(self, bucket: int, kk: int, pinned: bool = False) -> Callable:
+        """Memoised serve variant for one (batch_bucket, k_bucket, method,
+        pinned) key.
 
         Jitted routes are AOT-lowered and compiled once per key, so
         ``stats()["n_compiles"]`` counts real compilations — the padding
         buckets guarantee the key space is O(log(max_batch) * log(max_k)).
         Returned callables take the (bucketed) sequence batch only.
+        ``pinned=True`` resolves against the degraded rung-pinned serve
+        route (``serve_fn_pinned``); callers must fall back to
+        ``pinned=False`` when :attr:`has_pinned` is unset.
         """
-        key = (bucket, kk, self.method)
+        if pinned and self._fn_pinned is None:
+            raise ValueError("no pinned (degraded) serve fn on this engine")
+        key = (bucket, kk, self.method, pinned)
         fn = self._compiled.get(key)
         if fn is None:
+            jfn = self._fn_pinned if pinned else self._fn
+            sfn = self._serve_fn_pinned if pinned else self._serve_fn
             if self._jit_serve:
                 sds = jax.ShapeDtypeStruct((bucket, self.seq_len), jnp.int32)
                 try:
@@ -405,10 +509,10 @@ class RetrievalEngine:
                         # shapes/dtypes once, read ``self._head_state``
                         # late at every call so swap_head_state takes
                         # effect with zero recompiles.
-                        exe = self._fn.lower(sds, kk, self._head_sds).compile()
+                        exe = jfn.lower(sds, kk, self._head_sds).compile()
                         fn = lambda seqs, _e=exe: _e(seqs, self._head_state)
                     else:
-                        exe = self._fn.lower(sds, kk).compile()
+                        exe = jfn.lower(sds, kk).compile()
                         fn = lambda seqs, _e=exe: _e(seqs)
                 except (jax.errors.TracerArrayConversionError,
                         jax.errors.TracerBoolConversionError,
@@ -420,17 +524,23 @@ class RetrievalEngine:
                     # swallowed: they raise here, before any request of the
                     # batch is half-served, and never inflate n_compiles.
                     if self._head_state is not None:
-                        fn = lambda seqs, _k=kk: self._fn(
+                        fn = lambda seqs, _k=kk, _f=jfn: _f(
                             seqs, _k, self._head_state)
                     else:
-                        fn = lambda seqs, _k=kk: self._fn(seqs, _k)
+                        fn = lambda seqs, _k=kk, _f=jfn: _f(seqs, _k)
             elif self._head_state is not None:
-                fn = lambda seqs, _k=kk: self._serve_fn(
+                fn = lambda seqs, _k=kk, _f=sfn: _f(
                     seqs, _k, self._head_state)
             else:
-                fn = lambda seqs, _k=kk: self._serve_fn(seqs, _k)
+                fn = lambda seqs, _k=kk, _f=sfn: _f(seqs, _k)
             self._compiled[key] = fn
         return fn
+
+    @property
+    def has_pinned(self) -> bool:
+        """Whether this engine carries a degraded rung-pinned serve route
+        (the router's ladder step 2 falls back to step 1 without one)."""
+        return self._fn_pinned is not None
 
     def swap_head_state(self, head) -> None:
         """Replace the served head arrays between batches — zero recompiles.
@@ -468,7 +578,8 @@ class RetrievalEngine:
         self._head_state = jax.tree_util.tree_unflatten(treedef, leaves)
         self.n_swaps += 1
 
-    def _shed_result(self, r: Request, now: float) -> Result:
+    def _shed_result(self, r: Request, now: float,
+                     degraded: str = "") -> Result:
         lat = (now - r.arrival) * 1e3
         timed_out = lat > r.deadline_ms
         self.shed += 1
@@ -476,12 +587,28 @@ class RetrievalEngine:
         self.latencies_ms.append(lat)
         return Result(r.request_id, np.empty(0, np.int32),
                       np.empty(0, np.float32), lat, timed_out=timed_out,
-                      shed=True)
+                      shed=True, degraded=degraded)
 
-    def run_once(self) -> List[Result]:
-        reqs = self.batcher.next_batch()
-        if not reqs:
-            return []
+    def prepare(self, reqs: List[Request], *, k_cap: Optional[int] = None,
+                rung_pin: bool = False,
+                ) -> Tuple[List[Result], Optional[PreparedBatch]]:
+        """Host side of one dispatch: shed expired requests, pad the rest
+        into their pow2 bucket, resolve (and if cold, compile) the serve
+        variant.  Returns (shed results, prepared batch or None).
+
+        ``k_cap``/``rung_pin`` are the router's degradation-ladder knobs:
+        cap the batch k below the clients' asks, and/or route through the
+        rung-pinned serve fn.  Both are recorded in
+        ``PreparedBatch.degraded`` so every result carries its tag.
+
+        Deadline shedding runs TWICE: once on entry, and once more after
+        the variant lookup — a cold engine's first lookup AOT-compiles,
+        which can take seconds, and a tight-deadline request that expired
+        *during* that compile must come back ``timed_out`` instead of
+        being served late.  The second pass keeps the already-compiled
+        bucket (expired rows just become padding), so the compile is not
+        wasted and later identical requests serve normally.
+        """
         batch_index = self._batch_index
         self._batch_index += 1
         # Load shedding BEFORE padding/dispatch: a request already past
@@ -497,45 +624,70 @@ class RetrievalEngine:
             else:
                 alive.append(r)
         if not alive:
-            return results
+            return results, None
         bucket = MicroBatcher.bucket(len(alive), self.batcher.max_batch)
-        seqs = np.zeros((bucket, self.seq_len), np.int32)
-        for i, r in enumerate(alive):
-            s = np.asarray(r.payload)[-self.seq_len:]
-            seqs[i, -len(s):] = s
         # Requests in one batch may disagree on k: score once at the batch
         # max and slice each request's prefix — top-k prefixes nest, so
         # every request sees exactly its own top-k.  batch_k clamps and
         # buckets so client values cannot drive unbounded recompiles.
         kk = self.batch_k([r.k for r in alive])
-        fn = self._variant(bucket, kk)
-        seqs_j = jnp.asarray(seqs)
-        # Bounded retry with exponential backoff: only *injected/declared*
-        # failures (SimulatedFailure) are retried — they model transient
-        # node faults.  Genuine serve bugs still raise.  Exhausted retries
-        # shed the batch instead of crashing the serving loop.
-        t0 = time.monotonic()
-        out = None
-        for attempt in range(self.max_retries + 1):
-            try:
-                if self.faults is not None:
-                    self.faults.check(batch_index)
-                out = fn(seqs_j)
-                break
-            except SimulatedFailure:
-                if attempt >= self.max_retries:
-                    break
-                self.retried += 1
-                time.sleep(self.retry_backoff_ms * (2 ** attempt) / 1e3)
+        tags = []
+        if k_cap is not None:
+            capped = MicroBatcher.bucket(max(1, min(k_cap, self.max_k)),
+                                         self.max_k)
+            if capped < kk:
+                kk = capped
+                tags.append("k_cap")
+        pinned = rung_pin and self.has_pinned
+        if pinned:
+            tags.append("rung_pin")
+        fn = self._variant(bucket, kk, pinned=pinned)
+        # Post-compile re-shed (same bucket — expired rows become padding).
+        now = time.monotonic()
+        survivors: List[Request] = []
+        for r in alive:
+            if (now - r.arrival) * 1e3 > r.deadline_ms:
+                results.append(self._shed_result(r, now))
+            else:
+                survivors.append(r)
+        if not survivors:
+            return results, None
+        seqs = np.zeros((bucket, self.seq_len), np.int32)
+        for i, r in enumerate(survivors):
+            s = np.asarray(r.payload)[-self.seq_len:]
+            seqs[i, -len(s):] = s
+        return results, PreparedBatch(survivors, jnp.asarray(seqs), fn, kk,
+                                      batch_index, degraded="+".join(tags))
+
+    def launch(self, prep: PreparedBatch) -> InFlightBatch:
+        """Dispatch a prepared batch asynchronously.  The returned handle's
+        ``out`` is an in-flight device computation — the caller overlaps
+        host work (padding the NEXT batch) with it and calls
+        :meth:`complete` to block.  Injected faults
+        (``ServeFaultInjector.check``) raise here, before dispatch, so
+        the caller's retry loop sees them."""
         if self.faults is not None:
-            delay = self.faults.delay_s(batch_index)
+            self.faults.check(prep.batch_index)
+        t0 = time.monotonic()
+        return InFlightBatch(prep, prep.fn(prep.seqs), t0)
+
+    def complete(self, inflight: InFlightBatch) -> List[Result]:
+        """Block until the dispatched batch has actually finished, then
+        timestamp and slice per-request results.
+
+        ``jax.block_until_ready`` comes FIRST: JAX dispatch is async even
+        on CPU, so timestamping after the ``fn(seqs)`` call alone would
+        measure enqueue cost, not completion — latency accounting and the
+        straggler monitor would both read near-zero for a slow kernel."""
+        prep = inflight.prep
+        out = jax.block_until_ready(inflight.out)
+        if self.faults is not None:
+            delay = self.faults.delay_s(prep.batch_index)
             if delay:
                 time.sleep(delay)  # synthetic straggler, lands in elapsed
-        self.straggler_monitor.record(batch_index, time.monotonic() - t0)
         now = time.monotonic()
-        if out is None:
-            results.extend(self._shed_result(r, now) for r in alive)
-            return results
+        inflight.straggler = self.straggler_monitor.record(
+            prep.batch_index, now - inflight.t0)
         if len(out) == 3:
             # Ladder-enabled pruned route: third output is the rung taken
             # (an i32 scalar riding the same dispatch) — tally it so
@@ -545,14 +697,51 @@ class RetrievalEngine:
         else:
             ids, scores = out
         ids, scores = np.asarray(ids), np.asarray(scores)
-        for i, r in enumerate(alive):
+        results: List[Result] = []
+        for i, r in enumerate(prep.requests):
             lat = (now - r.arrival) * 1e3
             timed_out = lat > r.deadline_ms
             self.timeouts += int(timed_out)
             self.latencies_ms.append(lat)
-            rk = max(1, min(r.k, kk))
+            rk = max(1, min(r.k, prep.kk))
             results.append(Result(r.request_id, ids[i, :rk],
-                                  scores[i, :rk], lat, timed_out))
+                                  scores[i, :rk], lat, timed_out,
+                                  degraded=prep.degraded))
+        return results
+
+    def run_once(self, *, k_cap: Optional[int] = None,
+                 rung_pin: bool = False) -> List[Result]:
+        """Synchronous serve of one batch: prepare -> launch (with bounded
+        retry) -> complete.  The pipelined router loop uses the pieces
+        directly to keep multiple batches in flight."""
+        reqs = self.batcher.next_batch()
+        if not reqs:
+            return []
+        results, prep = self.prepare(reqs, k_cap=k_cap, rung_pin=rung_pin)
+        if prep is None:
+            return results
+        # Bounded retry with exponential backoff: only *injected/declared*
+        # failures (SimulatedFailure) are retried — they model transient
+        # node faults.  Genuine serve bugs still raise.  Exhausted retries
+        # shed the batch instead of crashing the serving loop.
+        inflight = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                inflight = self.launch(prep)
+                break
+            except SimulatedFailure:
+                if attempt >= self.max_retries:
+                    break
+                self.retried += 1
+                time.sleep(self.retry_backoff_ms * (2 ** attempt) / 1e3)
+        if inflight is None:
+            # Retries exhausted: the batch never dispatched, so the
+            # injector's straggler delay must NOT fire — sleeping here
+            # would only inflate the shed requests' recorded latency.
+            now = time.monotonic()
+            results.extend(self._shed_result(r, now) for r in prep.requests)
+            return results
+        results.extend(self.complete(inflight))
         return results
 
     def drain(self) -> List[Result]:
@@ -562,11 +751,16 @@ class RetrievalEngine:
         return out
 
     def stats(self) -> Dict[str, Any]:
-        lat = np.asarray(self.latencies_ms or [0.0])
+        # No traffic yet -> None, NOT 0.0: a placeholder zero is a real
+        # latency to any aggregator averaging across replicas and would
+        # drag fleet percentiles toward zero.
+        lat = (np.asarray(self.latencies_ms) if self.latencies_ms
+               else None)
         out: Dict[str, Any] = {
             "count": float(len(self.latencies_ms)),
-            "mRT_ms": float(np.median(lat)),
-            "p99_ms": float(np.percentile(lat, 99)),
+            "mRT_ms": float(np.median(lat)) if lat is not None else None,
+            "p99_ms": (float(np.percentile(lat, 99))
+                       if lat is not None else None),
             "timeouts": float(self.timeouts),
             "n_compiles": float(len(self._compiled)),
             "retried": float(self.retried),

@@ -1,0 +1,645 @@
+"""Replicated serving fabric: a ``ReplicaRouter`` fronts K identical
+``RetrievalEngine`` replicas behind the single-engine submit/drain/stats
+API and layers on what one engine cannot give you:
+
+* **Pipelined dispatch** — each replica is owned by one worker thread
+  that keeps up to ``dispatch_depth`` batches in flight (JAX dispatch is
+  async: the host pads and enqueues batch N+1 while the device still owns
+  batch N), and partial batches dispatch once the oldest request has
+  waited ``max_wait_ms`` — a trickle of traffic never stalls on a full
+  bucket.
+* **Health-checked failover** — a per-replica state machine (healthy ->
+  suspect on straggler/failure strikes -> ejected) with half-open probe
+  re-admission after an exponentially backed-off cooldown.  Work in
+  flight on a dead replica is re-dispatched to a healthy one; a request
+  is NEVER lost, and never answered twice.
+* **Hedged dispatch** — a batch outstanding longer than the observed
+  p99 job time (floored at ``hedge_floor_ms``) is re-issued to a second
+  healthy replica; the first completion wins and the loser's results are
+  suppressed by request id.
+* **Load-adaptive degradation** — a watermark ladder on total queue
+  depth: level 1 caps the batch k, level 2 additionally pins the pruned
+  cascade to its cheapest calibrated rung (``RetrievalEngine``'s
+  ``serve_fn_pinned`` route), level 3 sheds new work outright.  Every
+  result served below full fidelity carries a ``Result.degraded`` tag,
+  and recovery is hysteresis-damped (the level only drops after the
+  depth has sat below the low watermark for ``recover_patience``
+  consecutive scheduling passes) so the ladder cannot thrash.
+
+Threading model: each engine is touched by exactly ONE worker thread
+(engines are not thread-safe); the scheduler — health bookkeeping, job
+assignment, hedging, the ladder — runs entirely on the caller's thread
+inside :meth:`pump` / :meth:`drain`.  The only cross-thread structures
+are the per-replica job queues and the shared completion-event queue.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import (InFlightBatch, MicroBatcher, Request,
+                                  Result, RetrievalEngine)
+from repro.training.fault_tolerance import ReplicaFaultPlan, SimulatedFailure
+
+_STOP = object()
+
+HEALTHY, SUSPECT, EJECTED, PROBING = "healthy", "suspect", "ejected", "probing"
+
+
+@dataclass
+class _Job:
+    """One batch's worth of work as handed to a replica worker.  A hedge
+    re-issue is a second ``_Job`` with the same ``job_id`` (duplicate
+    results are suppressed by request id at delivery)."""
+    job_id: int
+    requests: List[Request]
+    k_cap: Optional[int]
+    rung_pin: bool
+    replica: int
+    hedged: bool = False
+
+
+@dataclass
+class _JobState:
+    """Scheduler-side view of one logical job across all its copies."""
+    requests: List[Request]
+    k_cap: Optional[int]
+    rung_pin: bool
+    replica: int                      # replica of the primary copy
+    copies: int = 1                   # live copies in flight
+    hedged: bool = False
+    attempts: int = 0                 # failed-and-redispatched count
+    first_dispatch_t: float = 0.0
+
+
+@dataclass
+class _Event:
+    kind: str                         # "done" | "fail"
+    job: _Job
+    results: List[Result]
+    replica: int
+    straggler: bool = False
+
+
+@dataclass
+class ReplicaState:
+    """Health state machine for one replica.  Transitions happen only on
+    the scheduler thread:
+
+    healthy --strikes>=suspect_after--> suspect
+            --strikes>=eject_after-->   ejected  (in-flight work
+                                                  re-dispatched on failure)
+    ejected --cooldown elapsed-->       probing  (half-open: ONE job)
+    probing --probe succeeds-->         healthy  (re-admitted, cooldown
+                                                  reset)
+            --probe fails-->            ejected  (cooldown doubles)
+    """
+    state: str = HEALTHY
+    strikes: int = 0
+    cooldown_ms: float = 100.0
+    ejected_at: float = 0.0
+    probe_outstanding: bool = False
+    inflight: int = 0                 # jobs assigned, not yet resolved
+    dispatched: int = 0
+    completed: int = 0
+    failures: int = 0
+    stragglers: int = 0
+    ejections: int = 0
+    readmissions: int = 0
+
+
+class ReplicaRouter:
+    """Route requests across K ``RetrievalEngine`` replicas (same model,
+    same compiled serving route) with failover, hedging and graceful
+    degradation.  API mirrors the single engine: :meth:`submit`,
+    :meth:`drain`, :meth:`stats`; :meth:`pump` runs one scheduling pass
+    for callers driving their own loop.  Use as a context manager (or
+    call :meth:`close`) to join the worker threads."""
+
+    def __init__(self, engines: Sequence[RetrievalEngine], *,
+                 dispatch_depth: int = 2,
+                 max_batch: Optional[int] = None,
+                 max_wait_ms: float = 2.0,
+                 fault_plans: Optional[Dict[int, ReplicaFaultPlan]] = None,
+                 suspect_after: int = 1, eject_after: int = 3,
+                 cooldown_ms: float = 100.0,
+                 hedge: bool = True, hedge_floor_ms: float = 50.0,
+                 max_redispatch: Optional[int] = None,
+                 degrade_high: int = 256, degrade_low: int = 64,
+                 degrade_k_cap: Optional[int] = None,
+                 degrade_patience: int = 1, recover_patience: int = 3):
+        if not engines:
+            raise ValueError("need at least one replica engine")
+        self.engines = list(engines)
+        self.n_replicas = len(self.engines)
+        self.dispatch_depth = max(1, dispatch_depth)
+        mb = max_batch or min(e.batcher.max_batch for e in self.engines)
+        self.batcher = MicroBatcher(max_batch=mb, max_wait_ms=max_wait_ms)
+        self.fault_plans = dict(fault_plans or {})
+        self.suspect_after = suspect_after
+        self.eject_after = eject_after
+        self.hedge_enabled = hedge and self.n_replicas > 1
+        self.hedge_floor_ms = hedge_floor_ms
+        self.max_redispatch = (2 * self.n_replicas if max_redispatch is None
+                               else max_redispatch)
+        self.degrade_high = degrade_high
+        self.degrade_low = degrade_low
+        self.degrade_k_cap = (degrade_k_cap if degrade_k_cap is not None
+                              else min(e.k for e in self.engines))
+        self.degrade_patience = max(1, degrade_patience)
+        self.recover_patience = max(1, recover_patience)
+
+        self.replicas = [ReplicaState(cooldown_ms=cooldown_ms)
+                         for _ in range(self.n_replicas)]
+        self._base_cooldown_ms = cooldown_ms
+        self._queues: List[queue.Queue] = [queue.Queue()
+                                           for _ in range(self.n_replicas)]
+        self._events: queue.Queue = queue.Queue()
+        self._dispatch_idx = [0] * self.n_replicas   # worker-local counters
+
+        self._jobs: Dict[int, _JobState] = {}
+        self._retry: collections.deque[_JobState] = collections.deque()
+        self._next_job_id = 0
+        self._expected: set = set()
+        self._done_ids: set = set()
+        self._completed: List[Result] = []
+        self._latencies_ms: List[float] = []
+        self._job_wall_ms: collections.deque = collections.deque(maxlen=512)
+
+        self.level = 0
+        self._over = self._under = 0
+        self.degrade_events = 0
+        self.recover_events = 0
+        self.degraded_results: collections.Counter = collections.Counter()
+        self.shed_load = 0
+        self.hedges = 0
+        self.hedge_wins = 0
+        self.duplicates_suppressed = 0
+        self.redispatched = 0
+
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._worker, args=(rid,), daemon=True,
+                             name=f"replica-{rid}")
+            for rid in range(self.n_replicas)]
+        for t in self._threads:
+            t.start()
+
+    @classmethod
+    def for_seqrec(cls, params, cfg, *, n_replicas: int = 2, k: int = 10,
+                   max_batch: int = 64, method: Optional[str] = None,
+                   sharded_mesh=None, calibrate: Optional[bool] = None,
+                   survival_stats: Optional[Sequence[int]] = None,
+                   ladder=None, **router_kw) -> "ReplicaRouter":
+        """Stand up K identical replicas of a seqrec serving engine.  The
+        pruned route's slot-budget ladder is calibrated ONCE (on the
+        first replica) and shared, so replicas compile byte-identical
+        serve functions — which is what makes the healthy-path
+        bit-parity guarantee hold across failover."""
+        first = RetrievalEngine.for_seqrec(
+            params, cfg, k=k, max_batch=max_batch, method=method,
+            sharded_mesh=sharded_mesh, calibrate=calibrate,
+            survival_stats=survival_stats, ladder=ladder)
+        engines = [first]
+        for _ in range(n_replicas - 1):
+            engines.append(RetrievalEngine.for_seqrec(
+                params, cfg, k=k, max_batch=max_batch, method=method,
+                sharded_mesh=sharded_mesh, ladder=first.ladder,
+                calibrate=False))
+        return cls(engines, **router_kw)
+
+    def warmup(self, ks: Sequence[int] = (), buckets: Sequence[int] = ()):
+        """Synchronously compile the hot serve variants on EVERY replica
+        (full-bucket batch at the engines' base k plus any extra ``ks`` /
+        ``buckets``, and the rung-pinned route where present) before
+        traffic arrives.  Cold AOT compiles serialise on a loaded host;
+        without warmup the first batches straggle behind multi-second
+        compiles, the hedger fires on compile noise, and a latency
+        benchmark measures XLA, not serving."""
+        for eng in self.engines:
+            bks = set(buckets) | {self.batcher.max_batch}
+            kks = {eng.batch_k([k]) for k in set(ks) | {eng.k}}
+            for b in bks:
+                bb = MicroBatcher.bucket(b, eng.batcher.max_batch)
+                for kk in kks:
+                    eng._variant(bb, kk)
+                    if eng.has_pinned:
+                        eng._variant(bb, kk, pinned=True)
+
+    # ------------------------------------------------------------------
+    # worker side (one thread per replica; the only code touching engines)
+    # ------------------------------------------------------------------
+
+    def _worker(self, rid: int):
+        eng = self.engines[rid]
+        plan = self.fault_plans.get(rid)
+        q = self._queues[rid]
+        inflight: collections.deque = collections.deque()
+        while True:
+            job = None
+            if len(inflight) < self.dispatch_depth:
+                try:
+                    # Block only when the pipeline is empty; with work in
+                    # flight, poll so completions are not starved.
+                    job = q.get(block=not inflight, timeout=0.02)
+                except queue.Empty:
+                    job = None
+            if job is _STOP:
+                while inflight:           # never abandon in-flight work
+                    self._finish(rid, *inflight.popleft())
+                break
+            if job is not None:
+                self._start(rid, eng, plan, job, inflight)
+            elif inflight:
+                self._finish(rid, *inflight.popleft())
+
+    def _start(self, rid: int, eng: RetrievalEngine,
+               plan: Optional[ReplicaFaultPlan], job: _Job,
+               inflight: collections.deque):
+        """Prepare + asynchronously launch one job; chaos (the replica
+        fault plan) is consulted on this replica's own dispatch counter,
+        so a schedule replays identically however the router interleaves
+        replicas."""
+        d_idx = self._dispatch_idx[rid]
+        self._dispatch_idx[rid] = d_idx + 1
+        try:
+            extra = plan.check(d_idx) if plan is not None else 0.0
+            shed, prep = eng.prepare(job.requests, k_cap=job.k_cap,
+                                     rung_pin=job.rung_pin)
+            if prep is None:
+                self._events.put(_Event("done", job, shed, rid))
+                return
+            if extra:
+                time.sleep(extra)         # straggling replica
+            inflight.append((job, eng.launch(prep), shed))
+        except SimulatedFailure:
+            self._events.put(_Event("fail", job, [], rid))
+
+    def _finish(self, rid: int, job: _Job, inf: InFlightBatch,
+                shed: List[Result]):
+        try:
+            res = self.engines[rid].complete(inf)
+        except SimulatedFailure:
+            # Deadline sheds from prepare() are still final answers — only
+            # the dispatched rows are retried elsewhere.
+            self._events.put(_Event("fail", job, shed, rid))
+        else:
+            self._events.put(_Event("done", job, shed + res, rid,
+                                    straggler=inf.straggler))
+
+    # ------------------------------------------------------------------
+    # scheduler side (caller thread only)
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request):
+        """Accept a request (or, at ladder level 3, shed it immediately
+        with a ``load_shed``-tagged Result — the client still gets
+        exactly one answer)."""
+        self._expected.add(req.request_id)
+        if self.level >= 3:
+            now = time.monotonic()
+            lat = (now - req.arrival) * 1e3
+            self.shed_load += 1
+            self.degraded_results["load_shed"] += 1
+            self._done_ids.add(req.request_id)
+            self._latencies_ms.append(lat)
+            self._completed.append(Result(
+                req.request_id, np.empty(0, np.int32),
+                np.empty(0, np.float32), lat, shed=True,
+                degraded="load_shed"))
+            return
+        self.batcher.submit(req)
+
+    def pump(self, block: bool = False, timeout: float = 0.05) -> bool:
+        """One scheduling pass: absorb completion events, update the
+        degradation ladder and replica health, assign ready batches,
+        issue hedges.  Returns True if any event was processed."""
+        progressed = False
+        first = True
+        while True:
+            try:
+                ev = self._events.get(block=block and first, timeout=timeout)
+            except queue.Empty:
+                break
+            first = False
+            progressed = True
+            self._handle(ev)
+        self._update_load()
+        self._update_health()
+        self._schedule()
+        if self.hedge_enabled:
+            self._maybe_hedge()
+        return progressed
+
+    def drain(self, timeout_s: float = 120.0) -> List[Result]:
+        """Pump until every submitted request has exactly one Result; a
+        stall (no event for ``timeout_s``) raises rather than hanging —
+        by construction (failover + forced probes) that only fires on a
+        genuinely wedged fabric."""
+        last_progress = time.monotonic()
+        while self._expected - self._done_ids:
+            if self.pump(block=True, timeout=0.05):
+                last_progress = time.monotonic()
+            elif time.monotonic() - last_progress > timeout_s:
+                missing = sorted(self._expected - self._done_ids)[:10]
+                raise RuntimeError(
+                    f"router stalled; undelivered request ids {missing}...")
+        self.pump()                       # absorb trailing duplicates
+        out, self._completed = self._completed, []
+        return out
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        for q in self._queues:
+            q.put(_STOP)
+        for t in self._threads:
+            t.join(timeout=30.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- event handling -------------------------------------------------
+
+    def _handle(self, ev: _Event):
+        rs = self.replicas[ev.replica]
+        rs.inflight = max(0, rs.inflight - 1)
+        st = self._jobs.get(ev.job.job_id)
+        if rs.probe_outstanding:
+            rs.probe_outstanding = False
+        delivered_new = False
+        for r in ev.results:
+            if r.request_id in self._done_ids:
+                self.duplicates_suppressed += 1
+                continue
+            delivered_new = True
+            self._done_ids.add(r.request_id)
+            if not r.shed:
+                r.replica = ev.replica
+                r.hedged = bool(st and st.hedged)
+            if r.degraded:
+                self.degraded_results[r.degraded] += 1
+            self._latencies_ms.append(r.latency_ms)
+            self._completed.append(r)
+        if ev.kind == "done":
+            rs.completed += 1
+            if st is not None and st.first_dispatch_t:
+                self._job_wall_ms.append(
+                    (time.monotonic() - st.first_dispatch_t) * 1e3)
+            if ev.job.hedged and delivered_new:
+                self.hedge_wins += 1
+            if ev.straggler:
+                rs.stragglers += 1
+                self._strike(ev.replica)
+            else:
+                self._ok(ev.replica)
+        else:
+            rs.failures += 1
+            self._strike(ev.replica)
+        if st is None:
+            return
+        st.copies -= 1
+        if st.copies > 0:
+            return
+        undone = [r for r in st.requests
+                  if r.request_id not in self._done_ids]
+        if not undone:
+            del self._jobs[ev.job.job_id]
+            return
+        # Last live copy failed with work undelivered: re-dispatch (the
+        # in-flight work of a dead replica is never lost) until the
+        # patience budget runs out, then shed — still exactly one Result.
+        st.requests = undone
+        st.attempts += 1
+        del self._jobs[ev.job.job_id]
+        if st.attempts <= self.max_redispatch:
+            self.redispatched += 1
+            self._retry.append(st)
+        else:
+            now = time.monotonic()
+            for r in undone:
+                lat = (now - r.arrival) * 1e3
+                self._done_ids.add(r.request_id)
+                self.degraded_results["redispatch_exhausted"] += 1
+                self._latencies_ms.append(lat)
+                self._completed.append(Result(
+                    r.request_id, np.empty(0, np.int32),
+                    np.empty(0, np.float32), lat,
+                    timed_out=lat > r.deadline_ms, shed=True,
+                    degraded="redispatch_exhausted"))
+
+    # -- health ---------------------------------------------------------
+
+    def _strike(self, rid: int):
+        rs = self.replicas[rid]
+        now = time.monotonic()
+        if rs.state == PROBING:
+            # Half-open probe failed: back to ejected, backoff doubled.
+            rs.state = EJECTED
+            rs.ejected_at = now
+            rs.cooldown_ms *= 2.0
+            return
+        rs.strikes += 1
+        if rs.strikes >= self.eject_after and rs.state != EJECTED:
+            rs.state = EJECTED
+            rs.ejected_at = now
+            rs.ejections += 1
+        elif rs.strikes >= self.suspect_after and rs.state == HEALTHY:
+            rs.state = SUSPECT
+
+    def _ok(self, rid: int):
+        rs = self.replicas[rid]
+        if rs.state == PROBING:
+            rs.state = HEALTHY
+            rs.strikes = 0
+            rs.cooldown_ms = self._base_cooldown_ms
+            rs.readmissions += 1
+            return
+        if rs.strikes > 0:
+            rs.strikes -= 1
+            if rs.state == SUSPECT and rs.strikes < self.suspect_after:
+                rs.state = HEALTHY
+
+    def _update_health(self):
+        now = time.monotonic()
+        for rs in self.replicas:
+            if rs.state == EJECTED and \
+                    (now - rs.ejected_at) * 1e3 >= rs.cooldown_ms:
+                rs.state = PROBING
+                rs.probe_outstanding = False
+
+    def _eligible(self, exclude: int = -1) -> Optional[int]:
+        """Pick the assignable replica: a free half-open probe slot first
+        (a probing replica takes at most ONE job, and re-admission can
+        only happen by actually trialling it — ranking it behind healthy
+        replicas would starve the probe forever on a healthy fleet),
+        then healthy before suspect, least-loaded within a rank.  When
+        every replica is ejected, force the one closest to cooldown into
+        probing — liveness must not wait for a timer while requests hold
+        deadlines."""
+        rank = {PROBING: 0, HEALTHY: 1, SUSPECT: 2}
+        best, best_key = None, None
+        for rid, rs in enumerate(self.replicas):
+            if rid == exclude or rs.state == EJECTED:
+                continue
+            if rs.state == PROBING and rs.probe_outstanding:
+                continue
+            key = (rank[rs.state],
+                   rs.inflight + self._queues[rid].qsize())
+            if best_key is None or key < best_key:
+                best, best_key = rid, key
+        if best is None:
+            ejected = [(self.replicas[rid].ejected_at
+                        + self.replicas[rid].cooldown_ms / 1e3, rid)
+                       for rid in range(self.n_replicas)
+                       if rid != exclude
+                       and self.replicas[rid].state == EJECTED]
+            if ejected:
+                _, rid = min(ejected)
+                self.replicas[rid].state = PROBING
+                self.replicas[rid].probe_outstanding = False
+                return rid
+        return best
+
+    # -- assignment / hedging / ladder ----------------------------------
+
+    def _put(self, rid: int, job: _Job):
+        rs = self.replicas[rid]
+        rs.dispatched += 1
+        rs.inflight += 1
+        if rs.state == PROBING:
+            rs.probe_outstanding = True
+        self._queues[rid].put(job)
+
+    def _assign(self, st: _JobState) -> bool:
+        rid = self._eligible()
+        if rid is None:
+            return False
+        st.replica = rid
+        st.first_dispatch_t = st.first_dispatch_t or time.monotonic()
+        jid = self._next_job_id
+        self._next_job_id += 1
+        self._jobs[jid] = st
+        self._put(rid, _Job(jid, st.requests, st.k_cap, st.rung_pin, rid))
+        return True
+
+    def _schedule(self):
+        while self._retry:
+            st = self._retry[0]
+            st.copies = 1
+            st.hedged = False
+            if not self._assign(st):
+                return                    # nothing assignable right now
+            self._retry.popleft()
+        while self.batcher.ready():
+            reqs = self.batcher.next_batch()
+            st = _JobState(reqs,
+                           k_cap=(self.degrade_k_cap if self.level >= 1
+                                  else None),
+                           rung_pin=self.level >= 2, replica=-1)
+            if not self._assign(st):
+                # Put them back at the FRONT: arrival order is preserved
+                # and the next pump retries.
+                for r in reversed(reqs):
+                    self.batcher.queue.appendleft(r)
+                    self.batcher._enq_t.appendleft(r.arrival)
+                return
+
+    def hedge_delay_ms(self) -> float:
+        """Current hedge trigger: observed p99 job wall time, floored —
+        with few samples the floor dominates so a cold fabric does not
+        hedge on compile noise."""
+        if len(self._job_wall_ms) < 16:
+            return self.hedge_floor_ms
+        return max(self.hedge_floor_ms,
+                   float(np.percentile(np.asarray(self._job_wall_ms), 99)))
+
+    def _maybe_hedge(self):
+        delay_ms = self.hedge_delay_ms()
+        now = time.monotonic()
+        for jid, st in list(self._jobs.items()):
+            if st.hedged or st.copies != 1:
+                continue
+            if (now - st.first_dispatch_t) * 1e3 < delay_ms:
+                continue
+            rid = self._eligible(exclude=st.replica)
+            if rid is None or self.replicas[rid].state != HEALTHY:
+                continue                  # only hedge onto healthy spares
+            st.hedged = True
+            st.copies += 1
+            self.hedges += 1
+            self._put(rid, _Job(jid, st.requests, st.k_cap, st.rung_pin,
+                                rid, hedged=True))
+
+    def _load(self) -> int:
+        return (len(self.batcher.queue)
+                + sum(len(st.requests) for st in self._jobs.values())
+                + sum(len(st.requests) for st in self._retry))
+
+    def _update_load(self):
+        depth = self._load()
+        if depth >= self.degrade_high:
+            self._over += 1
+            self._under = 0
+            if self._over >= self.degrade_patience and self.level < 3:
+                self.level += 1
+                self.degrade_events += 1
+                self._over = 0
+        elif depth <= self.degrade_low:
+            self._under += 1
+            self._over = 0
+            if self._under >= self.recover_patience and self.level > 0:
+                self.level -= 1
+                self.recover_events += 1
+                self._under = 0
+        else:
+            # Hysteresis band between the watermarks: hold the level.
+            self._over = self._under = 0
+
+    # -- observability ---------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        lats = self._latencies_ms
+        done = len(self._done_ids)
+        per_replica = {}
+        for rid, rs in enumerate(self.replicas):
+            per_replica[rid] = {
+                "state": rs.state, "strikes": rs.strikes,
+                "ejections": rs.ejections, "readmissions": rs.readmissions,
+                "dispatched": rs.dispatched, "completed": rs.completed,
+                "failures": rs.failures, "stragglers": rs.stragglers,
+                "queue_depth": self._queues[rid].qsize() + rs.inflight,
+                "n_compiles": len(self.engines[rid]._compiled),
+            }
+        lat = np.asarray(lats) if lats else None
+        return {
+            "count": float(done),
+            "pending": float(len(self.batcher.queue)),
+            "outstanding": float(sum(len(st.requests)
+                                     for st in self._jobs.values())),
+            "p50_ms": float(np.percentile(lat, 50)) if lat is not None
+            else None,
+            "p99_ms": float(np.percentile(lat, 99)) if lat is not None
+            else None,
+            "hedges": float(self.hedges),
+            "hedge_wins": float(self.hedge_wins),
+            "hedge_delay_ms": self.hedge_delay_ms(),
+            "duplicates_suppressed": float(self.duplicates_suppressed),
+            "redispatched": float(self.redispatched),
+            "degrade_level": self.level,
+            "degrade_events": float(self.degrade_events),
+            "recover_events": float(self.recover_events),
+            "degraded_results": dict(self.degraded_results),
+            "shed_load": float(self.shed_load),
+            "replicas": per_replica,
+        }

@@ -10,7 +10,7 @@ from __future__ import annotations
 import logging
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,6 +71,50 @@ class ServeFaultInjector:
             self._slowed.add(batch_index)
             return self.slow_ms / 1e3
         return 0.0
+
+
+@dataclass
+class ReplicaFaultPlan:
+    """Replica-level chaos schedule for the multi-replica serving fabric
+    (``serving/router.py``): windows over one replica's *own* dispatch
+    counter during which every dispatch crashes (raises
+    :class:`SimulatedFailure` — a dead / preempted replica) or is slowed
+    by ``slow_ms`` (a straggling replica).  Window bounds are half-open
+    ``[start, stop)`` dispatch indices, so a schedule is reproducible
+    regardless of how the router interleaves replicas: the i-th dispatch
+    a replica attempts always sees the same fate.
+
+    This is the layer ABOVE :class:`ServeFaultInjector` (which models
+    transient per-batch faults inside one engine and is retried by the
+    engine's own backoff loop): a crash window long enough to exhaust the
+    router's re-dispatch patience looks like a dead node and must trip
+    the health state machine — ejection, re-dispatch of its in-flight
+    work, and half-open probe re-admission once the window has passed."""
+    crash_windows: Sequence[Tuple[int, int]] = ()
+    slow_windows: Sequence[Tuple[int, int]] = ()
+    slow_ms: float = 0.0
+
+    @staticmethod
+    def _in(windows, idx: int) -> bool:
+        return any(lo <= idx < hi for lo, hi in windows)
+
+    def mode(self, dispatch_index: int) -> str:
+        """Fate of this replica's ``dispatch_index``-th dispatch:
+        ``"crash"`` beats ``"slow"`` when windows overlap."""
+        if self._in(self.crash_windows, dispatch_index):
+            return "crash"
+        if self._in(self.slow_windows, dispatch_index):
+            return "slow"
+        return "ok"
+
+    def check(self, dispatch_index: int) -> float:
+        """Raise on a crashed dispatch; return the extra seconds a slowed
+        dispatch must sleep (0.0 when healthy)."""
+        m = self.mode(dispatch_index)
+        if m == "crash":
+            raise SimulatedFailure(
+                f"injected replica crash at dispatch {dispatch_index}")
+        return self.slow_ms / 1e3 if m == "slow" else 0.0
 
 
 @dataclass

@@ -464,3 +464,16 @@ def test_engine_aot_single_dispatch_via_framework():
     assert res.info["runtime_dispatches"] == 1
     rec = report.result("engine_aot", "recompile-hazard")
     assert rec.info["n_specs"] >= 3
+
+
+@pytest.mark.slow
+def test_router_replicated_single_dispatch_via_framework():
+    """PR 8 acceptance: the replicated fabric serves a healthy-path batch
+    as exactly one compiled dispatch on exactly one replica, with the
+    replica id provably never keying a compile."""
+    report = run_default(entrypoints=["router_replicated"])
+    assert report.ok, report.render()
+    res = report.result("router_replicated", "dispatch-count")
+    assert res.info["runtime_dispatches"] == 1
+    rec = report.result("router_replicated", "recompile-hazard")
+    assert rec.info["n_specs"] >= 4

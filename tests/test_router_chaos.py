@@ -1,0 +1,349 @@
+"""Chaos harness for the replicated serving fabric (serving/router.py).
+
+The invariants under fault injection (docs/SERVING.md):
+
+* **Exactly one Result per request** — never silence, never duplicates,
+  through replica crashes, re-dispatch, hedging and load shedding.
+* **Healthy-path exactness** — every result NOT tagged degraded/shed is
+  bit-identical to a single-engine oracle serving the same requests.
+* **Observability** — stats() reports per-replica health, hedge wins,
+  degradation counts, queue depth and latency percentiles; ejection ->
+  probe -> re-admission and degradation -> recovery cycles are visible.
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import seqrec as S
+from repro.serving import ReplicaRouter, Request, RetrievalEngine
+from repro.training.fault_tolerance import ReplicaFaultPlan
+
+# 8192 items -> 4 pruning tiles at the default 2048 tile, so LADDER's
+# single 1-tile rung is genuinely non-exhaustive and the rung-pinned
+# degraded route really is a different (cheaper, inexact-capable) program.
+CFG = dataclasses.replace(get_reduced("sasrec-recjpq").model, n_items=8192)
+LADDER = (1,)
+K = 5
+BIG_K = 16          # above the degrade k-cap's pow2 bucket, so capping bites
+
+
+@pytest.fixture(scope="module")
+def params():
+    return S.init_seqrec(jax.random.PRNGKey(0), CFG)
+
+
+def _request_specs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(n):
+        seq = rng.integers(1, CFG.n_items + 1, int(rng.integers(2, 16)))
+        specs.append((i, seq, BIG_K if i % 3 == 0 else K))
+    return specs
+
+
+@pytest.fixture(scope="module")
+def oracle_results(params):
+    """Single-engine oracle: the same requests served with no router, no
+    faults, no degradation — the healthy-path ground truth."""
+    eng = RetrievalEngine.for_seqrec(params, CFG, k=K, max_batch=8,
+                                     method="pqtopk_pruned", ladder=LADDER,
+                                     calibrate=False)
+    for rid_, payload, kreq in _request_specs(260):
+        eng.submit(Request(rid_, payload, k=kreq))
+    return {r.request_id: r for r in eng.drain()}
+
+
+def _mk_router(params, **kw):
+    kw.setdefault("n_replicas", 3)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("method", "pqtopk_pruned")
+    kw.setdefault("ladder", LADDER)
+    kw.setdefault("calibrate", False)
+    return ReplicaRouter.for_seqrec(params, CFG, k=K, **kw)
+
+
+def _pump_until(router, cond, timeout_s=30.0, sleep_s=0.01):
+    t0 = time.monotonic()
+    while not cond():
+        router.pump()
+        if time.monotonic() - t0 > timeout_s:
+            return False
+        time.sleep(sleep_s)
+    return True
+
+
+def _parity(results, oracle):
+    """Assert healthy-path (untagged, unshed) results match the oracle
+    bit-for-bit; returns how many were checked."""
+    checked = 0
+    for r in results:
+        if r.shed or r.degraded or r.request_id not in oracle:
+            continue
+        o = oracle[r.request_id]
+        np.testing.assert_array_equal(
+            r.items, o.items,
+            err_msg=f"request {r.request_id} on replica {r.replica}")
+        np.testing.assert_array_equal(r.scores, o.scores)
+        checked += 1
+    return checked
+
+
+@pytest.mark.slow
+def test_chaos_flat_exactly_once_and_bit_parity(params, oracle_results):
+    """The flagship run: >= 200 requests over K=3 replicas with one
+    replica crash-looping, the ladder driven through a degrade ->
+    recover cycle, and the crashed replica ejected and re-admitted."""
+    plans = {1: ReplicaFaultPlan(crash_windows=((0, 3),))}
+    with _mk_router(params, fault_plans=plans, suspect_after=1,
+                    eject_after=1, cooldown_ms=20.0,
+                    hedge_floor_ms=500.0,
+                    degrade_high=64, degrade_low=8,
+                    degrade_patience=1, recover_patience=2) as router:
+        router.warmup(ks=[BIG_K])
+        specs = _request_specs(260)
+        all_results = []
+
+        # Phase 1 (steady state): trickle 120 requests with pumping —
+        # the fabric stays at level 0 and replica 1 crashes into
+        # ejection, half-open probes, and re-admission.
+        for rid_, payload, kreq in specs[:120]:
+            router.submit(Request(rid_, payload, k=kreq))
+            if rid_ % 8 == 7:
+                router.pump()
+        all_results += router.drain()
+
+        # Replica 1's crash window covers its first 3 dispatches; with
+        # eject_after=1 the first failure ejects it and probes burn
+        # through the window.  Keep traffic flowing so probes have jobs
+        # to ride on.
+        extra = 10_000
+        rng = np.random.default_rng(42)
+        while router.replicas[1].readmissions == 0:
+            for j in range(8):
+                router.submit(Request(
+                    extra + j, rng.integers(1, CFG.n_items + 1, 8), k=K))
+            extra += 8
+            router.drain()
+            assert extra < 11_000, "replica 1 never re-admitted"
+        st = router.stats()
+        assert st["replicas"][1]["ejections"] >= 1
+        assert st["replicas"][1]["readmissions"] >= 1
+
+        # Phase 2 (overload): burst the remaining 140 with no pumping —
+        # depth over the high watermark walks the ladder, and BIG_K
+        # requests served at level >= 1 come back k-capped and tagged.
+        for rid_, payload, kreq in specs[120:]:
+            router.submit(Request(rid_, payload, k=kreq))
+        router.pump()
+        assert router.level >= 1
+        phase2 = router.drain()
+        all_results += phase2
+        assert any(r.degraded for r in phase2)
+
+        # Recovery: idle pumps drop the level back to 0 with hysteresis.
+        assert _pump_until(router, lambda: router.level == 0)
+        st = router.stats()
+        assert st["degrade_events"] >= 1
+        assert st["recover_events"] >= 1
+
+        # ---- exactly-once over EVERYTHING submitted -------------------
+        assert router._expected == router._done_ids
+        seen = [r.request_id for r in all_results if r.request_id < 10_000]
+        assert sorted(seen) == list(range(260))
+
+        # ---- healthy-path bit-parity vs the single-engine oracle ------
+        assert _parity(all_results, oracle_results) >= 10
+
+        # ---- degraded results are tagged with the ladder's own tags ---
+        tags = set(st["degraded_results"])
+        assert tags and tags <= {"k_cap", "rung_pin", "k_cap+rung_pin",
+                                 "load_shed", "redispatch_exhausted"}
+
+        # ---- stats() surface (the observability contract) -------------
+        assert st["p50_ms"] is not None and st["p99_ms"] is not None
+        for rep in st["replicas"].values():
+            assert {"state", "strikes", "ejections", "readmissions",
+                    "queue_depth"} <= set(rep)
+
+
+def test_exactly_once_under_crash_and_redispatch(params):
+    """Every request gets exactly one Result even when a replica crashes
+    mid-stream and its in-flight work is re-dispatched."""
+    plans = {0: ReplicaFaultPlan(crash_windows=((2, 5),))}
+    with _mk_router(params, n_replicas=2, fault_plans=plans,
+                    eject_after=1, cooldown_ms=10.0,
+                    hedge=False) as router:
+        router.warmup()
+        n = 64
+        rng = np.random.default_rng(3)
+        for i in range(n):
+            router.submit(Request(i, rng.integers(1, CFG.n_items + 1, 8),
+                                  k=K))
+            if i % 16 == 15:
+                router.pump()
+        results = router.drain()
+        ids = sorted(r.request_id for r in results)
+        assert ids == list(range(n))            # one Result each, no dupes
+        assert all(not r.shed for r in results)  # redispatch recovered all
+        assert router.stats()["redispatched"] >= 1
+
+
+def test_hedge_rescues_straggler_and_suppresses_duplicate(params):
+    """A straggling replica's batch is re-issued to a healthy spare; the
+    hedge wins, and the loser's late results are suppressed."""
+    plans = {0: ReplicaFaultPlan(slow_windows=((0, 2),), slow_ms=400.0)}
+    with _mk_router(params, n_replicas=2, fault_plans=plans,
+                    eject_after=10,       # keep the straggler in rotation
+                    hedge_floor_ms=40.0) as router:
+        router.warmup()
+        rng = np.random.default_rng(4)
+        for i in range(8):
+            router.submit(Request(i, rng.integers(1, CFG.n_items + 1, 8),
+                                  k=K))
+        results = router.drain()
+        assert sorted(r.request_id for r in results) == list(range(8))
+        st = router.stats()
+        assert st["hedges"] >= 1
+        assert st["hedge_wins"] >= 1
+        assert any(r.hedged for r in results)
+        # The slow original eventually completes: its results must be
+        # suppressed as duplicates, not delivered twice.
+        assert _pump_until(router,
+                           lambda: router.duplicates_suppressed >= 1)
+
+
+def test_degradation_ladder_tags_and_recovers(params):
+    """Driving depth over the high watermark walks the ladder (k-cap ->
+    rung-pin -> shed); results are tagged; hysteresis recovers."""
+    with _mk_router(params, n_replicas=2, hedge=False,
+                    degrade_high=24, degrade_low=4,
+                    degrade_patience=1, recover_patience=3) as router:
+        router.warmup(ks=[BIG_K])
+        rng = np.random.default_rng(5)
+        nxt = 0
+
+        def burst(n):
+            nonlocal nxt
+            for _ in range(n):
+                router.submit(Request(
+                    nxt, rng.integers(1, CFG.n_items + 1, 8), k=BIG_K))
+                nxt += 1
+
+        burst(40)
+        router.pump()
+        assert router.level >= 1             # over the high watermark
+        # Keep the depth pinned above the watermark until the ladder has
+        # walked all the way to shedding; jobs scheduled at level >= 2
+        # ride the rung-pinned route.
+        while router.level < 3:
+            burst(8)
+            router.pump()
+            assert nxt < 400, "ladder never reached level 3"
+        burst(8)                              # level 3: shed at submit
+        results = router.drain()
+        by_tag = {}
+        for r in results:
+            by_tag.setdefault(r.degraded, []).append(r)
+        assert len(by_tag.get("load_shed", [])) >= 1
+        for r in by_tag["load_shed"]:
+            assert r.shed and r.items.size == 0
+        capped = by_tag.get("k_cap", []) + by_tag.get("k_cap+rung_pin", [])
+        assert capped, f"no k-capped results; tags: {list(by_tag)}"
+        for r in capped:
+            assert r.items.shape[0] <= 8     # BIG_K=16 capped to bucket 8
+        assert any("rung_pin" in t for t in by_tag), list(by_tag)
+        # Hysteresis-damped recovery back to full fidelity.
+        assert _pump_until(router, lambda: router.level == 0)
+        assert router.recover_events >= 1
+        assert sorted(r.request_id for r in results) == list(range(nxt))
+
+
+def test_rung_pinned_results_are_tagged_never_silent(params):
+    """Level-2 serving uses the pinned cascade: results may differ from
+    exact, but every one is tagged — the contract is about the route
+    taken, not about whether the answer happened to match."""
+    with _mk_router(params, n_replicas=2, hedge=False,
+                    recover_patience=10_000) as router:
+        assert all(e.has_pinned for e in router.engines)
+        router.warmup()
+        router.level = 2                      # hold the ladder at rung-pin
+        rng = np.random.default_rng(6)
+        for i in range(8):
+            router.submit(Request(i, rng.integers(1, CFG.n_items + 1, 8),
+                                  k=K))
+        results = router.drain()
+        assert sorted(r.request_id for r in results) == list(range(8))
+        for r in results:
+            assert r.degraded == "rung_pin"   # k=K is not capped -> no k_cap
+            assert not r.shed and r.items.shape[0] == K
+            assert np.isfinite(r.scores).all()
+
+
+@pytest.mark.sharded
+def test_chaos_sharded_serve_fn(params):
+    """The fabric composes with the sharded serving route (shard-local
+    cascade + merge): same exactly-once and health invariants.  Sharded
+    engines have no rung-pinned route (pin_rung is flat-only), so
+    degradation falls back to k-cap alone — still correctly tagged."""
+    mesh = jax.make_mesh((1,), ("model",))
+    plans = {1: ReplicaFaultPlan(crash_windows=((0, 2),))}
+    with _mk_router(params, n_replicas=3, sharded_mesh=mesh,
+                    fault_plans=plans, eject_after=1, cooldown_ms=10.0,
+                    hedge=False) as router:
+        assert not any(e.has_pinned for e in router.engines)
+        router.warmup()
+        rng = np.random.default_rng(7)
+        n = 64
+        for i in range(n):
+            router.submit(Request(i, rng.integers(1, CFG.n_items + 1, 8),
+                                  k=K))
+            if i % 16 == 15:
+                router.pump()
+        results = router.drain()
+        assert sorted(r.request_id for r in results) == list(range(n))
+        assert all(not r.shed for r in results)
+        assert router.stats()["replicas"][1]["failures"] >= 1
+
+
+def test_router_single_replica_degenerates_to_engine(params):
+    """K=1 keeps the API contract (no hedging possible, no failover) and
+    matches the bare engine bit-for-bit."""
+    eng = RetrievalEngine.for_seqrec(params, CFG, k=K, max_batch=8,
+                                     method="pqtopk_pruned", ladder=LADDER,
+                                     calibrate=False)
+    rng = np.random.default_rng(8)
+    seqs = [rng.integers(1, CFG.n_items + 1, 8) for _ in range(8)]
+    for i, s in enumerate(seqs):
+        eng.submit(Request(i, s, k=K))
+    want = {r.request_id: r for r in eng.drain()}
+    with _mk_router(params, n_replicas=1) as router:
+        router.warmup()
+        for i, s in enumerate(seqs):
+            router.submit(Request(i, s, k=K))
+        got = {r.request_id: r for r in router.drain()}
+    assert set(got) == set(want)
+    for i in want:
+        np.testing.assert_array_equal(got[i].items, want[i].items)
+        np.testing.assert_array_equal(got[i].scores, want[i].scores)
+
+
+def test_all_replicas_ejected_forces_probe_liveness(params):
+    """With every replica ejected, the router force-probes rather than
+    deadlocking — requests still resolve once any crash window passes."""
+    plans = {0: ReplicaFaultPlan(crash_windows=((0, 2),)),
+             1: ReplicaFaultPlan(crash_windows=((0, 2),))}
+    with _mk_router(params, n_replicas=2, fault_plans=plans,
+                    eject_after=1, cooldown_ms=5_000.0,   # absurd cooldown
+                    hedge=False) as router:
+        router.warmup()
+        rng = np.random.default_rng(9)
+        for i in range(16):
+            router.submit(Request(i, rng.integers(1, CFG.n_items + 1, 8),
+                                  k=K))
+        results = router.drain(timeout_s=60.0)
+        assert sorted(r.request_id for r in results) == list(range(16))
+        assert all(not r.shed for r in results)

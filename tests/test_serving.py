@@ -1,4 +1,6 @@
 """Serving engine: batching, latency accounting, decode slots."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +9,7 @@ import pytest
 from repro.configs import get_reduced
 from repro.serving.engine import (DecodeEngine, MicroBatcher, Request,
                                   RetrievalEngine)
+from repro.training.fault_tolerance import ServeFaultInjector
 
 
 def _make_retrieval_engine(method="pqtopk", max_batch=16):
@@ -61,6 +64,131 @@ def test_microbatcher_bucketing():
     assert MicroBatcher.bucket(3, 64) == 4
     assert MicroBatcher.bucket(33, 64) == 64
     assert MicroBatcher.bucket(100, 64) == 64
+
+
+def test_microbatcher_max_wait_dispatches_partial_batch():
+    """A partial batch becomes ready once its oldest request has waited
+    max_wait_ms — a trickle of traffic must not stall on a full bucket."""
+    b = MicroBatcher(max_batch=8, max_wait_ms=20.0)
+    assert not b.ready()                     # empty queue: nothing to do
+    b.submit(Request(0, np.arange(4)))
+    b.submit(Request(1, np.arange(4)))
+    assert not b.ready()                     # partial and fresh: wait
+    assert b.ready(now=time.monotonic() + 0.05)   # oldest out-waited it
+    time.sleep(0.025)
+    assert b.ready()
+    got = b.next_batch()
+    assert [r.request_id for r in got] == [0, 1]
+    assert not b.queue and not b._enq_t      # both deques stay in lockstep
+    for i in range(8):
+        b.submit(Request(i, np.arange(4)))
+    assert b.ready()                         # full bucket: ready instantly
+
+
+def _slow_serve_fn(sleep_s, k_out=4):
+    """A serve fn whose *device computation* stalls: the host callback
+    runs inside the compiled program, so only a completion-based
+    timestamp can see the cost."""
+    def serve_fn(seqs, k):
+        def host(x):
+            time.sleep(sleep_s)
+            return np.tile(np.arange(1, k + 1, dtype=np.int32),
+                           (x.shape[0], 1))
+        ids = jax.pure_callback(
+            host, jax.ShapeDtypeStruct((seqs.shape[0], k), jnp.int32), seqs)
+        return ids, jnp.zeros((seqs.shape[0], k), jnp.float32)
+    return serve_fn
+
+
+def test_latency_accounts_for_async_kernel_completion():
+    """Regression (PR 8 satellite): JAX dispatch is asynchronous, so
+    timestamping right after fn(seqs) measures enqueue, not completion.
+    With a kernel that sleeps 120ms in-graph, the recorded latency must
+    include the sleep — block_until_ready before the timestamp."""
+    eng = RetrievalEngine(_slow_serve_fn(0.12), seq_len=4, k=4, max_batch=4)
+    eng.submit(Request(0, np.arange(1, 5), k=4))
+    eng.run_once()                           # warm: compile + first call
+    eng.submit(Request(1, np.arange(1, 5), k=4))
+    res = eng.run_once()
+    assert len(res) == 1
+    assert res[0].latency_ms >= 100.0, res[0].latency_ms
+    # The straggler monitor reads the same completion-based clock.
+    assert eng.straggler_monitor._times[-1] >= 0.1
+
+
+def test_stats_empty_latencies_report_none_not_zero():
+    """Regression (PR 8 satellite): the old [0.0] placeholder made a
+    zero-traffic engine report mRT/p99 of 0.0ms — a real latency to any
+    fleet aggregator.  Empty must be None."""
+    eng, _ = _make_retrieval_engine()
+    st = eng.stats()
+    assert st["count"] == 0
+    assert st["mRT_ms"] is None and st["p99_ms"] is None
+
+
+def test_no_straggler_delay_after_exhausted_retries():
+    """Regression (PR 8 satellite): a batch that exhausted its retry
+    budget never dispatched, so the injector's slow_ms straggler delay
+    must not fire — it would only inflate the shed results' latency."""
+    faults = ServeFaultInjector(fail_at_batches=[0], fail_repeats=10,
+                                slow_at_batches=[0], slow_ms=2_000.0)
+    eng = RetrievalEngine(_slow_serve_fn(0.0), seq_len=4, k=4, max_batch=4,
+                          faults=faults, max_retries=1,
+                          retry_backoff_ms=0.1)
+    eng.submit(Request(0, np.arange(1, 5), k=4))
+    t0 = time.monotonic()
+    res = eng.run_once()
+    wall = time.monotonic() - t0
+    assert len(res) == 1 and res[0].shed
+    assert wall < 1.0, f"shed batch slept the straggler delay ({wall:.2f}s)"
+    assert res[0].latency_ms < 1_000.0
+
+
+def test_deadline_expiring_during_cold_compile_is_shed():
+    """Regression (PR 8 satellite): a request whose deadline expires
+    while the first dispatch AOT-compiles must come back shed with
+    timed_out=True — not served seconds late as if nothing happened.
+    Later identical requests (warm cache) serve normally."""
+    def slow_compile_serve(seqs, k):
+        time.sleep(0.3)                      # trace-time cost ~ slow XLA
+        s = jnp.sum(seqs, axis=1, keepdims=True) + \
+            jnp.arange(64, dtype=jnp.float32)[None, :]
+        v, i = jax.lax.top_k(s, k)
+        return i.astype(jnp.int32), v
+
+    eng = RetrievalEngine(slow_compile_serve, seq_len=4, k=4, max_batch=4)
+    eng.submit(Request(0, np.arange(1, 5), k=4, deadline_ms=100.0))
+    res = eng.run_once()
+    assert len(res) == 1
+    assert res[0].shed and res[0].timed_out
+    # The compile was not wasted: the same request shape now serves fine.
+    eng.submit(Request(1, np.arange(1, 5), k=4, deadline_ms=100.0))
+    res = eng.run_once()
+    assert len(res) == 1
+    assert not res[0].shed and not res[0].timed_out
+    assert res[0].items.shape == (4,)
+
+
+def test_degraded_tag_propagates_through_run_once():
+    """k_cap below the batch k tags every result in the batch."""
+    arch = get_reduced("sasrec-recjpq")
+    cfg = arch.model
+    from repro.models import seqrec as m
+    params = m.init_seqrec(jax.random.PRNGKey(0), cfg)
+
+    def serve_fn(seqs, k):
+        return m.serve_topk(params, seqs, cfg, k=k, method="pqtopk")
+
+    eng = RetrievalEngine(serve_fn, seq_len=cfg.max_seq_len, k=5, max_k=32,
+                          max_batch=4)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng.submit(Request(i, rng.integers(1, cfg.n_items + 1, 8), k=16))
+    res = eng.run_once(k_cap=5)              # bucket(5)=8 < bucket(16)=16
+    assert len(res) == 2
+    for r in res:
+        assert r.degraded == "k_cap"
+        assert r.items.shape == (8,)         # capped to the pow2 bucket
 
 
 def test_decode_engine_slots():
