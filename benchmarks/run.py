@@ -75,9 +75,9 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "churn",
-                             "serving", "roofline"])
+                             "serving", "roofline", "hier"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr8.json",
+    ap.add_argument("--json", default="BENCH_pr9.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -704,6 +704,55 @@ def main(argv=None) -> None:
                                        if ladder_srv else None)},
                       timing=timing)
 
+    if "hier" not in args.skip:
+        # -------------------------------------------------------------
+        # Hierarchical super-tile cascade at very large N (ISSUE 9
+        # tentpole): flat vs hierarchical pruned cascade on a
+        # popularity-sorted tile-coherent catalogue, bit-checked against
+        # the streaming one-shot oracle.  Reports the pass-1 bound-work
+        # reduction (the acceptance bar is >= 10x at N=2^24 with zero
+        # mismatches) and the peak-RSS ceiling of the run.  N=2^27 only
+        # under --full (1 GB of codes).
+        import importlib.util as _ilu
+        _spec = _ilu.spec_from_file_location("billion_item_sim",
+                                             "examples/billion_item_sim.py")
+        _sim = _ilu.module_from_spec(_spec)
+        _spec.loader.exec_module(_sim)
+        hier_ns = [1 << 24] + ([1 << 27] if args.full else [])
+        for n_h in hier_ns:
+            for backend_h in ("bitmask", "range"):
+                r = _sim.run_hier_compare(n_h, repeats=args.repeats,
+                                          backend=backend_h)
+                tags_h = {"n_items": r["n_items"], "m": r["m"],
+                          "bound_backend": backend_h, "hier": True,
+                          "super_tile": r["super_factor"],
+                          "n_tiles": r["n_tiles"],
+                          "n_super": r["n_super"],
+                          "flat_bounds": r["flat_bounds"],
+                          "hier_bounds": r["hier_bounds"],
+                          "bound_reduction": r["bound_reduction"],
+                          "mismatches": r["mismatches"],
+                          "peak_rss_mb": r["peak_rss_mb"]}
+                _emit("hier",
+                      f"hier/n{r['n_items']}/{backend_h}/super",
+                      r["hier_s"] * 1e6,
+                      f"flat_us={r['flat_s'] * 1e6:.0f};"
+                      f"bound_reduction={r['bound_reduction']:.1f}x;"
+                      f"mismatches={r['mismatches']};"
+                      f"peak_rss_mb={r['peak_rss_mb']:.0f}",
+                      method="pruned_hier",
+                      items_per_s=r["n_items"] / max(r["hier_s"], 1e-9),
+                      tags=tags_h)
+                _emit("hier",
+                      f"hier/n{r['n_items']}/{backend_h}/flat",
+                      r["flat_s"] * 1e6,
+                      f"bounds={r['flat_bounds']}",
+                      method="pruned_flat",
+                      items_per_s=r["n_items"] / max(r["flat_s"], 1e-9),
+                      tags={"n_items": r["n_items"], "m": r["m"],
+                            "bound_backend": backend_h, "hier": False,
+                            "n_tiles": r["n_tiles"]})
+
     if "roofline" not in args.skip:
         import os
         from benchmarks import roofline
@@ -727,7 +776,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 8,
+            "pr": 9,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

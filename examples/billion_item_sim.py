@@ -5,59 +5,214 @@ The backbone is excluded (random phi), sub-id scores are random, codes are
 int8 (b=256) so a billion-item codebook is 8 GB — and scoring streams over
 item chunks with a running top-k, so peak memory stays at chunk size.
 
+Three properties the streaming loop guarantees (each had a real bug in the
+first version of this file):
+
+* **ids never wrap.**  Item ids can exceed 2^31 on 10^9-item catalogues
+  (and always do when several hosts shard one catalogue via ``id_base``).
+  ``jnp.int64`` silently downcasts to int32 without x64 mode, so the
+  device only ever sees CHUNK-LOCAL int32 ids; the int64 ``start`` offset
+  is applied in host numpy, where int64 is real.
+* **one compile for the whole run.**  Every chunk the device scores has
+  the same static shape: the final ragged chunk is padded up to ``chunk``
+  and its padding rows are masked to ``-inf`` in-graph (``n_valid`` is
+  traced data), so the timed loop never recompiles mid-run.
+  ``streaming_pqtopk`` returns its trace count so callers can assert
+  exactly-one-compile.
+* **uint8 over the wire.**  Codes transfer as uint8 and are cast to int32
+  in-graph (consistent with the kernel's native int8/uint8 path) — the
+  old host-side ``.astype(np.int32)`` quadrupled the promised per-chunk
+  transfer size.
+
+``--mode hier`` compares the flat pruned cascade against the hierarchical
+super-tile cascade (``pruning.with_super``) on a tile-coherent catalogue,
+checking bit-exactness against the streaming oracle and reporting the
+pass-1 bound-work reduction plus the peak RSS ceiling.  The ``hier``
+BENCH section in ``benchmarks/run.py`` drives the same entry points.
+
   PYTHONPATH=src python examples/billion_item_sim.py --items 1e7
   PYTHONPATH=src python examples/billion_item_sim.py --items 1e9 --chunk 2e7
+  PYTHONPATH=src python examples/billion_item_sim.py --mode hier --items 16777216
 """
 import argparse
+import resource
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import scoring
+from repro.core import pruning, scoring
 
 D_MODEL = 512
 K = 10
 
 
+def merge_topk_host(best_v, best_i, v, i_local, start, k):
+    """Fold one chunk's local winners into the running top-k, on host.
+
+    ``i_local`` are chunk-local int32 ids; ``start`` is a Python int (so
+    ``start + id`` never wraps) applied here in int64 numpy.  Order is
+    (score desc, id asc) — the same tie-break as ``jax.lax.top_k`` over
+    the one-shot score vector, which keeps the stream bit-identical to
+    the oracle even through score ties.
+    """
+    cand_v = np.concatenate([best_v, np.asarray(v, np.float32)], axis=1)
+    cand_i = np.concatenate(
+        [best_i, np.asarray(i_local, np.int64) + np.int64(start)], axis=1)
+    out_v = np.empty((cand_v.shape[0], k), np.float32)
+    out_i = np.empty((cand_v.shape[0], k), np.int64)
+    for q in range(cand_v.shape[0]):
+        order = np.lexsort((cand_i[q], -cand_v[q]))[:k]
+        out_v[q] = cand_v[q][order]
+        out_i[q] = cand_i[q][order]
+    return out_v, out_i
+
+
 def streaming_pqtopk(codes: np.ndarray, s: jax.Array, k: int,
-                     chunk: int) -> tuple:
+                     chunk: int, id_base: int = 0) -> tuple:
     """Chunked PQTopK with a running top-k merge — O(chunk) device memory
-    regardless of |I| (the 'pre-computing scenario' at 10^8-10^9 items)."""
+    regardless of |I| (the 'pre-computing scenario' at 10^8-10^9 items).
+
+    Returns ``(values (B, k) f32, ids (B, k) int64, n_traces)``.  Ids are
+    ``id_base + position``; ``id_base`` lets one host of a multi-host
+    shard emit globally-unique ids past 2^31 (and is how the regression
+    test exercises the wrap without allocating 10^9 rows).  ``n_traces``
+    counts ``score_chunk`` compiles — 1 for any n/chunk combination,
+    ragged final chunk included.
+    """
     n = codes.shape[0]
+    chunk = int(min(chunk, n))
+    kk = min(k, chunk)      # per-chunk candidates; the host merge carries
+    traces = {"n": 0}       # survivors across chunks when k > chunk
 
     @jax.jit
-    def score_chunk(c, s_):
-        r = scoring.score_pqtopk(c, s_)
-        return jax.lax.top_k(r, k)
+    def score_chunk(c_u8, s_, n_valid):
+        traces["n"] += 1
+        # uint8 → int32 on device; padded tail rows masked before top-k.
+        r = scoring.score_pqtopk(c_u8.astype(jnp.int32), s_)
+        valid = jnp.arange(chunk, dtype=jnp.int32)[None, :] < n_valid
+        return jax.lax.top_k(jnp.where(valid, r, -jnp.inf), kk)
 
-    best_v = jnp.full((s.shape[0], k), -jnp.inf)
-    best_i = jnp.zeros((s.shape[0], k), jnp.int64)
+    bq = s.shape[0]
+    best_v = np.full((bq, k), -np.inf, np.float32)
+    best_i = np.full((bq, k), -1, np.int64)
     for start in range(0, n, chunk):
-        c = jnp.asarray(codes[start:start + chunk].astype(np.int32))
-        v, i = score_chunk(c, s)
-        cand_v = jnp.concatenate([best_v, v], axis=1)
-        cand_i = jnp.concatenate([best_i, i.astype(jnp.int64) + start], axis=1)
-        best_v, sel = jax.lax.top_k(cand_v, k)
-        best_i = jnp.take_along_axis(cand_i, sel, axis=1)
-    return best_v, best_i
+        n_valid = min(chunk, n - start)
+        c_np = codes[start:start + chunk]
+        if n_valid < chunk:
+            c_np = np.concatenate(
+                [c_np, np.zeros((chunk - n_valid, codes.shape[1]),
+                                codes.dtype)], axis=0)
+        v, i = score_chunk(jnp.asarray(c_np), s, np.int32(n_valid))
+        best_v, best_i = merge_topk_host(best_v, best_i, v, i,
+                                         id_base + start, k)
+    return best_v, best_i, traces["n"]
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--items", type=float, default=1e7)
-    ap.add_argument("--m", type=int, default=8)
-    ap.add_argument("--b", type=int, default=256)
-    ap.add_argument("--chunk", type=float, default=1e7)
-    ap.add_argument("--repeats", type=int, default=3)
-    args = ap.parse_args(argv)
+def make_clustered_codes(n: int, m: int, b: int, grain: int,
+                         width: int = 8, seed: int = 0) -> np.ndarray:
+    """Popularity-sorted tile-coherent catalogue: every ``grain``
+    consecutive items draw codes from one narrow band [base, base+width),
+    with bases increasing across groups.  Paired with a score table that
+    decays in the code index (:func:`make_popularity_scores`) this is the
+    regime hierarchical pruning exists for — a clustered/sorted catalogue
+    where a few coherent regions hold all the high scorers (real
+    catalogues are coherent after any clustering pass; uniform-random
+    codes defeat all bounds equally and measure nothing)."""
+    rng = np.random.default_rng(seed)
+    n_groups = -(-n // grain)
+    span = max(1, b - width)
+    base = np.minimum((np.arange(n_groups, dtype=np.int64) * span)
+                      // max(1, n_groups - 1), span - 1)
+    codes = np.empty((n, m), np.uint8)
+    for g in range(n_groups):
+        lo, hi = g * grain, min((g + 1) * grain, n)
+        codes[lo:hi] = base[g] + rng.integers(0, width, (hi - lo, m))
+    return codes
+
+
+def make_popularity_scores(bq: int, m: int, b: int, seed: int = 0,
+                           scale: float = 4.0) -> jax.Array:
+    """Sub-id scores decaying in the code index (head-tail popularity):
+    low codes — the first catalogue bands — score high, so super-tile
+    bounds separate and theta can prune most of the catalogue in pass 0."""
+    key = jax.random.PRNGKey(seed)
+    decay = -scale * jnp.arange(b, dtype=jnp.float32) / b
+    noise = 0.5 * jax.random.normal(key, (bq, m, b), dtype=jnp.float32)
+    return decay[None, None, :] + noise
+
+
+def peak_rss_mb() -> float:
+    """Process high-water RSS in MB (ru_maxrss is KB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_hier_compare(n: int, *, m: int = 8, b: int = 256, tile: int = 1024,
+                     factor: int = pruning.DEFAULT_SUPER_FACTOR,
+                     bq: int = 2, k: int = K, repeats: int = 3,
+                     backend: str = "bitmask", seed: int = 0) -> dict:
+    """Flat vs hierarchical cascade on a tile-coherent catalogue of n
+    items: bit-exactness vs the streaming oracle, pass-1 bound work
+    (``bounds_computed``), latency, and peak RSS.  Returns one result
+    dict consumed by the ``hier`` BENCH section and the CI smoke."""
+    tile = min(tile, n)
+    codes_np = make_clustered_codes(n, m, b, grain=tile * factor, seed=seed)
+    codes = jnp.asarray(codes_np)
+    s = make_popularity_scores(bq, m, b, seed=seed)
+
+    flat = pruning.build_pruned_state(codes, b, tile, backend=backend)
+    hier = pruning.with_super(flat, factor)
+
+    # Stats once, eagerly (the stats dict holds a str and cannot cross
+    # jit); timing below uses the jitted no-stats calls.
+    fv, fi, fstats = pruning.cascade_topk_ingraph(codes, s, k, flat,
+                                                  tile=tile,
+                                                  return_stats=True)
+    hv, hi, hstats = pruning.cascade_topk_ingraph(codes, s, k, hier,
+                                                  tile=tile,
+                                                  return_stats=True)
+    ov, oi, _ = streaming_pqtopk(codes_np, s, k, chunk=min(n, 1 << 20))
+    mismatches = int((np.asarray(fv) != np.asarray(hv)).sum()
+                     + (np.asarray(fi) != np.asarray(hi)).sum()
+                     + (np.asarray(hv) != ov).sum()
+                     + (np.asarray(hi) != oi.astype(np.int32)).sum())
+
+    f_flat = jax.jit(lambda c, s_: pruning.cascade_topk_ingraph(
+        c, s_, k, flat, tile=tile))
+    f_hier = jax.jit(lambda c, s_: pruning.cascade_topk_ingraph(
+        c, s_, k, hier, tile=tile))
+
+    def _time(fn):
+        jax.block_until_ready(fn(codes, s))
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(codes, s))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    flat_bounds = int(fstats["bounds_computed"])
+    hier_bounds = int(hstats["bounds_computed"])
+    return {
+        "n_items": n, "m": m, "b": b, "tile": tile,
+        "super_factor": factor, "backend": backend, "k": k, "bq": bq,
+        "n_tiles": flat.n_tiles, "n_super": hier.n_super,
+        "flat_bounds": flat_bounds, "hier_bounds": hier_bounds,
+        "bound_reduction": flat_bounds / max(hier_bounds, 1),
+        "n_super_survived": int(hstats["n_super_survived"]),
+        "mismatches": mismatches,
+        "flat_s": _time(f_flat), "hier_s": _time(f_hier),
+        "peak_rss_mb": peak_rss_mb(),
+    }
+
+
+def _main_stream(args) -> None:
     n, chunk = int(args.items), int(args.chunk)
-
     print(f"simulating |I| = {n:,} items, m={args.m}, b={args.b} "
           f"(codes: {n * args.m / 1e9:.2f} GB int8)")
     rng = np.random.default_rng(0)
-    # uint8 holds b=256 sub-ids exactly (the kernel casts to int32 in VMEM).
+    # uint8 holds b=256 sub-ids exactly (cast to int32 happens in-graph).
     codes = rng.integers(0, args.b, (n, args.m), dtype=np.uint8)
     s = jax.random.normal(jax.random.PRNGKey(0), (1, args.m, args.b))
 
@@ -66,14 +221,49 @@ def main(argv=None):
     times = []
     for _ in range(args.repeats):
         t0 = time.perf_counter()
-        v, i = streaming_pqtopk(codes, s, K, chunk)
-        jax.block_until_ready(v)
+        v, i, n_traces = streaming_pqtopk(codes, s, K, chunk)
         times.append(time.perf_counter() - t0)
     med = float(np.median(times))
     print(f"PQTopK scoring + top-{K}: median {med * 1e3:.1f} ms/user "
-          f"({n / med / 1e6:.1f}M items/s)")
-    print("top items:", np.asarray(i[0])[:5], "scores:",
-          np.round(np.asarray(v[0])[:5], 3))
+          f"({n / med / 1e6:.1f}M items/s, {n_traces} compile, "
+          f"peak RSS {peak_rss_mb():.0f} MB)")
+    print("top items:", i[0][:5], "scores:", np.round(v[0][:5], 3))
+
+
+def _main_hier(args) -> None:
+    n = int(args.items)
+    for backend in ("bitmask", "range"):
+        r = run_hier_compare(n, m=args.m, b=args.b, tile=int(args.tile),
+                             factor=int(args.factor),
+                             repeats=args.repeats, backend=backend)
+        print(f"[hier/{backend}] N={r['n_items']:,} T={r['n_tiles']} "
+              f"S={r['n_super']} bounds {r['flat_bounds']} -> "
+              f"{r['hier_bounds']} ({r['bound_reduction']:.1f}x) "
+              f"mismatches={r['mismatches']} "
+              f"flat {r['flat_s'] * 1e3:.1f} ms / hier "
+              f"{r['hier_s'] * 1e3:.1f} ms, peak RSS "
+              f"{r['peak_rss_mb']:.0f} MB")
+        if r["mismatches"]:
+            raise SystemExit(f"hier/{backend}: exactness violated "
+                             f"({r['mismatches']} mismatches)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["stream", "hier"], default="stream")
+    ap.add_argument("--items", type=float, default=1e7)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--b", type=int, default=256)
+    ap.add_argument("--chunk", type=float, default=1e7)
+    ap.add_argument("--tile", type=float, default=1024)
+    ap.add_argument("--factor", type=float,
+                    default=pruning.DEFAULT_SUPER_FACTOR)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.mode == "hier":
+        _main_hier(args)
+    else:
+        _main_stream(args)
 
 
 if __name__ == "__main__":

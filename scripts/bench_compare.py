@@ -65,7 +65,11 @@ def row_key(row: dict) -> tuple:
             tags.get("n_items"), tags.get("m"), tags.get("B"),
             tags.get("bound_backend") or "bitmask",
             tags.get("code_layout") or "wrap",
-            tags.get("grouping") or "batchany")
+            tags.get("grouping") or "batchany",
+            # PR 9: hierarchical rows must never join against flat rows
+            # at the same N — the super level changes what pass-1 costs.
+            bool(tags.get("hier", False)),
+            tags.get("super_tile") or 0)
 
 
 def _ips_interval(row, ips):
@@ -136,7 +140,8 @@ def check_fingerprints(fingerprints: dict, allow_mixed: bool) -> bool:
 
 
 def fmt_key(key: tuple) -> str:
-    section, cell, method, n, m, bq, backend, layout, grouping = key
+    (section, cell, method, n, m, bq, backend, layout, grouping,
+     hier, super_tile) = key
     parts = [section, cell, method]
     if n is not None:
         parts.append(f"n={n}")
@@ -152,6 +157,8 @@ def fmt_key(key: tuple) -> str:
         parts.append(layout)
     if grouping != "batchany":
         parts.append(grouping)
+    if hier:
+        parts.append(f"hier{super_tile}" if super_tile else "hier")
     return "/".join(str(p) for p in parts)
 
 

@@ -38,7 +38,7 @@ fi
 # test file stopped importing or someone deleted coverage).  pytest also
 # exits non-zero on collection errors, so a broken import fails CI rather
 # than silently shrinking the suite.
-TIER1_BASELINE=336
+TIER1_BASELINE=376
 collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
             | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
 if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
@@ -67,13 +67,22 @@ python -m repro.analysis --json ANALYSIS_REPORT.json
 # discriminates.
 python scripts/check_single_dispatch.py
 
+# Billion-item simulator smoke (ISSUE 9): the streaming scorer at a
+# CI-sized N with a ragged final chunk (exactly-one-compile + padded
+# tail), then the flat-vs-hierarchical cascade comparison, which exits
+# non-zero on any exactness mismatch.  Small N keeps it seconds-fast;
+# the real N in {2^24, 2^27} runs live in the `hier` BENCH section.
+python examples/billion_item_sim.py --items 2e5 --chunk 65536 --repeats 1
+python examples/billion_item_sim.py --mode hier --items 262144 \
+    --tile 256 --factor 16 --repeats 1
+
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
 # single-dispatch pruned cascade, bound-backend comparison sweep, the
 # per-query mixed-batch sweep, the catalogue-churn section with its
 # sampled exactness checks, the replicated-fabric latency-under-load
 # section, figure2) end to end so kernel-path breakage surfaces in CI,
 # not just in unit tests, and refreshes the machine-readable
-# BENCH_pr8.json.  table3/roofline stay out (slow dataset builds /
+# BENCH_pr9.json.  table3/roofline/hier stay out (slow dataset builds /
 # artifact-dependent).  --repeats 3 (up from 1): quartiles over one
 # sample are degenerate, and the IQR-separation rule needs real spread
 # to be meaningful.
@@ -89,8 +98,8 @@ PIN=""
 if command -v taskset >/dev/null 2>&1; then
     PIN="taskset -c 0"
 fi
-${PIN} python -m benchmarks.run --skip table3 --skip roofline --repeats 3 \
-    --json BENCH_pr8.json > /dev/null
+${PIN} python -m benchmarks.run --skip table3 --skip roofline \
+    --skip hier --repeats 3 --json BENCH_pr9.json > /dev/null
 
 # Cross-PR perf trajectory, two views.  Informational: the whole history
 # joined across the pinning seam (--allow-mixed; trend only, never

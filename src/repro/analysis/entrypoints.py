@@ -236,6 +236,56 @@ def _build_sharded_pruned() -> BuiltEntry:
                       notes="sharded serve_topk, 1-device 'model' mesh")
 
 
+@register("flat_hier",
+          "the hierarchical two-stage cascade: super-tile pass-0 pruning "
+          "+ theta seeded from super bounds + two-stage compaction, still "
+          "ONE dispatch (nested super-rung/child-rung lax.cond chains)",
+          tags=("serve", "pruned", "hier"))
+def _build_flat_hier() -> BuiltEntry:
+    from repro.core import pruning
+    from repro.models import seqrec as seqrec_lib
+
+    params, cfg = _seqrec_setup()
+    head = dict(params["item_emb"])
+    head["pruned"] = pruning.with_super(head["pruned"], 4)
+    params = {**params, "item_emb": head}
+
+    def fn(seqs):
+        return seqrec_lib.serve_topk(params, seqs, cfg, k=5,
+                                     method="pqtopk_pruned",
+                                     ladder=STATIC_LADDER)
+
+    return BuiltEntry(fn, (_seq_sds(cfg),),
+                      notes=f"hierarchical serve_topk, super_factor=4, "
+                            f"n_super={head['pruned'].n_super}")
+
+
+@register("sharded_hier",
+          "the item-sharded hierarchical cascade: per-shard super-tile "
+          "pass-0 behind the shard-local skip cond (collectives outside), "
+          "ONE shard_map",
+          tags=("serve", "pruned", "sharded", "hier"))
+def _build_sharded_hier() -> BuiltEntry:
+    import jax
+    from repro.core import retrieval_head
+    from repro.models import seqrec as seqrec_lib
+
+    params, cfg = _seqrec_setup()
+    mesh = jax.make_mesh((1,), ("model",))
+    params = {**params, "item_emb":
+              retrieval_head.ensure_sharded_pruned_state(
+                  params["item_emb"], mesh, k_hint=5, super_factor=4)}
+
+    def fn(seqs):
+        return seqrec_lib.serve_topk(params, seqs, cfg, k=5,
+                                     method="pqtopk_pruned",
+                                     sharded_mesh=mesh)
+
+    return BuiltEntry(fn, (_seq_sds(cfg),),
+                      notes="sharded hierarchical serve_topk, "
+                            "super_factor=4, 1-device 'model' mesh")
+
+
 @register("lm_decode_step",
           "one LM decode step (stacked-cache layer scan) with the pruned "
           "PQ vocabulary head — the cascade inside the decode loop",

@@ -72,6 +72,15 @@ class PQConfig:
     # tiles).
     query_grouping: bool = False
     n_groups: int = 8
+    # Hierarchical super-tile bounds (docs/PRUNING.md §Hierarchical
+    # bounds): super_factor > 1 groups that many consecutive child tiles
+    # into super-tiles with their own (OR-ed / hulled) metadata, and the
+    # cascade inserts a pass 0 that prunes super-tiles against theta
+    # before any child tile bound is gathered — O(T/factor + survivors)
+    # bound work instead of O(T), bit-identical results.  0 disables the
+    # level.  Mutually exclusive with query_grouping (per-query survival
+    # has no super-tile pass-0).
+    super_factor: int = 0
 
     def __post_init__(self):
         if self.b > 2 ** 16:
@@ -103,6 +112,15 @@ class PQConfig:
                 f"b={self.b} exceeds int16 — use bound_backend='bitmask'")
         if self.n_groups < 1:
             raise ValueError(f"n_groups must be >= 1, got {self.n_groups}")
+        if self.super_factor < 0 or self.super_factor == 1:
+            raise ValueError(
+                f"super_factor must be 0 (no super level) or >= 2, got "
+                f"{self.super_factor}")
+        if self.super_factor > 1 and self.query_grouping:
+            raise ValueError(
+                "super_factor > 1 and query_grouping are mutually "
+                "exclusive: the hierarchical pass-0 prunes batch-any "
+                "super-tiles, which per-query grouped survival bypasses")
 
 
 # ---------------------------------------------------------------------------

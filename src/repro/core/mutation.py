@@ -45,7 +45,7 @@ import numpy as np
 
 from repro.core.pruning import (BOUND_BACKENDS, DEFAULT_PRUNE_TILE,
                                 PrunedHeadState, build_pruned_state_masked,
-                                pack_presence)
+                                pack_presence, with_super)
 
 
 def next_pow2(n: int) -> int:
@@ -85,6 +85,17 @@ def _widen_range(lo, hi, t, row):
     return lo.at[t].min(c), hi.at[t].max(c)
 
 
+@jax.jit
+def _set_point_range(lo, hi, t, row):
+    """Exact point range for a tile whose ONLY live row is ``row``.  The
+    masked builder clamps an empty tile to [0, 0], and min-widening can
+    never lift that phantom ``lo=0`` back up — so the first insert into
+    an empty tile must SET, not widen (else the tile is permanently
+    looser than the rebuild oracle and retighten parity breaks)."""
+    c = row.astype(jnp.int16)
+    return lo.at[t].set(c), hi.at[t].set(c)
+
+
 @partial(jax.jit, static_argnames=("b", "tile"))
 def _retighten_tile_packed(packed, codes, live, t, b, tile):
     """Exact rebuild of ONE tile's presence bitmask from its live rows."""
@@ -96,6 +107,33 @@ def _retighten_tile_packed(packed, codes, live, t, b, tile):
                & lv[:, None, None]).any(axis=0)                    # (m, b)
     return jax.lax.dynamic_update_slice(packed, pack_presence(present[None]),
                                         (t, 0, 0))
+
+
+@partial(jax.jit, static_argnames=("factor",))
+def _recompute_super_packed(super_packed, packed, sup, factor):
+    """Exact rebuild of ONE super-tile's bitmask = OR of its (current)
+    child tile bitmasks.  Children may themselves still be stale; OR of
+    dominating masks dominates, so the super stays safe either way."""
+    m, w = packed.shape[1], packed.shape[2]
+    kids = jax.lax.dynamic_slice(packed, (sup * factor, 0, 0),
+                                 (factor, m, w))
+    word = kids[0]
+    for i in range(1, factor):
+        word = word | kids[i]
+    return jax.lax.dynamic_update_slice(super_packed, word[None],
+                                        (sup, 0, 0))
+
+
+@partial(jax.jit, static_argnames=("factor",))
+def _recompute_super_range(super_lo, super_hi, lo, hi, sup, factor):
+    """Exact rebuild of ONE super-tile's [lo, hi] hull over its children."""
+    m = lo.shape[1]
+    klo = jax.lax.dynamic_slice(lo, (sup * factor, 0), (factor, m))
+    khi = jax.lax.dynamic_slice(hi, (sup * factor, 0), (factor, m))
+    return (jax.lax.dynamic_update_slice(super_lo, klo.min(axis=0)[None],
+                                         (sup, 0)),
+            jax.lax.dynamic_update_slice(super_hi, khi.max(axis=0)[None],
+                                         (sup, 0)))
 
 
 @partial(jax.jit, static_argnames=("tile",))
@@ -147,23 +185,34 @@ class MutableHeadState:
     @classmethod
     def build(cls, codes, b: int, tile: int = DEFAULT_PRUNE_TILE, *,
               backend: str = "bitmask",
-              capacity: Optional[int] = None) -> "MutableHeadState":
+              capacity: Optional[int] = None,
+              super_factor: int = 0) -> "MutableHeadState":
         """Pad ``codes`` (n, m) to a pow2 capacity (>= tile, a tile
         multiple — so every tile slice is full and `dynamic_slice` stays
         in bounds), mark rows [0, n) live, and build exact live-masked
         tile metadata.  Pass ``capacity`` for extra insert headroom; any
-        later capacity change is a shape change (rebuild + recompile)."""
+        later capacity change is a shape change (rebuild + recompile).
+
+        ``super_factor > 1`` adds the hierarchical super-tile level
+        (:func:`repro.core.pruning.with_super`); capacity is then rounded
+        to a ``tile * super_factor`` multiple so every super-tile owns
+        exactly ``super_factor`` real children and the per-super
+        ``dynamic_slice`` recompute never straddles a padded edge."""
         if backend not in BOUND_BACKENDS:
             raise ValueError(f"unknown bound backend {backend!r}")
         n, m = codes.shape
         tile = max(1, min(int(tile), n))
+        super_factor = 0 if super_factor <= 1 else int(super_factor)
+        grain = tile * super_factor if super_factor else tile
         cap = next_pow2(max(n, 1)) if capacity is None else int(capacity)
         cap = max(cap, tile, n)
-        cap = -(-cap // tile) * tile
+        cap = -(-cap // grain) * grain
         codes_cap = jnp.zeros((cap, m), codes.dtype).at[:n].set(codes)
         live = jnp.zeros((cap,), jnp.bool_).at[:n].set(True)
         state = build_pruned_state_masked(codes_cap, live, b, tile,
                                           backend=backend)
+        if super_factor:
+            state = with_super(state, super_factor)
         return cls(codes_cap, live, state,
                    staleness=np.zeros(state.n_tiles, np.int64),
                    free=[], n_rows=n)
@@ -194,6 +243,10 @@ class MutableHeadState:
     def n_live(self) -> int:
         return int(self.live.sum())
 
+    @property
+    def super_factor(self) -> int:
+        return self.state.super_factor
+
     # -- mutations --------------------------------------------------------
 
     def _check_row(self, row):
@@ -204,16 +257,46 @@ class MutableHeadState:
 
     def _absorb(self, slot: int, row) -> None:
         """OR/widen tile metadata so it covers ``row`` at ``slot`` — the
-        exact-on-insert half of every mutation."""
+        exact-on-insert half of every mutation.  A hierarchical state
+        absorbs the row at BOTH levels (the super helpers are the same
+        jitted updates over the super arrays — loosen-only, so the
+        super bound keeps dominating its children's)."""
         t = slot // self.tile
+        st = self.state
         if self.backend == "range":
-            lo, hi = _widen_range(self.state.code_lo, self.state.code_hi,
-                                  t, row)
-            self.state = dataclasses.replace(self.state, code_lo=lo,
-                                             code_hi=hi)
+            t0 = t * self.tile
+            solo = int(self.live[t0:t0 + self.tile].sum()) == 1
+            if solo:
+                lo, hi = _set_point_range(st.code_lo, st.code_hi, t, row)
+                st = dataclasses.replace(st, code_lo=lo, code_hi=hi)
+                # The tile is exactly [row, row] == the oracle's rebuild:
+                # whatever debt its dead predecessors left is gone.
+                self.staleness[t] = 0
+                if st.has_super:
+                    # The child just got TIGHTER, which widening can't
+                    # express — recompute its super from current children
+                    # (dominating whether or not siblings are stale).
+                    slo, shi = _recompute_super_range(
+                        st.super_lo, st.super_hi, st.code_lo, st.code_hi,
+                        t // st.super_factor, factor=st.super_factor)
+                    st = dataclasses.replace(st, super_lo=slo,
+                                             super_hi=shi)
+            else:
+                lo, hi = _widen_range(st.code_lo, st.code_hi, t, row)
+                st = dataclasses.replace(st, code_lo=lo, code_hi=hi)
+                if st.has_super:
+                    slo, shi = _widen_range(st.super_lo, st.super_hi,
+                                            t // st.super_factor, row)
+                    st = dataclasses.replace(st, super_lo=slo,
+                                             super_hi=shi)
         else:
-            packed = _or_in_presence(self.state.packed, t, row, self.b)
-            self.state = dataclasses.replace(self.state, packed=packed)
+            packed = _or_in_presence(st.packed, t, row, self.b)
+            st = dataclasses.replace(st, packed=packed)
+            if st.has_super:
+                sp = _or_in_presence(st.super_packed,
+                                     t // st.super_factor, row, self.b)
+                st = dataclasses.replace(st, super_packed=sp)
+        self.state = st
 
     def insert(self, row) -> int:
         """Add an item; returns its slot (= item id).  Reuses the oldest
@@ -278,6 +361,7 @@ class MutableHeadState:
         if max_tiles is not None:
             tile_ids = tile_ids[:int(max_tiles)]
         st = self.state
+        touched_supers = set()
         for t in tile_ids:
             if st.backend == "range":
                 lo, hi = _retighten_tile_range(st.code_lo, st.code_hi,
@@ -289,15 +373,35 @@ class MutableHeadState:
                                                 self.live, t, b=st.b,
                                                 tile=st.tile)
                 st = dataclasses.replace(st, packed=packed)
+            if st.has_super:
+                touched_supers.add(t // st.super_factor)
             self.staleness[t] = 0
+        # Each touched super is recomputed ONCE from its current children
+        # (after all of this call's child rebuilds): OR/hull of dominating
+        # child metadata dominates, and once every stale child is exact
+        # the super is exact too — bit-identical to `rebuild_oracle`.
+        for sup in sorted(touched_supers):
+            if st.backend == "range":
+                slo, shi = _recompute_super_range(
+                    st.super_lo, st.super_hi, st.code_lo, st.code_hi,
+                    sup, factor=st.super_factor)
+                st = dataclasses.replace(st, super_lo=slo, super_hi=shi)
+            else:
+                sp = _recompute_super_packed(st.super_packed, st.packed,
+                                             sup, factor=st.super_factor)
+                st = dataclasses.replace(st, super_packed=sp)
         self.state = st
         return tile_ids
 
     def rebuild_oracle(self) -> PrunedHeadState:
         """From-scratch exact state over the current codes + live mask —
-        the bit-parity reference for retighten and the churn tests."""
-        return build_pruned_state_masked(self.codes, self.live, self.b,
-                                         self.tile, backend=self.backend)
+        the bit-parity reference for retighten and the churn tests.
+        Carries the same super level as the managed state."""
+        st = build_pruned_state_masked(self.codes, self.live, self.b,
+                                       self.tile, backend=self.backend)
+        if self.super_factor:
+            st = with_super(st, self.super_factor)
+        return st
 
     # -- serving snapshot -------------------------------------------------
 

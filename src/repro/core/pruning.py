@@ -46,7 +46,7 @@ ONE jitted dispatch.
 from __future__ import annotations
 
 import weakref
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Optional, Tuple
 
@@ -69,6 +69,13 @@ DEFAULT_SEED_STAB_TOL = 0.05
 #: Default query-group count for the per-query grouped cascade
 #: (PQConfig.n_groups; n_groups=1 collapses to the batch-any route).
 DEFAULT_N_GROUPS = 8
+#: Default super-tile width (child tiles per super-tile) for the
+#: hierarchical cascade: pass 0 prunes super-tiles against theta before a
+#: single child tile bound is gathered, dropping the bound pass from O(T)
+#: to O(T/factor + survivors).  64 balances pass-0 cost (T/64 super
+#: bounds) against pass-1 granularity (each surviving super admits up to
+#: 64 child bounds) at the 10^7-10^8 catalogue scale the ROADMAP targets.
+DEFAULT_SUPER_FACTOR = 64
 
 #: Pluggable bound backends (PQConfig.bound_backend):
 #:   "bitmask" — uint32 code-presence bitmasks (exact per-tile code sets,
@@ -88,7 +95,14 @@ STATS_KEYS = frozenset({
     # Per-query grouping (PR 5).  Ungrouped routes report n_groups=1,
     # max_group_survived == n_survived, and pairs_scored == pairs_union
     # == n_survived * padded batch — the batch-any work.
-    "n_groups", "max_group_survived", "pairs_scored", "pairs_union"})
+    "n_groups", "max_group_survived", "pairs_scored", "pairs_union",
+    # Hierarchical super-tile cascade (PR 9).  Flat routes report
+    # n_super=0, n_super_survived=0, super_rung_hit=0, and
+    # bounds_computed == n_tiles (every tile bound is gathered); the
+    # hierarchical route reports bounds_computed == n_super + the
+    # executed super rung's child-bound gather — the pass-0/pass-1 work
+    # the BENCH section's >=10x reduction claim is measured on.
+    "n_super", "n_super_survived", "super_rung_hit", "bounds_computed"})
 
 _WORD = 32   # presence bits per packed uint32 word
 
@@ -212,6 +226,21 @@ class PrunedHeadState:
     ``shards * n_local`` rows and tiled *per shard*, so tile boundaries
     never straddle shard boundaries and every metadata array splits evenly
     over the mesh axis (``P(axis, ...)`` on its leading tile dim).
+
+    **Hierarchical super-tiles** (``super_factor > 1``, built by
+    :func:`with_super`): groups of ``super_factor`` consecutive child
+    tiles carry their own presence/range metadata — the OR of the
+    children's presence bitmasks, or the [min lo, max hi] hull of their
+    ranges — grouped *per shard* so a super-tile never straddles a shard
+    boundary.  A super-tile's bound dominates every child tile's bound
+    (same dominance argument one level up: the union's per-split max is
+    >= each member's), so pass 0 can prune super-tiles against theta
+    before any child tile bound is gathered; children of a pruned super
+    provably cannot survive, and the surviving-child set — hence the
+    exact top-k — is bit-identical to the flat cascade at the same theta
+    (docs/PRUNING.md §Hierarchical bounds).  ``super_factor == 0`` (the
+    default) means no super level; the super arrays are ``None`` pytree
+    children that flatten to nothing, so flat states are untouched.
     """
 
     packed: Optional[jax.Array]   # bitmask: (T, m, ceil(b/32)) uint32
@@ -223,6 +252,10 @@ class PrunedHeadState:
     backend: str = "bitmask"
     code_lo: Optional[jax.Array] = None   # range: (T, m) int16
     code_hi: Optional[jax.Array] = None   # range: (T, m) int16
+    super_factor: int = 0                 # child tiles per super (0 = flat)
+    super_packed: Optional[jax.Array] = None  # (S, m, ceil(b/32)) uint32
+    super_lo: Optional[jax.Array] = None      # (S, m) int16
+    super_hi: Optional[jax.Array] = None      # (S, m) int16
 
     def meta_arrays(self) -> Tuple[jax.Array, ...]:
         """The backend's metadata arrays, leading dim = total tiles (what
@@ -231,6 +264,17 @@ class PrunedHeadState:
             return (self.code_lo, self.code_hi)
         return (self.packed,)
 
+    def super_meta_arrays(self) -> Tuple[jax.Array, ...]:
+        """The backend's super-tile metadata arrays, leading dim = total
+        super-tiles (the sharded route splits them like the child arrays)."""
+        if self.backend == "range":
+            return (self.super_lo, self.super_hi)
+        return (self.super_packed,)
+
+    @property
+    def has_super(self) -> bool:
+        return self.super_factor > 1
+
     @property
     def n_tiles(self) -> int:
         return self.meta_arrays()[0].shape[0]
@@ -238,6 +282,14 @@ class PrunedHeadState:
     @property
     def tiles_per_shard(self) -> int:
         return self.n_tiles // self.shards
+
+    @property
+    def n_super(self) -> int:
+        return self.super_meta_arrays()[0].shape[0]
+
+    @property
+    def supers_per_shard(self) -> int:
+        return self.n_super // self.shards
 
     @property
     def nbytes(self) -> int:
@@ -257,8 +309,11 @@ class PrunedHeadState:
 
 
 jax.tree_util.register_dataclass(
-    PrunedHeadState, data_fields=["packed", "code_lo", "code_hi"],
-    meta_fields=["tile", "n_items", "b", "shards", "n_local", "backend"])
+    PrunedHeadState,
+    data_fields=["packed", "code_lo", "code_hi",
+                 "super_packed", "super_lo", "super_hi"],
+    meta_fields=["tile", "n_items", "b", "shards", "n_local", "backend",
+                 "super_factor"])
 
 
 @partial(jax.jit, static_argnames=("tile",))
@@ -402,11 +457,73 @@ def build_pruned_state_masked(codes: jax.Array, live: jax.Array, b: int,
         tile=t, n_items=n, b=b, shards=1, n_local=n)
 
 
+def _or_reduce_axis(x: jax.Array, axis: int) -> jax.Array:
+    """Tree-halving bitwise-OR reduction along ``axis`` (log2(n) ops
+    instead of an n-way unrolled chain — super builds at factor=64 stay
+    cheap at trace time)."""
+    while x.shape[axis] > 1:
+        n = x.shape[axis]
+        half = n // 2
+        a = jax.lax.slice_in_dim(x, 0, half, axis=axis)
+        bb = jax.lax.slice_in_dim(x, half, 2 * half, axis=axis)
+        merged = a | bb
+        if n % 2:
+            rest = jax.lax.slice_in_dim(x, 2 * half, n, axis=axis)
+            merged = jnp.concatenate([merged, rest], axis=axis)
+        x = merged
+    return jnp.squeeze(x, axis=axis)
+
+
+def with_super(state: PrunedHeadState,
+               factor: int = DEFAULT_SUPER_FACTOR) -> PrunedHeadState:
+    """Attach a super-tile level: groups of ``factor`` consecutive child
+    tiles (grouped PER SHARD, so a super never straddles a shard boundary)
+    get their own metadata by reduction over the children — presence
+    bitmasks OR together (presence of the union set), code ranges take the
+    [min lo, max hi] hull.  Either way the super bound dominates every
+    child bound, which is the pass-0 pruning invariant.  ``factor <= 1``
+    strips the super level.  Pure jnp over the existing child metadata —
+    no codes pass — so it composes with any builder (fresh, masked,
+    sharded) and with the mutable catalogue's retighten oracle."""
+    factor = int(factor)
+    if factor <= 1:
+        return replace(state, super_factor=0, super_packed=None,
+                       super_lo=None, super_hi=None)
+    t_local = state.tiles_per_shard
+    s_local = -(-t_local // factor)
+    pad = s_local * factor - t_local
+    if state.backend == "range":
+        m = state.code_lo.shape[1]
+        lo = state.code_lo.reshape(state.shards, t_local, m)
+        hi = state.code_hi.reshape(state.shards, t_local, m)
+        if pad:
+            # Padding children are the identity of min/max (lo=int16-max,
+            # hi=0); every super has >= 1 real child, so no clamp needed.
+            lo = jnp.pad(lo, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=2 ** 15 - 1)
+            hi = jnp.pad(hi, ((0, 0), (0, pad), (0, 0)))
+        slo = lo.reshape(state.shards, s_local, factor, m).min(axis=2)
+        shi = hi.reshape(state.shards, s_local, factor, m).max(axis=2)
+        return replace(state, super_factor=factor, super_packed=None,
+                       super_lo=slo.reshape(-1, m).astype(jnp.int16),
+                       super_hi=shi.reshape(-1, m).astype(jnp.int16))
+    _, m, w = state.packed.shape
+    pk = state.packed.reshape(state.shards, t_local, m, w)
+    if pad:
+        pk = jnp.pad(pk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = pk.reshape(state.shards, s_local, factor, m, w)
+    sup = _or_reduce_axis(sp, axis=2)          # (shards, s_local, m, w)
+    return replace(state, super_factor=factor, super_lo=None, super_hi=None,
+                   super_packed=sup.reshape(-1, m, w))
+
+
 def abstract_pruned_state(n_items: int, m: int, b: int,
                           tile: int = DEFAULT_PRUNE_TILE, *,
                           shards: int = 1,
-                          backend: str = "bitmask") -> PrunedHeadState:
-    """ShapeDtypeStruct stand-in matching :func:`build_pruned_state`."""
+                          backend: str = "bitmask",
+                          super_factor: int = 0) -> PrunedHeadState:
+    """ShapeDtypeStruct stand-in matching :func:`build_pruned_state`
+    (+ :func:`with_super` when ``super_factor > 1``)."""
     if shards <= 1:
         t = max(1, min(int(tile), n_items))
         n_tiles = -(-n_items // t)
@@ -418,6 +535,16 @@ def abstract_pruned_state(n_items: int, m: int, b: int,
         n_tiles = shards * -(-n_local // t)
         kw = dict(tile=t, n_items=n_items, b=b, shards=shards,
                   n_local=n_local)
+    sh = max(1, shards)
+    if super_factor > 1:
+        n_super = sh * -(-(n_tiles // sh) // super_factor)
+        kw["super_factor"] = int(super_factor)
+        if backend == "range":
+            sup_sds = jax.ShapeDtypeStruct((n_super, m), jnp.int16)
+            kw["super_lo"] = kw["super_hi"] = sup_sds
+        else:
+            kw["super_packed"] = jax.ShapeDtypeStruct(
+                (n_super, m, packed_words(b)), jnp.uint32)
     if backend == "range":
         rng_sds = jax.ShapeDtypeStruct((n_tiles, m), jnp.int16)
         return PrunedHeadState(None, backend="range", code_lo=rng_sds,
@@ -918,6 +1045,39 @@ def compact_mask(mask: jax.Array, n_slots: Optional[int] = None,
     return slots, mask.sum(dtype=jnp.int32)
 
 
+def compact_values(mask: jax.Array, values: jax.Array,
+                   n_slots: Optional[int] = None,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """:func:`compact_mask`, but scattering caller-provided VALUES instead
+    of positions — the hierarchical cascade's stage-2 compaction, where the
+    masked axis enumerates (surviving super, child) pairs and the value is
+    the child's GLOBAL tile id.  Slot order follows the mask axis; when
+    ``values`` ascends over the surviving entries (super slots ascend and
+    children ascend within each super) the slot buffer is ascending — the
+    kernel/XLA tie-break contract.  ``-1``-padded, ``mode="drop"`` like
+    the mask form."""
+    t = mask.shape[0]
+    n_slots = t if n_slots is None else int(n_slots)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dest = jnp.where(mask, pos, n_slots)
+    slots = jnp.full((n_slots,), -1, jnp.int32).at[dest].set(
+        values.astype(jnp.int32), mode="drop")
+    return slots, mask.sum(dtype=jnp.int32)
+
+
+def default_super_ladder(n_super: int) -> Tuple[int, ...]:
+    """Default pass-0 rung budgets (surviving super-tiles the hierarchical
+    tail is sized for): powers of two near S/16 and S/4, before the
+    exhaustive rung :func:`normalize_ladder` always appends.  Mirrors the
+    child ladder's shape — the common low-survival case runs the cheap
+    rung, skew escalates cost but never correctness."""
+    rungs = []
+    for frac in (16, 4):
+        x = max(1, n_super // frac)
+        rungs.append(1 << (x - 1).bit_length())
+    return tuple(dict.fromkeys(rungs))
+
+
 def pruned_pass1(codes: jax.Array, present: jax.Array, s: jax.Array, k: int,
                  *, tile: int, n_seed: int,
                  n_items: Optional[int] = None,
@@ -1004,6 +1164,7 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
                          seed_stab_tol: float = DEFAULT_SEED_STAB_TOL,
                          slot_budget: Optional[int] = None,
                          ladder=None,
+                         super_ladder=None,
                          pin_rung: bool = False,
                          query_grouping: bool = False,
                          n_groups: int = DEFAULT_N_GROUPS,
@@ -1072,30 +1233,120 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
     if live is not None and live.shape[0] != codes.shape[0]:
         raise ValueError(f"live mask covers {live.shape[0]} rows but the "
                          f"catalogue has {codes.shape[0]}")
-    bounds = tile_bounds(state, s)
-    t_total = bounds.shape[1]
+    t_total = state.n_tiles
     if ladder is None and slot_budget is not None:
         ladder = (int(slot_budget),)
-    rungs = normalize_ladder(ladder, t_total, k, tile)
-    if pin_rung:
-        # Load-adaptive degradation (serving/router.py): pin the cascade
-        # to its CHEAPEST calibrated rung and drop the escalation chain —
-        # bounded cost per batch, but survivors past the rung's budget are
-        # silently truncated (ascending tile order), so the result may
-        # miss true winners.  This is the ONLY cascade mode that can cost
-        # exactness; callers must tag every result served through it
-        # (Result.degraded), and with no sub-exhaustive rung in the
-        # ladder the pin degenerates to the exact exhaustive route.
-        rungs = rungs[:1]
+    # pin_rung (both here and in the hierarchical tail below):
+    # load-adaptive degradation (serving/router.py) — pin the cascade to
+    # its CHEAPEST calibrated rung and drop the escalation chain.  Bounded
+    # cost per batch, but survivors past the rung's budget are silently
+    # truncated (ascending tile order), so the result may miss true
+    # winners.  This is the ONLY cascade mode that can cost exactness;
+    # callers must tag every result served through it (Result.degraded),
+    # and with no sub-exhaustive rung in the ladder the pin degenerates to
+    # the exact exhaustive route.
     seed_kw = dict(seed_policy=seed_policy, seed_tiles=seed_tiles,
                    seed_max_tiles=seed_max_tiles,
-                   seed_stab_tol=seed_stab_tol,
-                   degenerate=degenerate_tile_mask(state), live=live)
+                   seed_stab_tol=seed_stab_tol, live=live)
     grouped = query_grouping and n_groups > 1
-    if grouped:
+    if grouped and state.has_super:
+        # Per-query grouped survival has no super-tile pass-0 (per-query
+        # super masks would need a per-query two-stage compaction);
+        # PQConfig.__post_init__ forbids the combination at config time —
+        # this guard catches hand-built states.
+        raise ValueError(
+            "query_grouping and hierarchical super-tiles are mutually "
+            "exclusive; strip the super level (with_super(state, 0)) or "
+            "disable grouping")
+    if state.has_super:
+        # Hierarchical cascade: pass 0 prunes SUPER-tiles against theta,
+        # and only the surviving supers' children ever get a tile bound
+        # gathered — O(S + survivors*factor) bound work instead of O(T).
+        # Exactness: ub_super >= ub_child >= every child item's score, so
+        # any tile surviving the flat rule (ub_t >= theta) has a surviving
+        # super — the surviving-child set equals the flat survival set at
+        # the same theta, and the scored top-k is bit-identical.
+        factor = state.super_factor
+        n_super = state.n_super
+        sup_parts = state.super_meta_arrays()
+        sup_bounds = bounds_from_parts(state.backend, sup_parts, s)
+        theta, n_seed_used, seed_sf = theta_seed_ingraph(
+            codes, s, sup_bounds, k, tile=factor * tile,
+            degenerate=degenerate_from_parts(state.backend, sup_parts,
+                                             state.b),
+            **seed_kw)
+        sup_mask = survival_mask(sup_bounds, theta)
+        sup_slots, sup_count = compact_mask(sup_mask)
+        sup_rungs = normalize_ladder(
+            default_super_ladder(n_super) if super_ladder is None
+            else super_ladder, n_super, k, factor * tile)
+        if pin_rung:
+            sup_rungs = sup_rungs[:1]
+        child_parts = state.meta_arrays()
+
+        def hier_tail(r_sup, i_sup):
+            """Whole post-pass-0 tail for a super rung of ``r_sup`` slots.
+            The super-rung ``lax.cond`` branches must agree on every
+            output shape, so the child-bound gather, the stage-2
+            compaction, the child ladder, AND the per-branch stats all
+            live inside the branch."""
+            sup_ids = sup_slots[:r_sup]
+            gid = (sup_ids[:, None] * factor
+                   + jnp.arange(factor, dtype=jnp.int32)[None, :]
+                   ).reshape(-1)                     # (r_sup * factor,)
+            # -1 sentinel supers map to negative gids; the last real super
+            # may own alignment-padding children past T.  Both are barred
+            # from the slot buffer whatever their (clamped-gather) bound
+            # values come out as.
+            valid = (gid >= 0) & (gid < t_total)
+            safe = jnp.clip(gid, 0, t_total - 1)
+            parts_sel = tuple(p[safe] for p in child_parts)
+            cb = bounds_from_parts(state.backend, parts_sel, s)
+            cmask = survival_mask(cb, theta) & valid
+            # Stage-2 compaction scatters GLOBAL tile ids (the mask axis
+            # enumerates (super slot, child) pairs): super slots ascend
+            # and children ascend within each super, so the slot buffer
+            # stays ascending — the tie-break contract the kernel and the
+            # XLA gather both rely on.
+            child_slots, child_count = compact_values(cmask, gid)
+            crungs = normalize_ladder(ladder, r_sup * factor, k, tile)
+            if pin_rung:
+                crungs = crungs[:1]
+            slot_lists = [child_slots[:r] for r in crungs]
+            vals, ids, crung = kernel_ops.pq_topk_tiles_ladder(
+                codes, s, k, slot_lists, child_count, tile=tile,
+                live=live, use_kernel=use_kernel, interpret=interpret)
+            overflow = (child_count > crungs[-2] if len(crungs) > 1
+                        else jnp.bool_(False))
+            return (vals, ids, child_count,
+                    jnp.asarray(crungs, jnp.int32)[crung], crung,
+                    jnp.int32(len(crungs)), jnp.asarray(overflow),
+                    jnp.int32(n_super + r_sup * factor), jnp.int32(i_sup))
+
+        def sup_rung_fn(i):
+            def run():
+                return hier_tail(sup_rungs[i], i)
+            if i == len(sup_rungs) - 1:
+                return run
+            nxt = sup_rung_fn(i + 1)
+            return lambda: jax.lax.cond(sup_count <= sup_rungs[i], run, nxt)
+
+        (vals, ids, count, n_scored, rung, n_rungs_stat, overflow,
+         bounds_computed, sup_rung) = sup_rung_fn(0)()
+        bt = kernel_ops.effective_batch_tile(bq)
+        max_group = count
+        pairs_scored = pairs_union = count * jnp.int32(-(-bq // bt) * bt)
+        n_groups_eff = 1
+        n_super_stat, sup_survived = n_super, sup_count
+    elif grouped:
+        rungs = normalize_ladder(ladder, t_total, k, tile)
+        if pin_rung:
+            rungs = rungs[:1]
+        bounds = tile_bounds(state, s)
         bt = kernel_ops.group_batch_tile(bq, n_groups)
         theta, n_seed_used, seed_sf = theta_seed_perquery(
-            codes, s, bounds, k, tile=tile, **seed_kw)
+            codes, s, bounds, k, tile=tile,
+            degenerate=degenerate_tile_mask(state), **seed_kw)
         pq_mask = survival_mask_perquery(bounds, theta)
         perm, inv, slots2d, counts = group_and_compact(
             pq_mask, n_groups=n_groups, batch_tile=bt)
@@ -1115,9 +1366,20 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
         # — the 8-row sublane floor can collapse a small batch into fewer
         # groups than requested (bq=8 at n_groups=8 is ONE union row).
         n_groups_eff = n_bt
+        n_scored = jnp.asarray(rungs, jnp.int32)[rung]
+        n_rungs_stat = len(rungs)
+        overflow = (max_group > rungs[-2] if len(rungs) > 1
+                    else jnp.bool_(False))
+        bounds_computed = t_total
+        n_super_stat, sup_survived, sup_rung = 0, 0, 0
     else:
+        rungs = normalize_ladder(ladder, t_total, k, tile)
+        if pin_rung:
+            rungs = rungs[:1]
+        bounds = tile_bounds(state, s)
         theta, n_seed_used, seed_sf = theta_seed_ingraph(
-            codes, s, bounds, k, tile=tile, **seed_kw)
+            codes, s, bounds, k, tile=tile,
+            degenerate=degenerate_tile_mask(state), **seed_kw)
         mask = survival_mask(bounds, theta)
         # One cumsum-scatter compaction; each rung's buffer is exactly the
         # full buffer's length-r prefix (survivors land at ascending
@@ -1131,18 +1393,25 @@ def cascade_topk_ingraph(codes: jax.Array, s: jax.Array, k: int,
         max_group = count
         pairs_scored = pairs_union = count * jnp.int32(-(-bq // bt) * bt)
         n_groups_eff = 1
+        n_scored = jnp.asarray(rungs, jnp.int32)[rung]
+        n_rungs_stat = len(rungs)
+        overflow = (max_group > rungs[-2] if len(rungs) > 1
+                    else jnp.bool_(False))
+        bounds_computed = t_total
+        n_super_stat, sup_survived, sup_rung = 0, 0, 0
     if not return_stats:
         return vals, ids
     stats = {"n_tiles": t_total, "n_survived": count,
-             "n_scored": jnp.asarray(rungs, jnp.int32)[rung],
+             "n_scored": n_scored,
              "survival_fraction": count / jnp.float32(max(t_total, 1)),
              "n_seed_used": n_seed_used, "seed_survival_est": seed_sf,
-             "rung_hit": rung, "n_rungs": len(rungs),
-             "slot_overflow": (max_group > rungs[-2] if len(rungs) > 1
-                               else jnp.bool_(False)),
+             "rung_hit": rung, "n_rungs": n_rungs_stat,
+             "slot_overflow": overflow,
              "bound_backend": state.backend,
              "n_groups": n_groups_eff, "max_group_survived": max_group,
-             "pairs_scored": pairs_scored, "pairs_union": pairs_union}
+             "pairs_scored": pairs_scored, "pairs_union": pairs_union,
+             "n_super": n_super_stat, "n_super_survived": sup_survived,
+             "super_rung_hit": sup_rung, "bounds_computed": bounds_computed}
     return vals, ids, stats
 
 
@@ -1208,7 +1477,9 @@ def cascade_topk(codes: jax.Array, s: jax.Array, k: int, *, tile: int,
              "bound_backend": "bitmask",
              "n_groups": 1, "max_group_survived": int(len(survivors)),
              "pairs_scored": int(len(survivors)) * int(s.shape[0]),
-             "pairs_union": int(len(survivors)) * int(s.shape[0])}
+             "pairs_union": int(len(survivors)) * int(s.shape[0]),
+             "n_super": 0, "n_super_survived": 0, "super_rung_hit": 0,
+             "bounds_computed": meta.n_tiles}
     return vals, ids, stats
 
 
@@ -1227,7 +1498,27 @@ def survival_count(codes: jax.Array, s: jax.Array, k: int,
     """Surviving-tile count for one query batch (i32 scalar) — the cheap
     bounds+theta prefix of the cascade, no scoring pass.  What the engine's
     one-shot calibration runs to collect the survival stats that
-    :func:`calibrate_ladder` turns into a slot-budget ladder."""
+    :func:`calibrate_ladder` turns into a slot-budget ladder.
+
+    Hierarchical states seed theta from the SUPER-tile bounds — the same
+    seed set (hence the same theta, hence the same survivor distribution)
+    the hierarchical serve path produces; seeding from child bounds here
+    would calibrate the ladder against thetas the serve path never uses.
+    The count is still the surviving CHILD-tile count (children of pruned
+    supers provably cannot survive, so it matches the serve path's
+    stage-2 survivor count exactly)."""
+    if state.has_super:
+        sup_parts = state.super_meta_arrays()
+        sup_bounds = bounds_from_parts(state.backend, sup_parts, s)
+        theta, _, _ = theta_seed_ingraph(
+            codes, s, sup_bounds, k, tile=state.tile * state.super_factor,
+            seed_policy=seed_policy, seed_tiles=seed_tiles,
+            seed_max_tiles=seed_max_tiles, seed_stab_tol=seed_stab_tol,
+            degenerate=degenerate_from_parts(state.backend, sup_parts,
+                                             state.b),
+            live=live)
+        bounds = tile_bounds(state, s)
+        return survival_mask(bounds, theta).sum(dtype=jnp.int32)
     bounds = tile_bounds(state, s)
     theta, _, _ = theta_seed_ingraph(
         codes, s, bounds, k, tile=state.tile, seed_policy=seed_policy,

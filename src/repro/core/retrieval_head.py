@@ -56,6 +56,12 @@ def init(key: jax.Array, n_items: int, d_model: int,
     params["pruned"] = pruning.build_pruned_state(
         params["codes"], pq.b, DEFAULT_PRUNE_TILE,
         backend=pq.bound_backend)
+    if pq.super_factor > 1:
+        # Hierarchical super-tile level (docs/PRUNING.md §Hierarchical
+        # bounds): built once here by reduction over the child metadata;
+        # the cascade auto-detects it and inserts the super pass-0.
+        params["pruned"] = pruning.with_super(params["pruned"],
+                                              pq.super_factor)
     return params
 
 
@@ -66,7 +72,7 @@ def abstract(n_items: int, d_model: int, pq: Optional[PQConfig] = None,
     params = pq_lib.abstract_pq_embedding(pq, n_items, d_model, dtype)
     params["pruned"] = pruning.abstract_pruned_state(
         n_items, pq.m, pq.b, DEFAULT_PRUNE_TILE,
-        backend=pq.bound_backend)
+        backend=pq.bound_backend, super_factor=pq.super_factor)
     return params
 
 
@@ -247,11 +253,13 @@ def _top_items_pruned_ingraph(params, phi, k, *,
         state = None
     if state is None:
         # Legacy param dicts / sharded-state fallback: rebuild in-graph,
-        # honouring the config's bound backend.
+        # honouring the config's bound backend and super-tile factor.
         state = pruning.build_pruned_state(
             codes, int(sub_emb.shape[1]), DEFAULT_PRUNE_TILE,
             backend=pq_cfg.bound_backend if pq_cfg is not None
             else "bitmask")
+        if pq_cfg is not None and pq_cfg.super_factor > 1:
+            state = pruning.with_super(state, pq_cfg.super_factor)
     out = pruning.cascade_topk_ingraph(codes, s, k, state,
                                        tile=DEFAULT_PRUNE_TILE,
                                        slot_budget=slot_budget,
@@ -303,7 +311,9 @@ def top_items_pruned(params: Params, phi: jax.Array, k: int, *,
 def ensure_sharded_pruned_state(params: Params, mesh, axis: str = "model", *,
                                 k_hint: int = 64,
                                 tile: int = DEFAULT_PRUNE_TILE,
-                                backend: Optional[str] = None) -> Params:
+                                backend: Optional[str] = None,
+                                super_factor: Optional[int] = None
+                                ) -> Params:
     """Return ``params`` with a :class:`pruning.PrunedHeadState` whose tile
     layout is aligned to ``mesh``'s ``axis`` (tiles never straddle shard
     boundaries, so the metadata arrays split evenly over the mesh).
@@ -314,7 +324,10 @@ def ensure_sharded_pruned_state(params: Params, mesh, axis: str = "model", *,
     rebuilds metadata per call.  ``k_hint`` is the largest k the route
     will serve — the tile must hold the per-shard oversampled top-(k +
     pad) winners.  ``backend=None`` preserves the threaded state's
-    backend (default ``"bitmask"``).
+    backend (default ``"bitmask"``); ``super_factor=None`` likewise
+    preserves the threaded state's super-tile factor (the rebuilt sharded
+    state regroups supers PER SHARD, so the hierarchical pass-0 and the
+    shard-skip both stay shard-local).
     """
     if not is_pq(params):
         return params
@@ -327,13 +340,19 @@ def ensure_sharded_pruned_state(params: Params, mesh, axis: str = "model", *,
     st = _pruned_state(params)
     if backend is None:
         backend = st.backend if st is not None else "bitmask"
+    if super_factor is None:
+        super_factor = st.super_factor if st is not None else 0
+    super_factor = 0 if super_factor <= 1 else int(super_factor)
     if (st is not None and st.shards == n_shards and st.tile >= k_local
-            and st.backend == backend):
+            and st.backend == backend and st.super_factor == super_factor):
         return params
     b = params["sub_emb"].shape[1]
     need = min(max(tile, k_local), n_local)
-    return {**params, "pruned": pruning.build_pruned_state(
-        codes, b, need, shards=n_shards, backend=backend)}
+    new = pruning.build_pruned_state(codes, b, need, shards=n_shards,
+                                     backend=backend)
+    if super_factor:
+        new = pruning.with_super(new, super_factor)
+    return {**params, "pruned": new}
 
 
 def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
@@ -342,6 +361,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                              seed_tiles: Optional[int] = None,
                              pq_cfg: Optional[PQConfig] = None,
                              ladder=None,
+                             super_ladder=None,
                              use_kernel: Optional[bool] = None,
                              interpret: Optional[bool] = None,
                              return_stats: bool = False):
@@ -373,6 +393,18 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     all-gather merge — shards may group differently (survivor overlap is
     a local property), which is safe because every cross-shard op runs in
     request order.
+
+    With a hierarchical state (``with_super``; super-tiles grouped PER
+    SHARD) each shard seeds theta from its SUPER-tile bounds, shares the
+    ``pmax`` theta, and then runs the two-stage tail behind a shard-local
+    ``lax.cond``: when NONE of the shard's super-tiles survive the shared
+    theta, the shard skips the child-bound gather and the scoring kernel
+    entirely and contributes ``-inf`` candidates pointing at the global
+    sentinel id — super-tile bounds decide which shards a query batch
+    touches at all.  Every collective (theta ``pmax``, the all-gather
+    merge, the stats reductions) stays OUTSIDE the cond: the predicate is
+    shard-divergent, and a collective inside a divergent branch would
+    deadlock the mesh.
     """
     if not is_pq(params):
         raise ValueError("top_items_pruned_sharded requires a PQ head")
@@ -392,11 +424,16 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     want_backend = (state.backend if state is not None else
                     (pq_cfg.bound_backend if pq_cfg is not None
                      else "bitmask"))
+    want_super = (state.super_factor if state is not None else
+                  (pq_cfg.super_factor if pq_cfg is not None else 0))
     if (state is None or state.shards != n_shards or state.tile < k_local
             or state.backend != want_backend):
         state = pruning.build_pruned_state(
             codes, b, min(max(tile, k_local), n_local), shards=n_shards,
             backend=want_backend)
+        if want_super > 1:
+            state = pruning.with_super(state, want_super)
+    hier = state.has_super
     tile = state.tile
     t_local = state.tiles_per_shard
     codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
@@ -419,13 +456,29 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
     # final rung is always the full local buffer — exhaustive per shard.
     rungs = pruning.normalize_ladder(ladder, t_local, k_local, tile)
     # The backend's metadata arrays all carry the tile axis first, so one
-    # P(axis, ...) spec per array shards them alongside the codes.
+    # P(axis, ...) spec per array shards them alongside the codes.  A
+    # hierarchical state's super arrays ride the same axis (supers are
+    # grouped per shard), appended after the child arrays.
+    n_child_parts = len(state.meta_arrays())
     meta_parts = state.meta_arrays()
+    if hier:
+        factor = state.super_factor
+        s_per_shard = state.supers_per_shard
+        sup_rungs = pruning.normalize_ladder(
+            pruning.default_super_ladder(s_per_shard)
+            if super_ladder is None else super_ladder,
+            s_per_shard, k_local, factor * tile)
+        meta_parts = meta_parts + state.super_meta_arrays()
     meta_specs = tuple(P(axis, *([None] * (a.ndim - 1)))
                        for a in meta_parts)
     grp_kw = _grouping_kwargs(pq_cfg)
     grouped = grp_kw.get("query_grouping", False) and \
         grp_kw.get("n_groups", 1) > 1
+    if hier and grouped:
+        raise ValueError(
+            "query_grouping and hierarchical super-tiles are mutually "
+            "exclusive on the sharded route too; strip the super level "
+            "or disable grouping")
     n_groups = grp_kw.get("n_groups", pruning.DEFAULT_N_GROUPS)
     bq = phi.shape[0]
     bt = (kernel_ops.group_batch_tile(bq, n_groups) if grouped
@@ -436,21 +489,91 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                    live_local=None):
         s = scoring.subid_scores(sub_emb_.astype(jnp.float32),
                                  phi_.astype(jnp.float32))
-        bounds = pruning.bounds_from_parts(state.backend, meta_local, s)
-        degenerate = pruning.degenerate_from_parts(state.backend, meta_local,
-                                                   state.b)
+        child_local = meta_local[:n_child_parts]
         offset = jax.lax.axis_index(axis) * n_local
-        seed_fn = (pruning.theta_seed_perquery if grouped
-                   else pruning.theta_seed_ingraph)
-        theta_local, n_seed_used, _sf = seed_fn(
-            codes_local, s, bounds, k, tile=tile, n_items=n,
-            id_offset=offset, degenerate=degenerate, live=live_local,
-            **seed_kw)
-        # Per-query certified threshold: each shard's theta_q certifies
-        # >= k items somewhere score >= theta_q, so the per-query max over
-        # shards is still certified — and the tightest any shard proves.
-        theta = jax.lax.pmax(theta_local, axis)
-        if grouped:
+        if hier:
+            sup_local = meta_local[n_child_parts:]
+            sup_bounds = pruning.bounds_from_parts(state.backend,
+                                                   sup_local, s)
+            theta_local, n_seed_used, _sf = pruning.theta_seed_ingraph(
+                codes_local, s, sup_bounds, k, tile=factor * tile,
+                n_items=n, id_offset=offset,
+                degenerate=pruning.degenerate_from_parts(
+                    state.backend, sup_local, state.b),
+                live=live_local, **seed_kw)
+            theta = jax.lax.pmax(theta_local, axis)
+            sup_mask = pruning.survival_mask(sup_bounds, theta)
+            sup_slots, sup_count = pruning.compact_mask(sup_mask)
+
+            def hier_tail(r_sup, i_sup):
+                sup_ids = sup_slots[:r_sup]
+                gid_t = (sup_ids[:, None] * factor
+                         + jnp.arange(factor, dtype=jnp.int32)[None, :]
+                         ).reshape(-1)
+                valid = (gid_t >= 0) & (gid_t < t_local)
+                safe = jnp.clip(gid_t, 0, t_local - 1)
+                parts_sel = tuple(p[safe] for p in child_local)
+                cb = pruning.bounds_from_parts(state.backend, parts_sel, s)
+                cmask = pruning.survival_mask(cb, theta) & valid
+                child_slots, child_count = pruning.compact_values(cmask,
+                                                                  gid_t)
+                crungs = pruning.normalize_ladder(ladder, r_sup * factor,
+                                                  k_local, tile)
+                slot_lists = tuple(child_slots[:r] for r in crungs)
+                lv, li, crung = kernel_ops._pq_topk_tiles_ladder(
+                    codes_local, s, k_local, slot_lists, child_count,
+                    tile=tile, batch_tile=bt, live=live_local,
+                    use_kernel=use_kernel, interpret=interpret)
+                overflow = (child_count > crungs[-2] if len(crungs) > 1
+                            else jnp.bool_(False))
+                return (lv, li, child_count,
+                        jnp.asarray(crungs, jnp.int32)[crung], crung,
+                        jnp.int32(len(crungs)), jnp.asarray(overflow),
+                        jnp.int32(s_per_shard + r_sup * factor),
+                        jnp.int32(i_sup))
+
+            def sup_rung_fn(i):
+                def run():
+                    return hier_tail(sup_rungs[i], i)
+                if i == len(sup_rungs) - 1:
+                    return run
+                nxt = sup_rung_fn(i + 1)
+                return lambda: jax.lax.cond(sup_count <= sup_rungs[i],
+                                            run, nxt)
+
+            def skip_tail():
+                # Shard-skip: none of this shard's supers survive the
+                # shared theta for ANY query — no child bound is gathered
+                # and no kernel runs; the shard contributes -inf
+                # candidates pointing at the global sentinel id n (the
+                # gid map below adds offset back).
+                lv = jnp.full((bq, k_local), -jnp.inf, jnp.float32)
+                li = jnp.full((bq, k_local), n, jnp.int32) - offset
+                return (lv, li, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                        jnp.int32(1), jnp.bool_(False),
+                        jnp.int32(s_per_shard), jnp.int32(0))
+
+            # The skip cond's predicate is shard-local (divergent across
+            # the mesh); every collective stays outside it.
+            (lv, li, count, n_scored_loc, rung, n_rungs_loc, overflow_loc,
+             bounds_loc, sup_rung) = jax.lax.cond(
+                sup_count == jnp.int32(0), skip_tail, sup_rung_fn(0))
+            max_group = count
+            pairs = count * jnp.int32(b_pad)
+        elif grouped:
+            bounds = pruning.bounds_from_parts(state.backend, child_local,
+                                               s)
+            degenerate = pruning.degenerate_from_parts(
+                state.backend, child_local, state.b)
+            theta_local, n_seed_used, _sf = pruning.theta_seed_perquery(
+                codes_local, s, bounds, k, tile=tile, n_items=n,
+                id_offset=offset, degenerate=degenerate, live=live_local,
+                **seed_kw)
+            # Per-query certified threshold: each shard's theta_q
+            # certifies >= k items somewhere score >= theta_q, so the
+            # per-query max over shards is still certified — and the
+            # tightest any shard proves.
+            theta = jax.lax.pmax(theta_local, axis)
             pq_mask = pruning.survival_mask_perquery(bounds, theta)
             perm, inv_p, slots2d, counts = pruning.group_and_compact(
                 pq_mask, n_groups=n_groups, batch_tile=bt)
@@ -465,7 +588,17 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
             count = pq_mask.any(axis=0).sum(dtype=jnp.int32)
             max_group = counts.max()
             pairs = (counts * jnp.int32(bt)).sum()
+            n_scored_loc = jnp.asarray(rungs, jnp.int32)[rung]
         else:
+            bounds = pruning.bounds_from_parts(state.backend, child_local,
+                                               s)
+            degenerate = pruning.degenerate_from_parts(
+                state.backend, child_local, state.b)
+            theta_local, n_seed_used, _sf = pruning.theta_seed_ingraph(
+                codes_local, s, bounds, k, tile=tile, n_items=n,
+                id_offset=offset, degenerate=degenerate, live=live_local,
+                **seed_kw)
+            theta = jax.lax.pmax(theta_local, axis)
             mask = pruning.survival_mask(bounds, theta)
             # One compaction; rung buffers are prefixes of the full buffer.
             slots_full, count = pruning.compact_mask(mask)
@@ -476,6 +609,7 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
                 interpret=interpret)
             max_group = count
             pairs = count * jnp.int32(b_pad)
+            n_scored_loc = jnp.asarray(rungs, jnp.int32)[rung]
         gid = li.astype(jnp.int32) + offset.astype(jnp.int32)
         lv = jnp.where(gid < n, lv, -jnp.inf)
         if live_local is not None:
@@ -487,19 +621,28 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
             lv, sel = jax.lax.top_k(lv, k)
             gid = jnp.take_along_axis(gid, sel, axis=1)
         vals, ids = topk_lib.merge_local_topk(lv, gid, k, axis)
-        return (vals, ids, jax.lax.psum(count, axis),
+        base = (vals, ids, jax.lax.psum(count, axis),
                 jax.lax.pmax(n_seed_used, axis),
                 jax.lax.pmax(rung, axis),
-                jax.lax.psum(jnp.asarray(rungs, jnp.int32)[rung], axis),
+                jax.lax.psum(n_scored_loc, axis),
                 jax.lax.pmax(max_group, axis),
                 jax.lax.psum(pairs, axis),
                 jax.lax.psum(count * jnp.int32(b_pad), axis))
+        if hier:
+            return base + (jax.lax.psum(sup_count, axis),
+                           jax.lax.pmax(sup_rung, axis),
+                           jax.lax.psum(bounds_loc, axis),
+                           jax.lax.pmax(n_rungs_loc, axis),
+                           jax.lax.pmax(overflow_loc.astype(jnp.int32),
+                                        axis))
+        return base
 
+    n_out = 14 if hier else 9
     if live is None:
         fn = manual_axis_map(
             shard_body, mesh,
             in_specs=(P(axis, None), meta_specs, P(), P()),
-            out_specs=(P(),) * 9)
+            out_specs=(P(),) * n_out)
         outs = fn(codes_p, meta_parts, sub_emb, phi)
     else:
         # Tombstone mask rides the mesh axis alongside the codes (shard
@@ -514,30 +657,44 @@ def top_items_pruned_sharded(params: Params, phi: jax.Array, k: int, mesh,
         fn = manual_axis_map(
             body_live, mesh,
             in_specs=(P(axis, None), meta_specs, P(axis), P(), P()),
-            out_specs=(P(),) * 9)
+            out_specs=(P(),) * n_out)
         outs = fn(codes_p, meta_parts, live_p, sub_emb, phi)
     (vals, ids, survived, n_seed_used, rung, n_scored, max_group,
-     pairs_scored, pairs_union) = outs
+     pairs_scored, pairs_union) = outs[:9]
     if not return_stats:
         return vals, ids
     total = n_shards * t_local
+    if hier:
+        sup_survived, sup_rung, bounds_comp, n_rungs_t, overflow_t = outs[9:]
+        n_rungs_stat = n_rungs_t
+        overflow_stat = overflow_t != 0
+        sup_stats = {"n_super": state.n_super,
+                     "n_super_survived": sup_survived,
+                     "super_rung_hit": sup_rung,
+                     "bounds_computed": bounds_comp}
+    else:
+        n_rungs_stat = len(rungs)
+        # Overflow is per-shard (survivor skew can force one shard to
+        # its exhaustive rung while the global total still fits), so
+        # derive it from the pmax'd rung, not the psum'd count.
+        overflow_stat = (rung == len(rungs) - 1
+                         if len(rungs) > 1 else jnp.bool_(False))
+        sup_stats = {"n_super": 0, "n_super_survived": 0,
+                     "super_rung_hit": 0, "bounds_computed": total}
     stats = {"n_tiles": total, "n_survived": survived,
              "n_scored": n_scored,
              "survival_fraction": survived / jnp.float32(max(total, 1)),
              "n_seed_used": n_seed_used,
              "seed_survival_est": survived / jnp.float32(max(total, 1)),
-             "rung_hit": rung, "n_rungs": len(rungs),
-             # Overflow is per-shard (survivor skew can force one shard to
-             # its exhaustive rung while the global total still fits), so
-             # derive it from the pmax'd rung, not the psum'd count.
-             "slot_overflow": (rung == len(rungs) - 1
-                               if len(rungs) > 1 else jnp.bool_(False)),
+             "rung_hit": rung, "n_rungs": n_rungs_stat,
+             "slot_overflow": overflow_stat,
              "bound_backend": state.backend,
              # Kernel group rows actually built (the 8-row sublane floor
              # can collapse small batches below the requested n_groups).
              "n_groups": b_pad // bt if grouped else 1,
              "max_group_survived": max_group,
-             "pairs_scored": pairs_scored, "pairs_union": pairs_union}
+             "pairs_scored": pairs_scored, "pairs_union": pairs_union,
+             **sup_stats}
     return vals, ids, stats
 
 

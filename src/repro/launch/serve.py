@@ -103,6 +103,12 @@ def main(argv=None):
                          "config's PQConfig): bitmask = uint32 code-"
                          "presence sets; range = int16 min/max code ranges "
                          "(1/8 the metadata, looser bounds)")
+    ap.add_argument("--super-factor", type=int, default=None,
+                    help="hierarchical super-tile factor for the pruned "
+                         "cascade (overrides the arch config's PQConfig): "
+                         "groups of this many child tiles get OR-ed/"
+                         "hulled pass-0 metadata; 0 disables the level "
+                         "(mutually exclusive with --query-grouping)")
     ap.add_argument("--no-calibrate", action="store_true",
                     help="disable the build-time slot-budget ladder "
                          "calibration for the pruned cascade (serve the "
@@ -167,6 +173,8 @@ def main(argv=None):
         pq_overrides["query_grouping"] = True
     if args.n_groups is not None:
         pq_overrides["n_groups"] = args.n_groups
+    if args.super_factor is not None:
+        pq_overrides["super_factor"] = args.super_factor
     if pq_overrides:
         if getattr(cfg, "pq", None) is None:
             raise SystemExit(f"arch {args.arch!r} has no PQ head (dense "
@@ -210,7 +218,8 @@ def main(argv=None):
         from repro.core.mutation import MutableHeadState
         mstate = MutableHeadState.build(
             params["item_emb"]["codes"], cfg.pq.b,
-            backend=cfg.pq.bound_backend)
+            backend=cfg.pq.bound_backend,
+            super_factor=cfg.pq.super_factor)
         engine = RetrievalEngine.for_seqrec_mutable(
             params, cfg, mstate, k=args.k, max_batch=args.max_batch,
             calibrate=not args.no_calibrate, faults=faults,

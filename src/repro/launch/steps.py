@@ -235,6 +235,13 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
         from dataclasses import replace as _rep
         cfg = _rep(cfg, pq=_rep(cfg.pq, query_grouping=True))
         arch = _rep(arch, model=cfg)
+    if variant in ("hier_head", "sharded_hier"):
+        # Hierarchical super-tile cells (ISSUE 9): the abstract params
+        # carry the super metadata arrays, and the serve step traces the
+        # two-stage (pass-0 super, pass-1 child) single-dispatch cascade.
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, pq=_rep(cfg.pq, super_factor=4))
+        arch = _rep(arch, model=cfg)
     plan = shd.lm_activation_plan(mesh, shard_seq=False)
     b_axes = _batch_spec(mesh)
     params_abs = SR.abstract_seqrec(cfg)
@@ -301,7 +308,12 @@ def _seqrec_bundle(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh,
               # dry-run's abstract state is shards=1, so this cell traces
               # the in-graph shard-aligned rebuild fallback.
               "sharded_pruned": "pqtopk_pruned",
-              "sharded_pruned_range": "pqtopk_pruned"}.get(variant, "pqtopk")
+              "sharded_pruned_range": "pqtopk_pruned",
+              # Hierarchical super-tile cascade (cfg.pq replaced above):
+              # pass-0 super pruning + two-stage compaction, flat and
+              # one-shard_map sharded with the shard-skip cond.
+              "hier_head": "pqtopk_pruned",
+              "sharded_hier": "pqtopk_pruned"}.get(variant, "pqtopk")
     sharded = variant.startswith("sharded_")
     serve_b_axes = b_axes
     if variant.endswith("_bm"):

@@ -75,7 +75,10 @@ def test_registry_covers_required_routes():
     """ISSUE 6 acceptance: >= 5 registered entrypoints spanning flat
     fused, pruned, grouped per-query, sharded, and the decode step."""
     required = {"flat_fused", "flat_pruned", "grouped_perquery",
-                "sharded_pruned", "lm_decode_step"}
+                "sharded_pruned", "lm_decode_step",
+                # ISSUE 9: the hierarchical serve routes stay covered by
+                # the dispatch/kernel-contract passes.
+                "flat_hier", "sharded_hier"}
     assert required <= set(REGISTRY), sorted(REGISTRY)
     assert len(REGISTRY) >= 5
     assert len(default_passes()) >= 5

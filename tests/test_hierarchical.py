@@ -1,0 +1,286 @@
+"""Hierarchical super-tile bounds (ISSUE 9 tentpole): dominance, flat vs
+hierarchical bit-parity against the exhaustive oracle (both backends,
+flat + sharded, under jit, after churn), super-ladder escalation, and the
+mutable catalogue's loosen-only super maintenance with retighten parity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PQConfig
+from repro.core import mutation, pruning, retrieval_head, scoring
+
+BACKENDS = ("bitmask", "range")
+
+
+def _case(n, m=4, b=16, bq=3, seed=0):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, b, (n, m), dtype=np.uint8))
+    s = jax.random.normal(jax.random.PRNGKey(seed), (bq, m, b),
+                          dtype=jnp.float32)
+    return codes, s
+
+
+def _oracle(codes, s, k):
+    return jax.lax.top_k(scoring.score_pqtopk(codes, s), k)
+
+
+# ---------------------------------------------------------------------------
+# with_super: shapes + dominance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n,tile,factor", [(1000, 32, 4), (999, 16, 8),
+                                           (257, 32, 4)])
+def test_with_super_shapes_and_dominance(backend, n, tile, factor):
+    """Every super bound dominates each of its children's bounds (the
+    pass-0 invariant), including the ragged last super."""
+    codes, s = _case(n)
+    st = pruning.build_pruned_state(codes, 16, tile, backend=backend)
+    sth = pruning.with_super(st, factor)
+    assert sth.has_super and sth.super_factor == factor
+    assert sth.n_super == -(-st.n_tiles // factor)
+    child = pruning.tile_bounds(st, s)                      # (B, T)
+    sup = pruning.bounds_from_parts(backend, sth.super_meta_arrays(), s)
+    for g in range(sth.n_super):
+        lo, hi = g * factor, min((g + 1) * factor, st.n_tiles)
+        assert bool((sup[:, g:g + 1] >= child[:, lo:hi]).all()), (g,)
+    # factor <= 1 strips the level
+    assert not pruning.with_super(sth, 1).has_super
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_with_super_sharded_groups_per_shard(backend):
+    """Supers are grouped per shard, so a super never straddles a shard
+    boundary and the sharded metadata splits evenly over the mesh."""
+    codes, _ = _case(1024)
+    st = pruning.build_pruned_state(codes, 16, 32, shards=4,
+                                    backend=backend)
+    sth = pruning.with_super(st, 4)
+    assert sth.n_super % 4 == 0
+    assert sth.supers_per_shard == sth.n_super // 4
+    for a in sth.super_meta_arrays():
+        assert a.shape[0] == sth.n_super
+
+
+# ---------------------------------------------------------------------------
+# flat route: bit-parity, jit, ladder escalation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", [512, 999, 1021])
+def test_hier_cascade_bit_identical(backend, n):
+    codes, s = _case(n, seed=n)
+    k = 7
+    st = pruning.build_pruned_state(codes, 16, 32, backend=backend)
+    sth = pruning.with_super(st, 4)
+    ov, oi = _oracle(codes, s, k)
+    fv, fi = pruning.cascade_topk_ingraph(codes, s, k, st, tile=32)
+    hv, hi, stats = pruning.cascade_topk_ingraph(codes, s, k, sth, tile=32,
+                                                 return_stats=True)
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(fv))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(fi))
+    assert set(stats) == set(pruning.STATS_KEYS)
+    assert int(stats["n_super"]) == sth.n_super
+    # under jit (stats hold a str and stay outside the jitted call)
+    jv, ji = jax.jit(lambda c, s_: pruning.cascade_topk_ingraph(
+        c, s_, k, sth, tile=32))(codes, s)
+    np.testing.assert_array_equal(np.asarray(jv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(ji), np.asarray(oi))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_super_ladder_escalation_exact_at_every_rung(backend):
+    """Forcing tiny super rungs exercises every escalation branch
+    (including the exhaustive final rung) without changing answers."""
+    codes, s = _case(1024, seed=5)
+    k = 9
+    sth = pruning.with_super(
+        pruning.build_pruned_state(codes, 16, 32, backend=backend), 4)
+    ov, oi = _oracle(codes, s, k)
+    for sup_ladder in [(1,), (1, 2), (2, 4, 8), None]:
+        hv, hi = pruning.cascade_topk_ingraph(codes, s, k, sth, tile=32,
+                                              super_ladder=sup_ladder)
+        np.testing.assert_array_equal(np.asarray(hv), np.asarray(ov))
+        np.testing.assert_array_equal(np.asarray(hi), np.asarray(oi))
+
+
+def test_hier_rejects_query_grouping():
+    codes, s = _case(512)
+    sth = pruning.with_super(pruning.build_pruned_state(codes, 16, 32), 4)
+    with pytest.raises(ValueError, match="query_grouping"):
+        pruning.cascade_topk_ingraph(codes, s, 5, sth, tile=32,
+                                     query_grouping=True, n_groups=2)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        PQConfig(m=4, b=16, super_factor=4, query_grouping=True)
+
+
+def test_hier_reduces_bound_work_on_clustered_codes():
+    """On a tile-coherent catalogue pass 0 prunes supers before any child
+    bound is gathered: bounds_computed < T (the flat pass-1 floor)."""
+    rng = np.random.default_rng(0)
+    n, m, b, tile, factor = 1 << 13, 4, 64, 64, 8
+    grain = tile * factor
+    codes = np.empty((n, m), np.uint8)
+    for g in range(n // grain):
+        base = (g * 48) // max(1, n // grain - 1)
+        codes[g * grain:(g + 1) * grain] = base + rng.integers(
+            0, 8, (grain, m))
+    decay = -4.0 * jnp.arange(b, dtype=jnp.float32) / b
+    s = decay[None, None, :] + 0.5 * jax.random.normal(
+        jax.random.PRNGKey(1), (2, m, b))
+    codes = jnp.asarray(codes)
+    st = pruning.build_pruned_state(codes, b, tile)
+    sth = pruning.with_super(st, factor)
+    ov, oi = _oracle(codes, s, 10)
+    hv, hi, stats = pruning.cascade_topk_ingraph(codes, s, 10, sth,
+                                                 tile=tile,
+                                                 return_stats=True)
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(oi))
+    assert int(stats["bounds_computed"]) < st.n_tiles
+    assert int(stats["n_super_survived"]) < sth.n_super
+
+
+# ---------------------------------------------------------------------------
+# sharded route: parity + shard-skip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.sharded
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", [999, 1021])
+def test_sharded_hier_bit_identical(backend, n):
+    mesh = jax.make_mesh((1,), ("model",))
+    params = retrieval_head.init(jax.random.PRNGKey(3), n, 16,
+                                 PQConfig(m=4, b=8, bound_backend=backend))
+    phi = jax.random.normal(jax.random.PRNGKey(4), (3, 16))
+    k = 7
+    ov, oi = retrieval_head.top_items(params, phi, k, method="pqtopk")
+    ph = retrieval_head.ensure_sharded_pruned_state(
+        dict(params), mesh, super_factor=4)
+    assert ph["pruned"].has_super
+    hv, hi, stats = retrieval_head.top_items_pruned_sharded(
+        ph, phi, k, mesh, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(oi))
+    assert set(stats) == set(pruning.STATS_KEYS)
+    # under jit
+    jv, ji = jax.jit(lambda p, x: retrieval_head.top_items_pruned_sharded(
+        p, x, k, mesh))(ph, phi)
+    np.testing.assert_array_equal(np.asarray(jv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(ji), np.asarray(oi))
+
+
+@pytest.mark.sharded
+def test_sharded_hier_skip_branch_stats_shape():
+    """The shard-skip cond must produce well-formed candidates even when
+    a shard prunes everything: force it by making one tail region score
+    uniformly terribly (single-shard mesh still traces both branches)."""
+    mesh = jax.make_mesh((1,), ("model",))
+    params = retrieval_head.init(jax.random.PRNGKey(0), 4096, 16,
+                                 PQConfig(m=4, b=8))
+    phi = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    ph = retrieval_head.ensure_sharded_pruned_state(
+        dict(params), mesh, tile=64, super_factor=8)
+    v, i, stats = retrieval_head.top_items_pruned_sharded(
+        ph, phi, 5, mesh, tile=64, return_stats=True)
+    ov, oi = retrieval_head.top_items(params, phi, 5, method="pqtopk")
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(oi))
+    assert int(stats["n_super"]) == ph["pruned"].n_super
+
+
+# ---------------------------------------------------------------------------
+# mutation: loosen-only supers + retighten parity
+# ---------------------------------------------------------------------------
+
+
+def _random_row(rng, m=4, b=16):
+    return jnp.asarray(rng.integers(0, b, (m,), dtype=np.uint8))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutable_super_stays_exact_under_churn(backend):
+    """After arbitrary insert/delete/update churn the hierarchical serve
+    path must still bit-match the exhaustive oracle over live items —
+    loose (stale) super metadata costs work, never answers."""
+    rng = np.random.default_rng(11)
+    n, m, b, k = 300, 4, 16, 7
+    codes0 = jnp.asarray(rng.integers(0, b, (n, m), dtype=np.uint8))
+    st = mutation.MutableHeadState.build(codes0, b, tile=32,
+                                         backend=backend, super_factor=4,
+                                         capacity=1024)
+    for _ in range(25):
+        st.insert(_random_row(rng, m, b))
+    for i in range(1, 60, 7):
+        st.delete(i)
+    for i in range(61, 120, 11):
+        st.update(i, _random_row(rng, m, b))
+    snap = st.head_arrays()
+    s = jax.random.normal(jax.random.PRNGKey(2), (3, m, b),
+                          dtype=jnp.float32)
+    scores = scoring.score_pqtopk(snap["codes"], s)
+    scores = jnp.where(jnp.asarray(snap["live"])[None, :], scores, -jnp.inf)
+    ov, oi = jax.lax.top_k(scores, k)
+    hv, hi = pruning.cascade_topk_ingraph(snap["codes"], s, k,
+                                          snap["pruned"], tile=st.tile,
+                                          live=snap["live"])
+    dead = np.asarray(ov) == -np.inf
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(hi)[~dead],
+                                  np.asarray(oi)[~dead])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutable_super_retighten_parity(backend):
+    """Full retighten == from-scratch rebuild, super metadata included
+    (tree-leaf equality covers super_packed / super_lo / super_hi)."""
+    rng = np.random.default_rng(3)
+    n, m, b = 400, 4, 16
+    codes0 = jnp.asarray(rng.integers(0, b, (n, m), dtype=np.uint8))
+    st = mutation.MutableHeadState.build(codes0, b, tile=32,
+                                         backend=backend, super_factor=4,
+                                         capacity=1024)
+    for _ in range(30):
+        st.insert(_random_row(rng, m, b))
+    for i in range(1, 40, 3):
+        st.delete(i)
+    for i in range(41, 90, 5):
+        st.update(i, _random_row(rng, m, b))
+    st.retighten()
+    oracle = st.rebuild_oracle()
+    assert oracle.has_super and st.state.has_super
+    for got, want in zip(jax.tree.leaves(st.state),
+                         jax.tree.leaves(oracle)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutable_super_capacity_is_super_grain_multiple(backend):
+    st = mutation.MutableHeadState.build(
+        jnp.zeros((100, 4), jnp.uint8), 16, tile=32, backend=backend,
+        super_factor=4)
+    assert st.cap % (32 * 4) == 0
+    assert st.state.n_tiles % 4 == 0
+
+
+# ---------------------------------------------------------------------------
+# survival_count on hierarchical states (serve-path theta matching)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_survival_count_hier_seeds_from_super(backend):
+    codes, s = _case(1024, seed=9)
+    sth = pruning.with_super(
+        pruning.build_pruned_state(codes, 16, 32, backend=backend), 4)
+    n_surv = pruning.survival_count(codes, s, 8, sth)
+    assert 0 < int(n_surv) <= sth.n_tiles

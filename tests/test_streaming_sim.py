@@ -1,0 +1,120 @@
+"""Streaming billion-item simulator: bit-parity with the one-shot oracle,
+ragged-final-chunk handling, k > chunk carry-over, exactly-one-compile,
+and the int64 id-offset regression (ISSUE 9 satellite bugfixes).
+
+The simulator lives in ``examples/`` (not the package), so it is loaded
+by file path like the other example-under-test (tests/test_analysis.py).
+"""
+import importlib.util
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import scoring
+
+spec = importlib.util.spec_from_file_location(
+    "billion_item_sim", "examples/billion_item_sim.py")
+sim = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(sim)
+
+
+def _oracle(codes_np, s, k):
+    """One-shot exact reference: score everything, one lax.top_k."""
+    r = scoring.score_pqtopk(np.asarray(codes_np, np.int32), s)
+    v, i = jax.lax.top_k(r, k)
+    return np.asarray(v), np.asarray(i, np.int64)
+
+
+def _case(n, m=4, b=16, bq=3, seed=0):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, b, (n, m), dtype=np.uint8)
+    s = jax.random.normal(jax.random.PRNGKey(seed), (bq, m, b))
+    return codes, s
+
+
+@pytest.mark.parametrize("n,chunk", [
+    (256, 64),     # even split
+    (300, 64),     # ragged final chunk (300 = 4*64 + 44)
+    (100, 256),    # single chunk larger than n
+    (65, 64),      # ragged final chunk of 1 row
+])
+def test_streaming_matches_oneshot_oracle(n, chunk):
+    codes, s = _case(n)
+    k = 10
+    ov, oi = _oracle(codes, s, k)
+    v, i, n_traces = sim.streaming_pqtopk(codes, s, k, chunk)
+    np.testing.assert_array_equal(v, ov)
+    np.testing.assert_array_equal(i, oi)
+    assert n_traces == 1
+
+
+def test_k_larger_than_chunk_carries_survivors_across_chunks():
+    """k > chunk: each chunk can contribute at most ``chunk`` candidates,
+    so the top-k must accumulate survivors across chunk merges."""
+    codes, s = _case(200)
+    k, chunk = 48, 32
+    ov, oi = _oracle(codes, s, k)
+    v, i, n_traces = sim.streaming_pqtopk(codes, s, k, chunk)
+    np.testing.assert_array_equal(v, ov)
+    np.testing.assert_array_equal(i, oi)
+    assert n_traces == 1
+
+
+def test_exactly_one_compile_despite_ragged_final_chunk():
+    """The recompile bug: a ragged final chunk used to change the traced
+    input shape mid-run.  The padded chunk keeps ONE static shape, so the
+    trace counter must read 1; a second run with a different ragged tail
+    length must not retrace either (n_valid is traced data)."""
+    codes, s = _case(300)
+    _, _, n1 = sim.streaming_pqtopk(codes, s, 5, 64)       # tail of 44
+    assert n1 == 1
+    _, _, n2 = sim.streaming_pqtopk(codes[:290], s, 5, 64)  # tail of 34
+    assert n2 == 1
+
+
+def test_int64_id_offset_past_2_31():
+    """The overflow bug: ids accumulated as ``jnp.int64`` silently wrap
+    to int32 without x64 mode.  ``id_base`` simulates a catalogue shard
+    whose global ids start beyond 2^31 without allocating 10^9 rows; the
+    returned ids must carry the exact int64 offset."""
+    codes, s = _case(128)
+    k, chunk = 10, 32
+    base = 3 * (2 ** 31)           # far past int32 range
+    ov, oi = _oracle(codes, s, k)
+    v, i, _ = sim.streaming_pqtopk(codes, s, k, chunk, id_base=base)
+    np.testing.assert_array_equal(v, ov)
+    assert i.dtype == np.int64
+    np.testing.assert_array_equal(i, oi + np.int64(base))
+    assert int(i.min()) >= base    # nothing wrapped
+
+
+def test_transfer_stays_uint8():
+    """The host-cast bug: chunks must ship as uint8 (the docstring's
+    memory promise), with the int32 cast inside the jitted graph."""
+    codes, s = _case(96)
+    seen = []
+    orig = jax.numpy.asarray
+
+    def spy(x, *a, **kw):
+        if isinstance(x, np.ndarray) and x.ndim == 2:
+            seen.append(x.dtype)
+        return orig(x, *a, **kw)
+
+    jax.numpy.asarray, jnp_asarray = spy, jax.numpy.asarray
+    try:
+        sim.streaming_pqtopk(codes, s, 5, 32)
+    finally:
+        jax.numpy.asarray = jnp_asarray
+    assert seen and all(dt == np.uint8 for dt in seen)
+
+
+def test_hier_compare_small_n_exact_and_reduced():
+    """`run_hier_compare` (the hier BENCH entry point) on a CI-sized
+    catalogue: zero mismatches on both backends and strictly less pass-1
+    bound work than the flat cascade."""
+    for backend in ("bitmask", "range"):
+        r = sim.run_hier_compare(1 << 15, m=4, b=64, tile=128, factor=8,
+                                 bq=2, repeats=1, backend=backend)
+        assert r["mismatches"] == 0
+        assert r["hier_bounds"] < r["flat_bounds"]
