@@ -8,9 +8,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serving/*   — latency under load through the replicated fabric
                 (ReplicaRouter, K in {1, 2, 4}, with/without a chaos
                 plan): per-request p50/p99 + req/s end to end
+  recovery/*  — durable catalogue log (WAL): append latency vs the
+                fsync batching knob, recover() wall time vs replay-tail
+                length, and the snapshot-cadence trade-off
   roofline/*  — dry-run roofline terms, if artifacts exist        [§Roofline]
 
-and also writes a machine-readable ``BENCH_pr8.json`` (``--json PATH``) so
+and also writes a machine-readable ``BENCH_pr10.json`` (``--json PATH``) so
 the perf trajectory is tracked across PRs: every row carries its section,
 method tag, median us/call, items/s where defined, and extra tags (survival
 fraction + seed size + bound backend + ladder / rung-hit fraction for the
@@ -75,9 +78,9 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", action="append", default=[],
                     choices=["table3", "figure2", "kernel", "churn",
-                             "serving", "roofline", "hier"])
+                             "serving", "recovery", "roofline", "hier"])
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--json", default="BENCH_pr9.json",
+    ap.add_argument("--json", default="BENCH_pr10.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
 
@@ -704,6 +707,137 @@ def main(argv=None) -> None:
                                        if ladder_srv else None)},
                       timing=timing)
 
+    if "recovery" not in args.skip:
+        # -------------------------------------------------------------
+        # Durable catalogue log (ISSUE 10): what durability costs and
+        # what recovery costs.  Three knobs, each a row family:
+        #   * append latency vs fsync_every — the fsync amortization
+        #     curve (fsync_every=1 is the durability ceiling, larger
+        #     groups trade a bounded loss window for throughput);
+        #   * recover() wall time vs tail length — snapshot restore +
+        #     LSN-ordered replay, the crash-restart cost a stale replica
+        #     or a restarted router actually pays;
+        #   * snapshot cadence — the cost of cutting an LSN-keyed
+        #     snapshot and the recover-time reduction it buys.
+        import shutil
+        import tempfile
+
+        import numpy as np
+        from benchmarks.timing import time_fn
+        from repro.core.mutation import MutableHeadState, apply_op
+        from repro.serving.catalogue_log import CatalogueLog
+
+        rng_rc = np.random.default_rng(11)
+        n_rc, m_rc, b_rc, tile_rc = 4096, 8, 256, 64
+        codes_rc = rng_rc.integers(0, b_rc, (n_rc, m_rc)).astype(np.int32)
+
+        def _mk_rc():
+            return MutableHeadState.build(codes_rc, b_rc, tile_rc)
+
+        def _ops_rc(mstate, n):
+            ops = []
+            for _ in range(n):
+                live = np.where(np.asarray(mstate.live))[0]
+                live = live[live > 0]
+                row = rng_rc.integers(0, b_rc, m_rc).astype(np.int32)
+                r = rng_rc.random()
+                if (r < 0.3 and (mstate.free or mstate.n_rows < mstate.cap)) \
+                        or live.size <= 1:
+                    op = ("insert", row)
+                elif r < 0.65:
+                    op = ("delete", int(rng_rc.choice(live)))
+                else:
+                    op = ("update", int(rng_rc.choice(live)), row)
+                apply_op(mstate, op)
+                ops.append(op)
+            return ops
+
+        base_rc = _mk_rc()
+        ops_pool = _ops_rc(base_rc.clone(), 1024)
+
+        for fsync_every in (1, 8, 64):
+            d = tempfile.mkdtemp(prefix="bench_wal_")
+            log = CatalogueLog(d, fsync_every=fsync_every)
+            it = iter(ops_pool * 8)
+            t = time_fn(lambda: log.append(next(it)),
+                        repeats=max(args.repeats * 64, 256), warmup=8)
+            st_log = log.stats()
+            log.close()
+            shutil.rmtree(d)
+            _emit("recovery", f"recovery/append/fsync{fsync_every}",
+                  t["median_s"] * 1e6,
+                  f"appends_per_s={1 / t['median_s']:.3e};"
+                  f"log_bytes={int(st_log['log_bytes'])}",
+                  method="wal_append",
+                  items_per_s=1 / t["median_s"],
+                  tags={"fsync_every": fsync_every,
+                        "n_items": n_rc,
+                        "log_bytes": int(st_log["log_bytes"]),
+                        "n_fsyncs": int(st_log["n_fsyncs"])},
+                  timing=t)
+
+        # recover() = newest snapshot + tail replay: sweep the tail.
+        for tail_len in (0, 256, 1024):
+            d = tempfile.mkdtemp(prefix="bench_wal_")
+            mstate = _mk_rc()
+            with CatalogueLog(d, fsync_every=64) as log:
+                log.snapshot(mstate)            # genesis at lsn 0
+                for op in ops_pool[:tail_len]:
+                    log.append(op)
+                log.sync()
+                t = time_fn(lambda: log.recover(), repeats=args.repeats,
+                            warmup=1)
+                _, lsn = log.recover()
+                assert lsn == tail_len
+            shutil.rmtree(d)
+            _emit("recovery", f"recovery/recover/tail{tail_len}",
+                  t["median_s"] * 1e6,
+                  f"ops_replayed={tail_len};"
+                  f"ops_per_s={tail_len / t['median_s']:.3e}"
+                  if tail_len else "snapshot-only",
+                  method="wal_recover",
+                  items_per_s=(tail_len / t["median_s"]
+                               if tail_len else None),
+                  tags={"tail_len": tail_len, "n_items": n_rc,
+                        "capacity": mstate.cap}, timing=t)
+
+        # Snapshot cadence: amortized snapshot cost vs the recover-time
+        # reduction it buys (0 = genesis-only, the full-replay extreme).
+        for snap_every in (0, 128, 512):
+            d = tempfile.mkdtemp(prefix="bench_wal_")
+            mstate = _mk_rc()
+            with CatalogueLog(d, fsync_every=64,
+                              snapshot_every=snap_every) as log:
+                log.snapshot(mstate)
+                t_snap = None
+                for op in ops_pool:
+                    log.append(op)
+                    apply_op(mstate, op)
+                    if log.maybe_snapshot(mstate) is not None \
+                            and t_snap is None:
+                        # time one representative snapshot cut
+                        t_snap = time_fn(lambda: log.snapshot(mstate),
+                                         repeats=max(args.repeats, 3),
+                                         warmup=0)
+                log.sync()
+                n_snaps = int(log.stats()["n_snapshots"])
+                t_rec = time_fn(lambda: log.recover(),
+                                repeats=args.repeats, warmup=1)
+            shutil.rmtree(d)
+            _emit("recovery", f"recovery/cadence/snap{snap_every}",
+                  t_rec["median_s"] * 1e6,
+                  f"n_snapshots={n_snaps};"
+                  + (f"snapshot_us={t_snap['median_s'] * 1e6:.0f}"
+                     if t_snap else "genesis-only"),
+                  method="wal_cadence",
+                  items_per_s=len(ops_pool) / t_rec["median_s"],
+                  tags={"snapshot_every": snap_every,
+                        "n_snapshots": n_snaps, "n_items": n_rc,
+                        "stream_len": len(ops_pool),
+                        "snapshot_us": (t_snap["median_s"] * 1e6
+                                        if t_snap else None)},
+                  timing=t_rec)
+
     if "hier" not in args.skip:
         # -------------------------------------------------------------
         # Hierarchical super-tile cascade at very large N (ISSUE 9
@@ -776,7 +910,7 @@ def main(argv=None) -> None:
 
         import jax as _jax
         doc = {
-            "pr": 9,
+            "pr": 10,
             "backend": _jax.default_backend(),
             "platform": platform.platform(),
             "repeats": args.repeats,

@@ -3,8 +3,9 @@
 each benchmark's ``items_per_s`` across PRs, highlighting regressions.
 
 Rows are joined on ``(section, method, n_items, m, B, bound_backend,
-code_layout, grouping)`` — the tags that identify *what* was measured —
-rather than on the display name, which PRs have renamed as sweeps grew.
+code_layout, grouping, hier, fsync_every, tail_len, snapshot_every)`` —
+the tags that identify *what* was measured — rather than on the display
+name, which PRs have renamed as sweeps grew.
 Rows whose ``items_per_s`` is null (interpret-mode Pallas timings, delta
 rows) never enter the comparison.  A drop of more than ``--threshold``
 (default 20%) between consecutive PRs that measured the same row is a
@@ -69,7 +70,15 @@ def row_key(row: dict) -> tuple:
             # PR 9: hierarchical rows must never join against flat rows
             # at the same N — the super level changes what pass-1 costs.
             bool(tags.get("hier", False)),
-            tags.get("super_tile") or 0)
+            tags.get("super_tile") or 0,
+            # PR 10: durable-log rows sweep the WAL knobs — a row's
+            # fsync group, replay-tail length, and snapshot cadence each
+            # define a different measurement; joining across them would
+            # average the sweep away.  None (every non-recovery row)
+            # stays None so existing series are untouched.
+            tags.get("fsync_every"),
+            tags.get("tail_len"),
+            tags.get("snapshot_every"))
 
 
 def _ips_interval(row, ips):
@@ -141,7 +150,7 @@ def check_fingerprints(fingerprints: dict, allow_mixed: bool) -> bool:
 
 def fmt_key(key: tuple) -> str:
     (section, cell, method, n, m, bq, backend, layout, grouping,
-     hier, super_tile) = key
+     hier, super_tile, fsync_every, tail_len, snapshot_every) = key
     parts = [section, cell, method]
     if n is not None:
         parts.append(f"n={n}")
@@ -159,6 +168,12 @@ def fmt_key(key: tuple) -> str:
         parts.append(grouping)
     if hier:
         parts.append(f"hier{super_tile}" if super_tile else "hier")
+    if fsync_every is not None:
+        parts.append(f"fsync={fsync_every}")
+    if tail_len is not None:
+        parts.append(f"tail={tail_len}")
+    if snapshot_every is not None:
+        parts.append(f"snap={snapshot_every}")
     return "/".join(str(p) for p in parts)
 
 

@@ -38,7 +38,7 @@ fi
 # test file stopped importing or someone deleted coverage).  pytest also
 # exits non-zero on collection errors, so a broken import fails CI rather
 # than silently shrinking the suite.
-TIER1_BASELINE=376
+TIER1_BASELINE=394
 collected=$(python -m pytest --collect-only -q 2>/dev/null | tail -1 \
             | grep -o '[0-9]\+ tests collected' | grep -o '^[0-9]\+' || echo 0)
 if [ "${collected}" -lt "${TIER1_BASELINE}" ]; then
@@ -76,14 +76,24 @@ python examples/billion_item_sim.py --items 2e5 --chunk 65536 --repeats 1
 python examples/billion_item_sim.py --mode hier --items 262144 \
     --tile 256 --factor 16 --repeats 1
 
+# Crash-recovery smoke (ISSUE 10): churn a mutable catalogue through the
+# checksummed WAL, tear the writer mid-append, recover in a "new
+# process" and verify the recovered catalogue AND everything served from
+# it are bit-identical to an oracle replay of the durable prefix.  The
+# example exits non-zero on any parity mismatch or if the tear never
+# fires.
+python examples/serve_catalogue.py --kill-and-recover --items 2000 \
+    --d-model 64 --requests 16 --crash-at 11
+
 # Fast benchmark smoke: exercises the kernel paths (fused interpret-mode,
 # single-dispatch pruned cascade, bound-backend comparison sweep, the
 # per-query mixed-batch sweep, the catalogue-churn section with its
 # sampled exactness checks, the replicated-fabric latency-under-load
-# section, figure2) end to end so kernel-path breakage surfaces in CI,
-# not just in unit tests, and refreshes the machine-readable
-# BENCH_pr9.json.  table3/roofline/hier stay out (slow dataset builds /
-# artifact-dependent).  --repeats 3 (up from 1): quartiles over one
+# section, the durable-log recovery section, figure2) end to end so
+# kernel-path breakage surfaces in CI, not just in unit tests, and
+# refreshes the machine-readable BENCH_pr10.json.  table3/roofline/hier
+# stay out (slow dataset builds / artifact-dependent).  --repeats 3
+# (up from 1): quartiles over one
 # sample are degenerate, and the IQR-separation rule needs real spread
 # to be meaningful.
 #
@@ -99,7 +109,7 @@ if command -v taskset >/dev/null 2>&1; then
     PIN="taskset -c 0"
 fi
 ${PIN} python -m benchmarks.run --skip table3 --skip roofline \
-    --skip hier --repeats 3 --json BENCH_pr9.json > /dev/null
+    --skip hier --repeats 3 --json BENCH_pr10.json > /dev/null
 
 # Cross-PR perf trajectory, two views.  Informational: the whole history
 # joined across the pinning seam (--allow-mixed; trend only, never

@@ -748,3 +748,138 @@ def _build_router_replicated() -> BuiltEntry:
         notes=f"ReplicaRouter.for_seqrec x{router.n_replicas} replicas, "
               f"shared ladder={eng.ladder}, hedging off, global "
               "transfer_guard over the worker threads")
+
+
+# ---------------------------------------------------------------------------
+# durable mutation fabric (ISSUE 10: WAL, LSN watermarks)
+# ---------------------------------------------------------------------------
+
+@register("router_durable",
+          "the durable mutation fabric: WAL-append + LSN-fenced fan-out + "
+          "hot swap on every replica — a post-mutation batch is ONE "
+          "compiled dispatch, and neither the LSN watermark nor the "
+          "replica id ever keys a compile",
+          tags=("serve", "engine", "pruned", "router", "mutable"))
+def _build_router_durable() -> BuiltEntry:
+    import tempfile
+    import time as time_lib
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.mutation import MutableHeadState
+    from repro.serving.catalogue_log import CatalogueLog
+    from repro.serving.engine import MicroBatcher
+    from repro.serving.router import ReplicaRouter
+
+    params, cfg = _seqrec_setup()
+    # A FRESH state (not the lru-cached _mutable_setup one, which other
+    # entrypoints mutate): the log's meta pins the catalogue layout.
+    mstate = MutableHeadState.build(params["item_emb"]["codes"], cfg.pq.b)
+    log = CatalogueLog(tempfile.mkdtemp(prefix="repro_wal_"),
+                       fsync_every=16)
+    k, max_batch = 5, 8
+    router = ReplicaRouter.for_seqrec_mutable(
+        params, cfg, mstate, n_replicas=2, k=k, max_batch=max_batch,
+        log=log, hedge=False)
+    router.warmup()
+    eng = router.engines[0]
+    assert all(e.ladder == eng.ladder for e in router.engines), (
+        "replicas must share the lead engine's calibrated ladder")
+    assert eng._head_state is not None, "fleet must be hot-swappable"
+
+    sds = jax.ShapeDtypeStruct((4, cfg.max_seq_len), jnp.int32)
+
+    def count() -> int:
+        import numpy as np
+        from repro.serving.engine import Request
+
+        rng = np.random.default_rng(400)
+
+        def feed(base: int, n: int):
+            for i in range(n):
+                router.submit(Request(
+                    base + i, rng.integers(1, cfg.n_items + 1, 8), k=k))
+
+        feed(400, 2 * max_batch)               # warm every replica
+        router.drain()
+        assert all(rs.completed >= 1 for rs in router.replicas), (
+            "warm traffic did not reach every replica")
+        n_variants = [len(e._compiled) for e in router.engines]
+
+        # Commit a mutation batch through the WAL and wait for every
+        # replica's worker to replay it (hot swap, between dispatches).
+        ops = [("delete", int(i)) for i in
+               rng.choice(np.arange(1, cfg.n_items + 1), 8, replace=False)]
+        committed = router.apply_mutations(ops)
+        deadline = time_lib.monotonic() + 30.0
+        while any(rep["lag"] != 0
+                  for rep in router.stats()["replicas"].values()):
+            assert time_lib.monotonic() < deadline, "catch-up stalled"
+            time_lib.sleep(0.01)
+        assert [len(e._compiled) for e in router.engines] == n_variants, (
+            "mutation propagation minted new compiled variant(s)")
+
+        calls: list = []
+        for eng_i in router.engines:
+            for key, f in list(eng_i._compiled.items()):
+                eng_i._compiled[key] = (
+                    lambda seqs, _f=f, _key=key:
+                    (calls.append(_key), _f(seqs))[1])
+        feed(440, max_batch)                   # ONE full-bucket job
+        # Global guard: launches/completions happen on worker threads
+        # (the thread-local context manager would not reach them).
+        prev = getattr(jax.config, "jax_transfer_guard", None) or "allow"
+        jax.config.update("jax_transfer_guard", "disallow")
+        try:
+            results = router.drain()
+        finally:
+            jax.config.update("jax_transfer_guard", prev)
+        assert len(results) == max_batch, (
+            f"served {len(results)}/{max_batch}")
+        assert not any(r.shed or r.degraded for r in results), (
+            "healthy-path post-mutation batch must be untagged")
+        assert all(r.lsn == committed for r in results), (
+            "every Result must carry the committed-LSN watermark")
+        return len(calls)
+
+    specs = (
+        StaticArgSpec(
+            "batch_bucket",
+            sample=tuple(range(1, max_batch + 1)),
+            mapper=lambda n, _mb=max_batch: MicroBatcher.bucket(n, _mb),
+            allowed=_pow2_buckets(max_batch),
+            max_variants=max_batch.bit_length() + 1,
+            note="pow2 padding buckets for the request batch size"),
+        StaticArgSpec(
+            "k_bucket",
+            sample=tuple(range(1, 64)) + (200, 1000, 10 ** 9),
+            mapper=lambda kv, _e=eng: _e.batch_k([kv]),
+            allowed=_pow2_buckets(eng.max_k),
+            max_variants=eng.max_k.bit_length() + 1,
+            note="client k clamped into [1, max_k] then pow2-bucketed"),
+        StaticArgSpec(
+            "lsn",
+            sample=(0, 1, 8, 123, 10 ** 6),
+            mapper=lambda _lsn: "head-as-data",
+            allowed=frozenset({"head-as-data"}),
+            max_variants=1,
+            note="the catalogue version is pure data: every committed "
+                 "LSN serves through the one compiled head structure"),
+        StaticArgSpec(
+            "replica",
+            sample=tuple(range(router.n_replicas)),
+            mapper=lambda _rid: "shared-trace",
+            allowed=frozenset({"shared-trace"}),
+            max_variants=1,
+            note="replica id is pure routing state: every replica "
+                 "compiles the one identical serve structure"),
+    )
+
+    return BuiltEntry(
+        fn=lambda seqs: eng._serve_fn(seqs, k, eng._head_state),
+        args=(sds,),
+        static_specs=specs,
+        dispatch_counter=count,
+        notes=f"ReplicaRouter.for_seqrec_mutable x{router.n_replicas} + "
+              f"CatalogueLog WAL, shared ladder={eng.ladder}, "
+              "mutate-swap-serve under global transfer_guard")

@@ -345,6 +345,42 @@ class MutableHeadState:
         self.staleness[item_id // self.tile] += 1
         self.n_mutations += 1
 
+    # -- durability hooks (serving/catalogue_log.py) ----------------------
+
+    def clone(self) -> "MutableHeadState":
+        """Independent manager over the SAME current snapshot.  Device
+        arrays are immutable (every mutation functionally replaces them),
+        so they are shared; the host bookkeeping — staleness tallies and
+        the FIFO freelist, whose order decides which slot the next insert
+        reuses — is copied.  Replicas each own a clone and replay the
+        same op stream, which is what makes their states bit-identical."""
+        c = MutableHeadState(self.codes, self.live, self.state,
+                             self.staleness.copy(), list(self.free),
+                             self.n_rows)
+        c.n_mutations = self.n_mutations
+        return c
+
+    @classmethod
+    def from_snapshot(cls, codes, live, free, n_rows: int, b: int,
+                      tile: int, *, backend: str = "bitmask",
+                      super_factor: int = 0) -> "MutableHeadState":
+        """Rebuild a manager from durably stored arrays: capacity-padded
+        ``codes``/``live``, the freelist IN ORDER, and the slot
+        high-water mark.  The pruning metadata is rebuilt exactly from
+        codes + live — i.e. the restored state IS :meth:`rebuild_oracle`
+        of the snapshot, so staleness restarts at zero (the snapshot
+        writer's incremental debt is not an observable of the catalogue,
+        only of its serving cost)."""
+        codes = jnp.asarray(codes)
+        live = jnp.asarray(live, jnp.bool_)
+        state = build_pruned_state_masked(codes, live, b, tile,
+                                          backend=backend)
+        if super_factor:
+            state = with_super(state, super_factor)
+        return cls(codes, live, state,
+                   staleness=np.zeros(state.n_tiles, np.int64),
+                   free=[int(s) for s in free], n_rows=int(n_rows))
+
     # -- maintenance ------------------------------------------------------
 
     def retighten(self, tile_ids=None, max_tiles: Optional[int] = None):
@@ -419,3 +455,27 @@ class MutableHeadState:
                 "n_mutations": float(self.n_mutations),
                 "stale_tiles": float(int((self.staleness > 0).sum())),
                 "max_staleness": float(int(self.staleness.max()))}
+
+
+def apply_op(state: MutableHeadState, op) -> Optional[int]:
+    """Apply one logged mutation op to ``state``.
+
+    Ops are the wire/tuple form the catalogue WAL records:
+    ``("insert", row)``, ``("delete", item_id)``, ``("update", item_id,
+    row)``.  Validation (liveness, range, capacity) happens BEFORE any
+    mutation inside the insert/delete/update methods, so a rejected op
+    leaves the state untouched — the log writer relies on that to keep
+    invalid ops out of the durable stream.  Replaying a logged stream in
+    LSN order through this function is deterministic (the FIFO freelist
+    decides slot reuse), which is what makes log replay reproduce the
+    writer's catalogue bit-for-bit."""
+    kind = op[0]
+    if kind == "insert":
+        return state.insert(op[1])
+    if kind == "delete":
+        state.delete(op[1])
+        return None
+    if kind == "update":
+        state.update(op[1], op[2])
+        return None
+    raise ValueError(f"unknown catalogue op kind {kind!r}")

@@ -20,6 +20,164 @@ def _ms(v) -> str:
     return "n/a" if v is None else f"{v:.2f}ms"
 
 
+def _churn_ops(shadow, rng, n_steps, b):
+    """Draw a batch of valid mutation ops, applying them to ``shadow`` as
+    drawn (validity of op i+1 can depend on op i — e.g. no double
+    delete).  The caller routes the SAME ops through the durable path;
+    ``shadow`` is its local mirror of the committed catalogue."""
+    from repro.core.mutation import apply_op
+
+    ops = []
+    for _ in range(n_steps):
+        r = rng.random()
+        row = rng.integers(0, b, shadow.m)
+        live = np.where(np.asarray(shadow.live))[0]
+        live = live[live > 0]                # row 0 is the padding id
+        if (r < 0.2 and (shadow.free or shadow.n_rows < shadow.cap)) \
+                or live.size <= 1:
+            op = ("insert", row)
+        elif r < 0.5:
+            op = ("delete", int(rng.choice(live)))
+        else:
+            op = ("update", int(rng.choice(live)), row)
+        apply_op(shadow, op)
+        ops.append(op)
+    return ops
+
+
+def _print_durable_stats(stats):
+    log_st = stats.get("log")
+    print(f"durable: committed_lsn={int(stats['committed_lsn'])} "
+          f"mutations={int(stats['mutations_applied'])} "
+          f"stale_served={int(stats['stale_served'])} "
+          f"catchup_events={int(stats['catchup_events'])} "
+          f"staleness_budget={int(stats['staleness_budget'])}")
+    if log_st is not None:
+        print(f"log: lsn={int(log_st['lsn'])} "
+              f"bytes={int(log_st['log_bytes'])} "
+              f"fsyncs={int(log_st['n_fsyncs'])} "
+              f"snapshots={int(log_st['n_snapshots'])} "
+              f"latest_snapshot_lsn={int(log_st['latest_snapshot_lsn'])} "
+              f"torn_bytes_dropped={int(log_st['torn_bytes_dropped'])}")
+
+
+def _serve_replicated_mutable(args, params, cfg):
+    """K replicas over ONE durable mutable catalogue: mutation batches
+    commit through the WAL between request batches, replicas catch up by
+    LSN-fenced replay, and the chaos flags exercise replica crash
+    (recover-from-log + gated re-admission) and writer crash (torn
+    record; the fabric is rebuilt from ``CatalogueLog.recover``)."""
+    from repro.core.mutation import MutableHeadState
+    from repro.serving.catalogue_log import CatalogueLog
+    from repro.serving.router import ReplicaRouter
+    from repro.training.fault_tolerance import SimulatedFailure
+
+    log = None
+    if args.log_dir:
+        log = CatalogueLog(args.log_dir, snapshot_every=args.snapshot_every)
+    if args.recover:
+        mstate, lsn0 = log.recover()
+        print(f"recovered catalogue from {args.log_dir} at lsn {lsn0} "
+              f"(torn bytes dropped: {log.torn_bytes_dropped})")
+    else:
+        mstate = MutableHeadState.build(
+            params["item_emb"]["codes"], cfg.pq.b,
+            backend=cfg.pq.bound_backend,
+            super_factor=cfg.pq.super_factor)
+    shadow = mstate.clone()               # the launcher's committed mirror
+    crash_plan = []                       # [(lsn, rid)], ascending
+    for spec in args.crash_replica_at or []:
+        rid, _, lsn = spec.partition(":")
+        crash_plan.append((int(lsn), int(rid)))
+    crash_plan.sort()
+
+    def mk_router(state, the_log):
+        return ReplicaRouter.for_seqrec_mutable(
+            params, cfg, state, n_replicas=args.replicas, k=args.k,
+            max_batch=args.max_batch, calibrate=not args.no_calibrate,
+            log=the_log, hedge=not args.no_hedge,
+            staleness_budget=args.staleness_budget)
+
+    router = mk_router(mstate, log)
+    if args.crash_writer_at is not None:
+        log.fail_at_lsn = args.crash_writer_at
+    rng = np.random.default_rng(0)
+    mrng = np.random.default_rng(1)
+    results = []
+    t0 = time.monotonic()
+    i = 0
+    with router:
+        router.warmup()
+        while i < args.requests:
+            hist_len = int(rng.integers(2, cfg.max_seq_len))
+            seq = rng.integers(1, cfg.n_items + 1, hist_len)
+            router.submit(Request(i, seq, k=args.k))
+            i += 1
+            if args.churn_steps and i % args.max_batch == 0:
+                ops = _churn_ops(shadow, mrng, args.churn_steps, cfg.pq.b)
+                try:
+                    committed = router.apply_mutations(ops)
+                except SimulatedFailure as exc:
+                    print(f"chaos: {exc}")
+                    break
+                while crash_plan and committed >= crash_plan[0][0]:
+                    _, rid = crash_plan.pop(0)
+                    print(f"chaos: crashing replica {rid} at "
+                          f"lsn {committed}")
+                    router.crash_replica(rid)
+                router.pump()
+        results += router.drain()
+        if log is not None and not getattr(log, "_crashed", False):
+            log.sync()                    # clean shutdown: nothing buffered
+        stats = router.stats()
+    if i < args.requests:
+        # Writer died mid-append: stand a NEW fabric up from the durable
+        # log (torn-tail truncation + snapshot + replay) and finish the
+        # stream — the kill-and-recover path, end to end.
+        print("rebuilding the fabric from the durable log ...")
+        log = CatalogueLog(args.log_dir,
+                           snapshot_every=args.snapshot_every)
+        state, lsn = log.recover()
+        print(f"recovered at lsn {lsn} "
+              f"(torn bytes dropped: {log.torn_bytes_dropped})")
+        shadow = state.clone()
+        with mk_router(state, log) as router:
+            router.warmup()
+            while i < args.requests:
+                hist_len = int(rng.integers(2, cfg.max_seq_len))
+                seq = rng.integers(1, cfg.n_items + 1, hist_len)
+                router.submit(Request(i, seq, k=args.k))
+                i += 1
+                if args.churn_steps and i % args.max_batch == 0:
+                    router.apply_mutations(
+                        _churn_ops(shadow, mrng, args.churn_steps,
+                                   cfg.pq.b))
+                    router.pump()
+            results += router.drain()
+            log.sync()
+            stats = router.stats()
+    wall = time.monotonic() - t0
+    eng = router.engines[0]
+    print(f"served {len(results)} requests in {wall:.2f}s "
+          f"({len(results) / wall:.1f} req/s) replicas={args.replicas} "
+          f"mutable=True durable={args.log_dir is not None}")
+    print(f"p50={_ms(stats['p50_ms'])} p99={_ms(stats['p99_ms'])} "
+          f"dup_suppressed={stats['duplicates_suppressed']} "
+          f"redispatched={stats['redispatched']} "
+          f"degraded={dict(stats['degraded_results'])}")
+    _print_durable_stats(stats)
+    for rid, rs in stats["replicas"].items():
+        print(f"  replica[{rid}] state={rs['state']} "
+              f"completed={rs['completed']} "
+              f"ejections={rs['ejections']} "
+              f"readmissions={rs['readmissions']} "
+              f"applied_lsn={rs['applied_lsn']} lag={rs['lag']} "
+              f"n_compiles={rs['n_compiles']}")
+    if eng.ladder is not None:
+        print(f"ladder={eng.ladder} (shared across replicas)")
+    return results
+
+
 def _serve_replicated(args, params, cfg):
     """Drive the ReplicaRouter fabric: K engine replicas behind one
     submit/pump/drain loop, optionally under a deterministic chaos plan."""
@@ -159,6 +317,38 @@ def main(argv=None):
                          "are all visible in the printed stats")
     ap.add_argument("--no-hedge", action="store_true",
                     help="with --replicas: disable hedged dispatch")
+    ap.add_argument("--log-dir", default=None,
+                    help="with --mutable: durable catalogue state — every "
+                         "mutation commits to a checksummed WAL in this "
+                         "directory (LSN-keyed snapshots alongside) before "
+                         "any engine applies it")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="with --log-dir: cut an LSN-keyed snapshot every "
+                         "N committed mutations (0 = only the genesis "
+                         "snapshot; recovery then replays the whole log)")
+    ap.add_argument("--recover", action="store_true",
+                    help="with --log-dir: recover the catalogue from the "
+                         "newest valid snapshot + log-tail replay instead "
+                         "of building it fresh (the post-crash restart "
+                         "path; torn log tails are truncated)")
+    ap.add_argument("--staleness-budget", type=int, default=0,
+                    help="with --mutable --replicas: max LSNs a replica "
+                         "may lag the committed catalogue before its "
+                         "results are tagged stale_catalogue and it is "
+                         "deprioritised (and re-admission is gated)")
+    ap.add_argument("--crash-writer-at", type=int, default=None,
+                    metavar="LSN",
+                    help="chaos, with --log-dir: the append of this LSN "
+                         "writes a torn half-record and dies; the "
+                         "launcher then rebuilds the fabric from "
+                         "CatalogueLog.recover() and finishes the stream")
+    ap.add_argument("--crash-replica-at", action="append", default=None,
+                    metavar="RID:LSN",
+                    help="chaos, with --mutable --replicas --log-dir: "
+                         "crash replica RID (drop its in-memory "
+                         "catalogue) once the committed LSN reaches LSN; "
+                         "it must recover from the log before the health "
+                         "FSM re-admits it (repeatable)")
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -194,19 +384,42 @@ def main(argv=None):
                                     slow_at_batches=tuple(args.slow_at or ()),
                                     slow_ms=args.slow_ms)
 
+    if args.log_dir and not args.mutable:
+        raise SystemExit("--log-dir logs catalogue mutations; it needs "
+                         "--mutable")
+    if args.recover and not args.log_dir:
+        raise SystemExit("--recover replays a durable log; it needs "
+                         "--log-dir")
+    if args.snapshot_every and not args.log_dir:
+        raise SystemExit("--snapshot-every needs --log-dir")
+    if args.crash_writer_at is not None and not args.log_dir:
+        raise SystemExit("--crash-writer-at tears a WAL record; it needs "
+                         "--log-dir")
+    if args.crash_replica_at and not (args.mutable and args.replicas > 1
+                                      and args.log_dir):
+        raise SystemExit("--crash-replica-at needs --mutable, --replicas "
+                         "> 1 and --log-dir (recovery replays the log)")
+
     if args.replicas > 1:
-        if args.mutable or args.churn_steps:
-            raise SystemExit("--replicas fronts immutable engine replicas; "
-                             "--mutable/--churn-steps use the single-engine "
-                             "path")
         if args.fail_at or args.slow_at:
             raise SystemExit("--fail-at/--slow-at inject inside ONE engine; "
                              "replica-level chaos is --chaos")
+        if args.mutable or args.churn_steps:
+            if args.chaos:
+                raise SystemExit("--chaos drives the immutable fabric; "
+                                 "durable chaos is --crash-replica-at / "
+                                 "--crash-writer-at")
+            if args.method not in (None, "pqtopk_pruned"):
+                raise SystemExit("--mutable serves the tombstone-masked "
+                                 f"pruned cascade; --method {args.method} "
+                                 "has no live-mask route")
+            return _serve_replicated_mutable(args, params, cfg)
         return _serve_replicated(args, params, cfg)
     if args.chaos:
         raise SystemExit("--chaos needs --replicas > 1")
 
     mstate = None
+    log = None
     if args.mutable:
         if args.method not in (None, "pqtopk_pruned"):
             raise SystemExit("--mutable serves the tombstone-masked pruned "
@@ -216,10 +429,23 @@ def main(argv=None):
             raise SystemExit(f"arch {args.arch!r} has no PQ head; --mutable "
                              "needs sub-item codes to mutate")
         from repro.core.mutation import MutableHeadState
-        mstate = MutableHeadState.build(
-            params["item_emb"]["codes"], cfg.pq.b,
-            backend=cfg.pq.bound_backend,
-            super_factor=cfg.pq.super_factor)
+        if args.log_dir:
+            from repro.serving.catalogue_log import CatalogueLog
+            log = CatalogueLog(args.log_dir,
+                               snapshot_every=args.snapshot_every)
+            if args.crash_writer_at is not None:
+                log.fail_at_lsn = args.crash_writer_at
+        if args.recover:
+            mstate, lsn0 = log.recover()
+            print(f"recovered catalogue from {args.log_dir} at lsn {lsn0} "
+                  f"(torn bytes dropped: {log.torn_bytes_dropped})")
+        else:
+            mstate = MutableHeadState.build(
+                params["item_emb"]["codes"], cfg.pq.b,
+                backend=cfg.pq.bound_backend,
+                super_factor=cfg.pq.super_factor)
+        if log is not None and log.latest_snapshot_lsn() is None:
+            log.snapshot(mstate)          # genesis: recovery needs a base
         engine = RetrievalEngine.for_seqrec_mutable(
             params, cfg, mstate, k=args.k, max_batch=args.max_batch,
             calibrate=not args.no_calibrate, faults=faults,
@@ -246,19 +472,19 @@ def main(argv=None):
         # Update-heavy mix with occasional deletes/inserts, mirroring a
         # live catalogue feed; every mutation only loosens bounds (or is
         # exact, for inserts) so the swapped head stays serve-correct.
-        for _ in range(args.churn_steps):
-            op = step_rng.random()
-            row = step_rng.integers(0, cfg.pq.b, mstate.m)
-            if op < 0.2 and (mstate.free or mstate.n_rows < mstate.cap):
-                mstate.insert(row)
-            elif op < 0.5:
-                victim = int(step_rng.integers(1, cfg.n_items + 1))
-                if bool(mstate.live[victim]):
-                    mstate.delete(victim)
-            else:
-                victim = int(step_rng.integers(1, cfg.n_items + 1))
-                if bool(mstate.live[victim]):
-                    mstate.update(victim, row)
+        # With --log-dir the same ops commit to the WAL (and snapshots
+        # cut on the --snapshot-every cadence) before the hot swap.
+        ops = _churn_ops(mstate, step_rng, args.churn_steps, cfg.pq.b)
+        if log is not None:
+            from repro.training.fault_tolerance import SimulatedFailure
+            try:
+                log.append_many(ops)
+                log.maybe_snapshot(mstate)
+            except SimulatedFailure as exc:
+                # Torn record on disk; keep serving the in-memory state
+                # and demonstrate recovery on the next run (--recover).
+                print(f"chaos: {exc}")
+                args.churn_steps = 0
         engine.swap_head_state(mstate)
 
     t0 = time.monotonic()
@@ -288,6 +514,13 @@ def main(argv=None):
               f"n_mutations={int(ms['n_mutations'])} "
               f"stale_tiles={int(ms['stale_tiles'])} "
               f"n_swaps={int(stats['n_swaps'])}")
+    if log is not None:
+        log.close()
+        ls = log.stats()
+        print(f"log: lsn={int(ls['lsn'])} bytes={int(ls['log_bytes'])} "
+              f"fsyncs={int(ls['n_fsyncs'])} "
+              f"snapshots={int(ls['n_snapshots'])} "
+              f"latest_snapshot_lsn={int(ls['latest_snapshot_lsn'])}")
     if engine.ladder is not None:
         print(f"ladder={engine.ladder} "
               f"rung_hit_fraction={stats['rung_hit_fraction']:.2f} "

@@ -1,8 +1,9 @@
+from repro.serving.catalogue_log import CatalogueLog
 from repro.serving.engine import (DecodeEngine, InFlightBatch, MicroBatcher,
                                   PreparedBatch, Request, Result,
                                   RetrievalEngine)
 from repro.serving.router import ReplicaRouter, ReplicaState
 
-__all__ = ["DecodeEngine", "InFlightBatch", "MicroBatcher", "PreparedBatch",
-           "ReplicaRouter", "ReplicaState", "Request", "Result",
-           "RetrievalEngine"]
+__all__ = ["CatalogueLog", "DecodeEngine", "InFlightBatch", "MicroBatcher",
+           "PreparedBatch", "ReplicaRouter", "ReplicaState", "Request",
+           "Result", "RetrievalEngine"]

@@ -1,0 +1,433 @@
+"""Durable catalogue state: a checksummed mutation WAL + LSN-keyed
+snapshots (ISSUE 10).
+
+PR 7 made the catalogue mutable and PR 8 replicated the serving fabric,
+but the mutation stream itself lived in one process's memory: a crash
+lost the catalogue, and an ejected replica probed back in serving
+whatever head it died with.  This module is the missing durability
+layer:
+
+* **Write-ahead log** — every ``("insert", row)`` / ``("delete", id)`` /
+  ``("update", id, row)`` op is appended to ``wal.log`` as one
+  checksummed record carrying a monotonic log sequence number (LSN,
+  starting at 1).  Record layout::
+
+      header  = <IIQ  magic, payload_len, lsn     (16 bytes)
+      payload = op tag (1 byte) + operands        (rows as int16 LE)
+      footer  = <I    crc32(header + payload)     (4 bytes)
+
+  Appends are **fsync-batched**: the OS flush happens every
+  ``fsync_every`` records (or on :meth:`sync`), trading a bounded
+  durability window for append throughput — the classic group-commit
+  knob, measured in the ``recovery`` BENCH section.
+
+* **Torn-tail recovery** — a writer crash mid-append leaves a partial or
+  checksum-broken final record.  Opening the log for writing scans from
+  the start and TRUNCATES the file at the last valid record boundary
+  (LSNs must also be contiguous — a record that checksums but skips a
+  sequence number marks the tail as garbage).  Read-only scans stop at
+  the same boundary without truncating, so replicas can tail the log
+  while the writer appends.
+
+* **LSN-keyed snapshots** — :meth:`snapshot` persists the
+  ``MutableHeadState`` arrays (codes, tombstone mask, freelist order,
+  slot high-water mark) through ``training.checkpoint.CheckpointManager``
+  with the LSN as the step: atomic tmp-then-rename publish, per-file
+  CRC32 in the manifest, keep-last-k GC.  Pruning metadata is NOT
+  stored — :meth:`recover` rebuilds it exactly from codes + live, which
+  by construction equals ``MutableHeadState.rebuild_oracle()`` at the
+  snapshot LSN.
+
+* **Recovery** = newest *valid* snapshot (corrupt ones are skipped via
+  the hardened ``restore_latest``) + replay of the log tail in LSN
+  order.  Replay through the real mutation API is deterministic (FIFO
+  freelist), so the recovered catalogue is bit-identical to the
+  writer's at the same LSN; ``recover(verify=True)`` additionally
+  retightens and asserts bit-parity with the from-scratch oracle.
+
+The router (``serving/router.py``) threads this log through its
+replicas: ``apply_mutations`` appends before any replica applies (WAL
+discipline), every ``Result`` carries the serving replica's applied-LSN
+watermark, and a crashed replica recovers from here before the health
+FSM may re-admit it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.mutation import MutableHeadState, apply_op
+from repro.training.checkpoint import (CheckpointManager,
+                                       CorruptCheckpointError)
+from repro.training.fault_tolerance import SimulatedFailure
+
+_MAGIC = 0x4C414357                      # "WCAL"
+_HEADER = struct.Struct("<IIQ")          # magic, payload_len, lsn
+_CRC = struct.Struct("<I")
+_IID = struct.Struct("<q")
+
+# Sanity cap on a single record's payload: one op is a tag plus at most
+# one item id and one code row.  Anything bigger in a header means the
+# scan ran into garbage, not a record.
+_MAX_PAYLOAD = 1 << 20
+
+
+def encode_op(op) -> bytes:
+    """Serialise one mutation op.  Code rows are stored as int16 LE —
+    wide enough for any sub-id vocabulary (b <= 32768) and independent
+    of the in-memory code dtype, which the catalogue meta records."""
+    kind = op[0]
+    if kind == "insert":
+        return b"I" + np.asarray(op[1], np.int16).tobytes()
+    if kind == "delete":
+        return b"D" + _IID.pack(int(op[1]))
+    if kind == "update":
+        return (b"U" + _IID.pack(int(op[1]))
+                + np.asarray(op[2], np.int16).tobytes())
+    raise ValueError(f"unknown catalogue op kind {kind!r}")
+
+
+def decode_op(payload: bytes):
+    tag = payload[:1]
+    if tag == b"I":
+        return ("insert", np.frombuffer(payload[1:], np.int16))
+    if tag == b"D":
+        return ("delete", _IID.unpack(payload[1:9])[0])
+    if tag == b"U":
+        return ("update", _IID.unpack(payload[1:9])[0],
+                np.frombuffer(payload[9:], np.int16))
+    raise ValueError(f"unknown op tag {tag!r}")
+
+
+def _scan(path: str) -> Tuple[List[Tuple[int, int, int]], int]:
+    """Walk the log's records; returns ``([(lsn, offset, end)], valid_end)``
+    where ``valid_end`` is the byte offset just past the last valid
+    record.  Stops — never raises — at the first torn, checksum-broken,
+    or LSN-discontinuous record: everything past a crash point is dead
+    weight by definition (the writer never acked it as durable)."""
+    records: List[Tuple[int, int, int]] = []
+    valid_end = 0
+    if not os.path.exists(path):
+        return records, valid_end
+    prev_lsn = 0
+    with open(path, "rb") as f:
+        while True:
+            off = f.tell()
+            header = f.read(_HEADER.size)
+            if len(header) < _HEADER.size:
+                break                              # clean EOF or torn header
+            magic, plen, lsn = _HEADER.unpack(header)
+            if magic != _MAGIC or plen > _MAX_PAYLOAD:
+                break                              # garbage header
+            body = f.read(plen + _CRC.size)
+            if len(body) < plen + _CRC.size:
+                break                              # torn payload/crc
+            payload, crc = body[:plen], _CRC.unpack(body[plen:])[0]
+            if zlib.crc32(header + payload) != crc:
+                break                              # corrupt record
+            if lsn != prev_lsn + 1 and prev_lsn != 0:
+                break                              # sequence gap: not ours
+            prev_lsn = lsn
+            valid_end = off + _HEADER.size + plen + _CRC.size
+            records.append((lsn, off, valid_end))
+    return records, valid_end
+
+
+class CatalogueLog:
+    """Append-only checksummed WAL + versioned snapshots for one mutable
+    catalogue.  One writer instance per log directory; any number of
+    concurrent read-only scans (:meth:`read_ops`, :meth:`recover`) — a
+    reader that races an in-flight append simply stops at the last
+    complete record, exactly like a post-crash scan would."""
+
+    def __init__(self, log_dir: str, *, fsync_every: int = 32,
+                 snapshot_every: int = 0, keep_snapshots: int = 3,
+                 read_only: bool = False):
+        self.log_dir = log_dir
+        self.path = os.path.join(log_dir, "wal.log")
+        self.snap_dir = os.path.join(log_dir, "snapshots")
+        self.fsync_every = max(1, int(fsync_every))
+        self.snapshot_every = int(snapshot_every)
+        self.keep_snapshots = int(keep_snapshots)
+        self.read_only = read_only
+        os.makedirs(log_dir, exist_ok=True)
+
+        records, valid_end = _scan(self.path)
+        size = os.path.getsize(self.path) if os.path.exists(self.path) else 0
+        self.torn_bytes_dropped = size - valid_end
+        self.lsn = records[-1][0] if records else 0
+        if not read_only and size > valid_end:
+            # Torn tail from a writer crash: truncate to the last valid
+            # record boundary so the next append extends a clean log.
+            with open(self.path, "r+b") as f:
+                f.truncate(valid_end)
+        self._fh = None
+        self._unsynced = 0
+        self.n_fsyncs = 0
+        self.n_appends = 0
+        self._crashed = False
+        # Chaos hook: appending THIS lsn writes only a partial record
+        # (torn tail), fsyncs it, and raises SimulatedFailure — the
+        # deterministic "writer died mid-append" experiment.
+        self.fail_at_lsn: Optional[int] = None
+
+    # -- append side ------------------------------------------------------
+
+    def _handle(self):
+        if self._fh is None:
+            self._fh = open(self.path, "ab")
+        return self._fh
+
+    def append(self, op) -> int:
+        """Append one op; returns its LSN.  Durability lags by up to
+        ``fsync_every`` records (call :meth:`sync` to force)."""
+        if self.read_only:
+            raise ValueError("log opened read_only; no appends")
+        if self._crashed:
+            raise RuntimeError("log writer crashed mid-append; reopen the "
+                               "log (torn-tail truncation) to continue")
+        lsn = self.lsn + 1
+        payload = encode_op(op)
+        header = _HEADER.pack(_MAGIC, len(payload), lsn)
+        record = header + payload + _CRC.pack(zlib.crc32(header + payload))
+        fh = self._handle()
+        if self.fail_at_lsn is not None and lsn == self.fail_at_lsn:
+            fh.write(record[:max(1, len(record) // 2)])
+            fh.flush()
+            os.fsync(fh.fileno())
+            self._crashed = True
+            raise SimulatedFailure(
+                f"catalogue log writer crashed mid-append at lsn {lsn} "
+                "(torn record on disk)")
+        fh.write(record)
+        self.lsn = lsn
+        self.n_appends += 1
+        self._unsynced += 1
+        if self._unsynced >= self.fsync_every:
+            self.sync()
+        return lsn
+
+    def append_many(self, ops) -> List[int]:
+        return [self.append(op) for op in ops]
+
+    def sync(self):
+        if self._fh is not None and self._unsynced:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            self.n_fsyncs += 1
+            self._unsynced = 0
+
+    def close(self):
+        if self._fh is not None:
+            if not self._crashed:
+                self.sync()
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- snapshots --------------------------------------------------------
+
+    def _meta_path(self) -> str:
+        return os.path.join(self.log_dir, "meta.json")
+
+    def _write_meta(self, mstate: MutableHeadState):
+        meta = {"version": 1, "capacity": mstate.cap, "m": mstate.m,
+                "b": mstate.b, "tile": mstate.tile,
+                "backend": mstate.backend,
+                "super_factor": mstate.super_factor,
+                "code_dtype": str(np.dtype(mstate.codes.dtype))}
+        existing = self.meta()
+        if existing is not None:
+            static = {k: existing.get(k) for k in meta}
+            if static != meta:
+                raise ValueError(
+                    f"catalogue shape changed under the log: {static} -> "
+                    f"{meta}; a capacity/layout change needs a fresh log "
+                    "directory (it is a recompile boundary anyway)")
+            return
+        tmp = self._meta_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, self._meta_path())
+
+    def meta(self) -> Optional[dict]:
+        try:
+            with open(self._meta_path()) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def _snap_mgr(self) -> CheckpointManager:
+        return CheckpointManager(self.snap_dir, keep=self.keep_snapshots,
+                                 async_save=False)
+
+    def snapshot(self, mstate: MutableHeadState) -> int:
+        """Persist the catalogue arrays keyed by the current LSN.  The
+        freelist is stored IN ORDER (padded with -1 to capacity — fixed
+        shapes keep the checkpoint templates static) because FIFO reuse
+        order is part of replay determinism."""
+        if self.read_only:
+            raise ValueError("log opened read_only; no snapshots")
+        self._write_meta(mstate)
+        self.sync()           # the log is never behind its snapshot
+        free = np.full(mstate.cap, -1, np.int32)
+        if mstate.free:
+            free[:len(mstate.free)] = mstate.free
+        flat = {"codes": np.asarray(mstate.codes),
+                "live": np.asarray(mstate.live),
+                "free": free,
+                "scalars": np.asarray([mstate.n_rows, self.lsn], np.int32)}
+        self._snap_mgr().save(self.lsn, {"catalogue": flat}, block=True)
+        return self.lsn
+
+    def maybe_snapshot(self, mstate: MutableHeadState) -> Optional[int]:
+        """Snapshot-cadence policy: snapshot when ``snapshot_every`` ops
+        have accumulated since the newest snapshot (0 disables)."""
+        if self.snapshot_every <= 0:
+            return None
+        last = self.latest_snapshot_lsn()
+        if last is not None and self.lsn - last < self.snapshot_every:
+            return None
+        return self.snapshot(mstate)
+
+    def latest_snapshot_lsn(self) -> Optional[int]:
+        steps = self._snap_mgr().valid_steps()
+        return steps[-1] if steps else None
+
+    # -- read / recover side ----------------------------------------------
+
+    def read_ops(self, after: int = 0,
+                 upto: Optional[int] = None) -> Iterator[Tuple[int, object]]:
+        """Yield ``(lsn, op)`` for every valid record with ``after < lsn
+        <= upto``.  Pure read: tolerant of a torn tail (stops), never
+        truncates, safe to call while the writer appends."""
+        with open(self.path, "rb") if os.path.exists(self.path) else \
+                _EmptyReader() as f:
+            prev_lsn = 0
+            while True:
+                header = f.read(_HEADER.size)
+                if len(header) < _HEADER.size:
+                    return
+                magic, plen, lsn = _HEADER.unpack(header)
+                if magic != _MAGIC or plen > _MAX_PAYLOAD:
+                    return
+                body = f.read(plen + _CRC.size)
+                if len(body) < plen + _CRC.size:
+                    return
+                payload, crc = body[:plen], _CRC.unpack(body[plen:])[0]
+                if zlib.crc32(header + payload) != crc:
+                    return
+                if lsn != prev_lsn + 1 and prev_lsn != 0:
+                    return
+                prev_lsn = lsn
+                if upto is not None and lsn > upto:
+                    return
+                if lsn > after:
+                    yield lsn, decode_op(payload)
+
+    def recover(self, *, upto: Optional[int] = None,
+                verify: bool = False) -> Tuple[MutableHeadState, int]:
+        """Newest valid snapshot + tail replay; returns ``(state, lsn)``.
+
+        Never raises on crash damage: a torn log tail is ignored and a
+        corrupt newest snapshot falls back to the previous valid one
+        (``restore_latest``) — the only hard errors are a log directory
+        that never held a snapshot, or a snapshot/log pair whose static
+        catalogue meta is missing.  ``verify=True`` retightens the
+        replayed state and asserts bit-parity with
+        ``rebuild_oracle()`` — the recovery-exactness contract."""
+        meta = self.meta()
+        if meta is None:
+            raise CorruptCheckpointError(
+                f"no catalogue meta under {self.log_dir!r}; the log was "
+                "never attached to a catalogue (snapshot() writes it)")
+        cap, m = meta["capacity"], meta["m"]
+        dtype = np.dtype(meta["code_dtype"])
+        templates = {"catalogue": {
+            "codes": np.zeros((cap, m), dtype),
+            "live": np.zeros((cap,), np.bool_),
+            "free": np.zeros((cap,), np.int32),
+            "scalars": np.zeros((2,), np.int32)}}
+        mgr = self._snap_mgr()
+        if upto is None:
+            snap_lsn, out = mgr.restore_latest(templates)
+        else:
+            # Point-in-time recovery: the base snapshot must not be past
+            # the fence, or replay can't wind back to it.
+            snap_lsn, out = None, None
+            for s in reversed([s for s in mgr.all_steps() if s <= upto]):
+                if not mgr.validate_step(s):
+                    continue
+                try:
+                    out = mgr.restore(s, templates)
+                    snap_lsn = s
+                    break
+                except CorruptCheckpointError:
+                    continue
+            if snap_lsn is None:
+                raise CorruptCheckpointError(
+                    f"no valid snapshot at or before lsn {upto} under "
+                    f"{self.snap_dir!r}")
+        cat = out["catalogue"]
+        scalars = np.asarray(cat["scalars"])
+        n_rows, stored_lsn = int(scalars[0]), int(scalars[1])
+        assert stored_lsn == snap_lsn, \
+            f"snapshot step {snap_lsn} carries lsn {stored_lsn}"
+        free = [int(s) for s in np.asarray(cat["free"]) if s >= 0]
+        mstate = MutableHeadState.from_snapshot(
+            cat["codes"], cat["live"], free, n_rows, meta["b"],
+            meta["tile"], backend=meta["backend"],
+            super_factor=meta["super_factor"])
+        applied = snap_lsn
+        for lsn, op in self.read_ops(after=snap_lsn, upto=upto):
+            row_dtype = mstate.codes.dtype
+            if op[0] == "insert":
+                op = ("insert", np.asarray(op[1], row_dtype))
+            elif op[0] == "update":
+                op = ("update", op[1], np.asarray(op[2], row_dtype))
+            apply_op(mstate, op)
+            applied = lsn
+        if verify:
+            import jax
+            mstate.retighten()
+            got = jax.tree_util.tree_leaves(mstate.state)
+            want = jax.tree_util.tree_leaves(mstate.rebuild_oracle())
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        return mstate, applied
+
+    # -- observability ----------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        size = os.path.getsize(self.path) if os.path.exists(self.path) else 0
+        snaps = self._snap_mgr().valid_steps()
+        return {"lsn": float(self.lsn),
+                "log_bytes": float(size),
+                "n_appends": float(self.n_appends),
+                "n_fsyncs": float(self.n_fsyncs),
+                "torn_bytes_dropped": float(self.torn_bytes_dropped),
+                "n_snapshots": float(len(snaps)),
+                "latest_snapshot_lsn": float(snaps[-1]) if snaps else -1.0}
+
+
+class _EmptyReader:
+    """Context-managed stand-in for a missing log file (fresh dir)."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def read(self, n: int) -> bytes:
+        return b""

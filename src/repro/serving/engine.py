@@ -64,6 +64,12 @@ class Result:
     # dispatch) and whether it was raced against a hedge re-issue.
     replica: int = -1
     hedged: bool = False
+    # Catalogue version watermark (durable-mutation routing, ISSUE 10):
+    # the serving replica's applied LSN at dispatch time, or -1 when the
+    # fabric serves an immutable catalogue.  A result whose replica
+    # lagged the committed LSN past the router's staleness budget also
+    # carries degraded="stale_catalogue".
+    lsn: int = -1
 
 
 class MicroBatcher:

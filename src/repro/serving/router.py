@@ -25,12 +25,27 @@ API and layers on what one engine cannot give you:
   and recovery is hysteresis-damped (the level only drops after the
   depth has sat below the low watermark for ``recover_patience``
   consecutive scheduling passes) so the ladder cannot thrash.
+* **Durable versioned mutation** (ISSUE 10) — a fabric built over a
+  mutable catalogue (:meth:`for_seqrec_mutable`) takes mutations through
+  ONE entry, :meth:`apply_mutations`: each op is appended to the
+  ``CatalogueLog`` WAL *before* any replica applies it, then every
+  replica worker replays the op batch between dispatches through the
+  zero-recompile ``swap_head_state`` path — LSN-fenced, so duplicate
+  delivery is idempotent and a sequence gap (a crashed replica) forces
+  snapshot+replay recovery from the log.  Every ``Result`` carries the
+  serving replica's applied-LSN watermark; a replica lagging the
+  committed LSN past ``staleness_budget`` is deprioritised in
+  eligibility and its results are tagged ``degraded="stale_catalogue"``;
+  and a crashed/ejected replica must finish its catch-up replay before
+  the health FSM will re-admit it to ``healthy``.
 
 Threading model: each engine is touched by exactly ONE worker thread
 (engines are not thread-safe); the scheduler — health bookkeeping, job
 assignment, hedging, the ladder — runs entirely on the caller's thread
 inside :meth:`pump` / :meth:`drain`.  The only cross-thread structures
-are the per-replica job queues and the shared completion-event queue.
+are the per-replica job queues, the per-replica mutation queues and the
+shared completion-event queue; catalogue application and the head swap
+happen on the owning worker thread, never on the caller's.
 """
 from __future__ import annotations
 
@@ -43,6 +58,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.mutation import MutableHeadState, apply_op
 from repro.serving.engine import (InFlightBatch, MicroBatcher, Request,
                                   Result, RetrievalEngine)
 from repro.training.fault_tolerance import ReplicaFaultPlan, SimulatedFailure
@@ -85,6 +101,8 @@ class _Event:
     results: List[Result]
     replica: int
     straggler: bool = False
+    lsn: int = -1                     # replica's applied LSN at dispatch
+    stale: bool = False               # lag exceeded the staleness budget
 
 
 @dataclass
@@ -133,7 +151,10 @@ class ReplicaRouter:
                  max_redispatch: Optional[int] = None,
                  degrade_high: int = 256, degrade_low: int = 64,
                  degrade_k_cap: Optional[int] = None,
-                 degrade_patience: int = 1, recover_patience: int = 3):
+                 degrade_patience: int = 1, recover_patience: int = 3,
+                 replica_states: Optional[Sequence[MutableHeadState]] = None,
+                 log: Optional[Any] = None,
+                 staleness_budget: int = 0):
         if not engines:
             raise ValueError("need at least one replica engine")
         self.engines = list(engines)
@@ -183,6 +204,42 @@ class ReplicaRouter:
         self.duplicates_suppressed = 0
         self.redispatched = 0
 
+        # -- durable mutable catalogue (ISSUE 10) -----------------------
+        self.mutable = replica_states is not None
+        if self.mutable and len(replica_states) != self.n_replicas:
+            raise ValueError(
+                f"{len(replica_states)} replica states for "
+                f"{self.n_replicas} engines — each replica owns exactly "
+                "one MutableHeadState clone")
+        if log is not None and not self.mutable:
+            raise ValueError("a CatalogueLog needs mutable replicas "
+                             "(replica_states / for_seqrec_mutable)")
+        self._replica_states: List[Optional[MutableHeadState]] = \
+            list(replica_states or [])
+        self.log = log
+        self.staleness_budget = max(0, int(staleness_budget))
+        # The writer state is the scheduler-side authoritative catalogue:
+        # apply_mutations validates + applies here first (WAL discipline
+        # needs a validated op), and snapshots are cut from it.  A clone,
+        # because replica 0's state is owned by its worker thread.
+        self._writer_state = (self._replica_states[0].clone()
+                              if self.mutable else None)
+        self._committed_lsn = (log.lsn if (self.mutable and log is not None)
+                               else 0)
+        self._applied_lsn = [self._committed_lsn] * self.n_replicas
+        self._mut_queues: List[queue.Queue] = [
+            queue.Queue() for _ in range(self.n_replicas)]
+        self._paused = [False] * self.n_replicas    # chaos: freeze catch-up
+        self._needs_recovery = [False] * self.n_replicas
+        self.stale_served = 0
+        self.catchup_events = 0
+        self.mutations_applied = 0
+        if self.mutable and log is not None \
+                and log.latest_snapshot_lsn() is None:
+            # A log with no snapshot cannot recover (replay needs a base
+            # state): cut the genesis snapshot at the current LSN.
+            log.snapshot(self._writer_state)
+
         self._closed = False
         self._threads = [
             threading.Thread(target=self._worker, args=(rid,), daemon=True,
@@ -214,6 +271,44 @@ class ReplicaRouter:
                 calibrate=False))
         return cls(engines, **router_kw)
 
+    @classmethod
+    def for_seqrec_mutable(cls, params, cfg, mstate, *,
+                           n_replicas: int = 2, k: int = 10,
+                           max_batch: int = 64,
+                           calibrate: Optional[bool] = None,
+                           survival_stats: Optional[Sequence[int]] = None,
+                           ladder=None, log: Optional[Any] = None,
+                           **router_kw) -> "ReplicaRouter":
+        """K replicas over ONE logical mutable catalogue.  Each replica
+        engine owns its own ``MutableHeadState`` clone (device arrays
+        shared until a mutation forks them; host freelist/staleness
+        copied) and replays the same LSN-ordered op stream, so replica
+        states — and therefore untagged answers — stay bit-identical
+        across the fleet.  The calibrated ladder is shared from the
+        first replica exactly like :meth:`for_seqrec`.
+
+        ``log`` (a ``serving.catalogue_log.CatalogueLog``) makes the
+        stream durable: :meth:`apply_mutations` appends there first, and
+        crashed replicas / a restarted router recover from it.  To stand
+        a router back up after a crash::
+
+            log = CatalogueLog(log_dir)           # truncates any torn tail
+            state, lsn = log.recover()
+            router = ReplicaRouter.for_seqrec_mutable(params, cfg, state,
+                                                      log=log, ...)
+        """
+        states = [mstate] + [mstate.clone() for _ in range(n_replicas - 1)]
+        first = RetrievalEngine.for_seqrec_mutable(
+            params, cfg, states[0], k=k, max_batch=max_batch,
+            calibrate=calibrate, survival_stats=survival_stats,
+            ladder=ladder)
+        engines = [first]
+        for st in states[1:]:
+            engines.append(RetrievalEngine.for_seqrec_mutable(
+                params, cfg, st, k=k, max_batch=max_batch,
+                ladder=first.ladder, calibrate=False))
+        return cls(engines, replica_states=states, log=log, **router_kw)
+
     def warmup(self, ks: Sequence[int] = (), buckets: Sequence[int] = ()):
         """Synchronously compile the hot serve variants on EVERY replica
         (full-bucket batch at the engines' base k plus any extra ``ks`` /
@@ -242,6 +337,11 @@ class ReplicaRouter:
         q = self._queues[rid]
         inflight: collections.deque = collections.deque()
         while True:
+            if self.mutable:
+                # Catalogue catch-up BETWEEN dispatches, on the thread
+                # that owns the engine: apply any pending op batches and
+                # hot-swap the head (zero recompiles) before more work.
+                self._apply_pending(rid, eng)
             job = None
             if len(inflight) < self.dispatch_depth:
                 try:
@@ -255,9 +355,83 @@ class ReplicaRouter:
                     self._finish(rid, *inflight.popleft())
                 break
             if job is not None:
+                if self.mutable:
+                    # A job may have queued behind newer mutations:
+                    # re-drain so the dispatch serves the freshest state
+                    # this replica can reach.
+                    self._apply_pending(rid, eng)
                 self._start(rid, eng, plan, job, inflight)
             elif inflight:
                 self._finish(rid, *inflight.popleft())
+
+    def _apply_pending(self, rid: int, eng: RetrievalEngine):
+        """Drain this replica's mutation queue (worker thread only).
+
+        LSN fencing makes delivery idempotent and gap-safe: an op at or
+        below the applied watermark is a duplicate (skipped); an op more
+        than one ahead means this replica missed a delta — only possible
+        after a (simulated) crash — and forces snapshot+replay recovery
+        from the durable log.  A "crash" marker drops the in-memory
+        state outright; the very next pass recovers it.  The engine sees
+        one ``swap_head_state`` per drain, not per op."""
+        if self._paused[rid]:
+            return
+        q = self._mut_queues[rid]
+        st = self._replica_states[rid]
+        applied = self._applied_lsn[rid]
+        dirty = False
+        while True:
+            try:
+                kind, payload = q.get_nowait()
+            except queue.Empty:
+                break
+            if kind == "crash":
+                st, applied, dirty = None, -1, False
+                continue
+            for lsn, op in payload:
+                if st is None or lsn > applied + 1:
+                    st, applied = self._recover_replica(rid)
+                    dirty = True
+                if lsn <= applied:
+                    continue              # duplicate / already recovered
+                if lsn > applied + 1:     # still gapped after recovery:
+                    raise RuntimeError(   # the log lost acked ops
+                        f"replica {rid}: op lsn {lsn} but recovered log "
+                        f"ends at {applied} — durable log is missing "
+                        "committed entries")
+                apply_op(st, op)
+                applied = lsn
+                dirty = True
+        if st is None:                    # crashed with an empty tail
+            st, applied = self._recover_replica(rid)
+            dirty = True
+        if dirty:
+            self._replica_states[rid] = st
+            eng.swap_head_state(st)
+        self._applied_lsn[rid] = applied
+
+    def _recover_replica(self, rid: int):
+        """Snapshot+replay from the durable log (worker thread).  Reads
+        never truncate and tolerate a concurrent append's torn tail; any
+        ops past what the read sees are still queued behind this drain
+        and land through the normal LSN-fenced path."""
+        if self.log is None:
+            raise RuntimeError(
+                f"replica {rid} lost its catalogue state and no durable "
+                "log is attached; build the router with a CatalogueLog")
+        # Force the committed prefix onto disk first: recover() reads the
+        # file, and appends inside the fsync window would otherwise be
+        # invisible — the replica would land BELOW the committed LSN with
+        # the missing batch already consumed from its queue.  (The
+        # buffered writer is lock-protected, so syncing from a worker
+        # thread is safe against a concurrent append; a crashed writer is
+        # left alone — its durable prefix is already fsynced.)
+        if not self.log.read_only and not self.log._crashed:
+            self.log.sync()
+        st, lsn = self.log.recover()
+        self.catchup_events += 1
+        self._needs_recovery[rid] = False
+        return st, lsn
 
     def _start(self, rid: int, eng: RetrievalEngine,
                plan: Optional[ReplicaFaultPlan], job: _Job,
@@ -268,21 +442,29 @@ class ReplicaRouter:
         replicas."""
         d_idx = self._dispatch_idx[rid]
         self._dispatch_idx[rid] = d_idx + 1
+        # Catalogue watermark at dispatch: the results of this job were
+        # computed against exactly this LSN.  Staleness is judged here,
+        # not at delivery — a result is stale iff the state it was
+        # SERVED from lagged, however long delivery takes.
+        lsn = self._applied_lsn[rid] if self.mutable else -1
+        stale = (self.mutable
+                 and self._committed_lsn - lsn > self.staleness_budget)
         try:
             extra = plan.check(d_idx) if plan is not None else 0.0
             shed, prep = eng.prepare(job.requests, k_cap=job.k_cap,
                                      rung_pin=job.rung_pin)
             if prep is None:
-                self._events.put(_Event("done", job, shed, rid))
+                self._events.put(_Event("done", job, shed, rid,
+                                        lsn=lsn, stale=stale))
                 return
             if extra:
                 time.sleep(extra)         # straggling replica
-            inflight.append((job, eng.launch(prep), shed))
+            inflight.append((job, eng.launch(prep), shed, lsn, stale))
         except SimulatedFailure:
             self._events.put(_Event("fail", job, [], rid))
 
     def _finish(self, rid: int, job: _Job, inf: InFlightBatch,
-                shed: List[Result]):
+                shed: List[Result], lsn: int = -1, stale: bool = False):
         try:
             res = self.engines[rid].complete(inf)
         except SimulatedFailure:
@@ -291,11 +473,81 @@ class ReplicaRouter:
             self._events.put(_Event("fail", job, shed, rid))
         else:
             self._events.put(_Event("done", job, shed + res, rid,
-                                    straggler=inf.straggler))
+                                    straggler=inf.straggler, lsn=lsn,
+                                    stale=stale))
 
     # ------------------------------------------------------------------
     # scheduler side (caller thread only)
     # ------------------------------------------------------------------
+
+    def apply_mutations(self, ops) -> int:
+        """The single durable entry for catalogue mutations (caller
+        thread).  WAL discipline, in order per op: validate + apply to
+        the writer state (an invalid op raises BEFORE anything becomes
+        durable), append to the log, and only then fan the batch out to
+        the replica workers — so no replica can ever apply an op the log
+        does not hold.  Returns the committed LSN.
+
+        A ``SimulatedFailure`` out of the log append is the torn-record
+        chaos experiment: the writer "crashed" mid-append.  The durable
+        prefix is still consistent (everything already fanned out is on
+        disk); close this router and stand a new one up from
+        ``CatalogueLog.recover()``."""
+        if not self.mutable:
+            raise ValueError(
+                "router fronts an immutable catalogue; build it with "
+                "for_seqrec_mutable (or replica_states=) to mutate")
+        entries = []
+        try:
+            for op in ops:
+                apply_op(self._writer_state, op)
+                lsn = (self.log.append(op) if self.log is not None
+                       else self._committed_lsn + len(entries) + 1)
+                entries.append((lsn, op))
+        finally:
+            if entries:
+                self._committed_lsn = entries[-1][0]
+                self.mutations_applied += len(entries)
+                for q in self._mut_queues:
+                    q.put(("ops", entries))
+        if self.log is not None:
+            self.log.maybe_snapshot(self._writer_state)
+        return self._committed_lsn
+
+    def crash_replica(self, rid: int):
+        """Chaos hook: simulate process death of one replica.  Its
+        in-memory catalogue state is dropped (a "crash" marker its
+        worker honours before the next dispatch), it is ejected from
+        rotation, and re-admission is gated: the health FSM keeps it out
+        of ``healthy`` until it has recovered snapshot+tail from the
+        durable log and caught up within the staleness budget."""
+        if not self.mutable:
+            raise ValueError("crash_replica needs a mutable fabric")
+        rs = self.replicas[rid]
+        if rs.state != EJECTED:
+            rs.state = EJECTED
+            rs.ejected_at = time.monotonic()
+            rs.ejections += 1
+        rs.strikes = max(rs.strikes, self.eject_after)
+        self._needs_recovery[rid] = True
+        self._mut_queues[rid].put(("crash", None))
+
+    def pause_mutations(self, rid: int):
+        """Chaos hook: freeze one replica's catalogue catch-up (its
+        worker stops draining the mutation queue), so it serves an
+        ever-staler state — the deterministic way to exercise the
+        staleness budget, the ``stale_catalogue`` tag and the catch-up
+        re-admission gate."""
+        self._paused[rid] = True
+
+    def resume_mutations(self, rid: int):
+        self._paused[rid] = False
+
+    def _lag(self, rid: int) -> int:
+        applied = self._applied_lsn[rid]
+        if applied < 0:                   # crashed, recovery pending
+            return self._committed_lsn + 1
+        return max(0, self._committed_lsn - applied)
 
     def submit(self, req: Request):
         """Accept a request (or, at ladder level 3, shed it immediately
@@ -387,6 +639,15 @@ class ReplicaRouter:
             if not r.shed:
                 r.replica = ev.replica
                 r.hedged = bool(st and st.hedged)
+                if self.mutable:
+                    r.lsn = ev.lsn
+                    if ev.stale:
+                        # Served from a catalogue older than the budget
+                        # allows: still a correct answer *for its LSN*,
+                        # but no longer the exactness contract's answer.
+                        self.stale_served += 1
+                        r.degraded = (f"{r.degraded}+stale_catalogue"
+                                      if r.degraded else "stale_catalogue")
             if r.degraded:
                 self.degraded_results[r.degraded] += 1
             self._latencies_ms.append(r.latency_ms)
@@ -460,6 +721,13 @@ class ReplicaRouter:
     def _ok(self, rid: int):
         rs = self.replicas[rid]
         if rs.state == PROBING:
+            if self.mutable and (self._needs_recovery[rid]
+                                 or self._lag(rid) > self.staleness_budget):
+                # The probe answered, but the replica has not finished
+                # replaying its missed catalogue delta: re-admission is
+                # gated on catch-up.  Stay PROBING — the next probe
+                # trials it again once the worker has caught up.
+                return
             rs.state = HEALTHY
             rs.strikes = 0
             rs.cooldown_ms = self._base_cooldown_ms
@@ -494,7 +762,14 @@ class ReplicaRouter:
                 continue
             if rs.state == PROBING and rs.probe_outstanding:
                 continue
-            key = (rank[rs.state],
+            # A replica lagging the committed catalogue past the budget
+            # serves stale (tagged) answers: deprioritise it within its
+            # health rank so fresh replicas absorb the traffic first —
+            # but never exclude it, or a single-replica fabric would
+            # deadlock against its own catch-up.
+            stale = int(self.mutable
+                        and self._lag(rid) > self.staleness_budget)
+            key = (rank[rs.state], stale,
                    rs.inflight + self._queues[rid].qsize())
             if best_key is None or key < best_key:
                 best, best_key = rid, key
@@ -621,8 +896,11 @@ class ReplicaRouter:
                 "queue_depth": self._queues[rid].qsize() + rs.inflight,
                 "n_compiles": len(self.engines[rid]._compiled),
             }
+            if self.mutable:
+                per_replica[rid]["applied_lsn"] = self._applied_lsn[rid]
+                per_replica[rid]["lag"] = self._lag(rid)
         lat = np.asarray(lats) if lats else None
-        return {
+        out: Dict[str, Any] = {
             "count": float(done),
             "pending": float(len(self.batcher.queue)),
             "outstanding": float(sum(len(st.requests)
@@ -643,3 +921,13 @@ class ReplicaRouter:
             "shed_load": float(self.shed_load),
             "replicas": per_replica,
         }
+        if self.mutable:
+            out.update({
+                "committed_lsn": float(self._committed_lsn),
+                "mutations_applied": float(self.mutations_applied),
+                "stale_served": float(self.stale_served),
+                "catchup_events": float(self.catchup_events),
+                "staleness_budget": float(self.staleness_budget),
+                "log": self.log.stats() if self.log is not None else None,
+            })
+        return out

@@ -4,6 +4,14 @@ tree manifest, so a restore may target any mesh/sharding (scale-up or -down
 after node loss).  No orbax/tensorstore in this environment: npz + msgpack
 manifest, written tmp-then-rename so a crash mid-save never corrupts the
 latest checkpoint.
+
+Restores are **checksummed** (ISSUE 10): every npz file's CRC32 lands in
+the manifest at save time and is verified on load, so a truncated or
+bit-rotten file raises :class:`CorruptCheckpointError` instead of
+surfacing as a numpy parse error (or worse, silently wrong arrays)
+halfway through ``restore``.  :meth:`CheckpointManager.restore_latest`
+walks steps newest-first and falls back past corrupt ones — one bad
+checkpoint costs recency, never the run.
 """
 from __future__ import annotations
 
@@ -12,7 +20,8 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +30,22 @@ import numpy as np
 Params = Any
 
 _SEP = "|"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint step directory failed validation: missing/unparsable
+    manifest, missing npz, or a checksum mismatch (truncation, torn
+    write, bit rot)."""
+
+
+def _file_crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc
+            crc = zlib.crc32(chunk, crc)
 
 
 def _flatten(tree: Params) -> Dict[str, np.ndarray]:
@@ -63,13 +88,20 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "time": time.time(), "groups": {}}
+        manifest = {"step": step, "time": time.time(), "groups": {},
+                    "checksums": {}}
         for name, flat in host.items():
-            np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+            fname = f"{name}.npz"
+            np.savez(os.path.join(tmp, fname), **flat)
             manifest["groups"][name] = {
                 k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                 for k, v in flat.items()
             }
+            # CRC over the file bytes as written: restore re-hashes the
+            # same bytes, so any truncation/corruption between save and
+            # load is caught before numpy ever parses the archive.
+            manifest["checksums"][fname] = _file_crc32(
+                os.path.join(tmp, fname))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -103,6 +135,61 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def validate_step(self, step: int) -> bool:
+        """True when the step directory passes integrity checks: readable
+        manifest, every group's npz present, and — for checkpoints written
+        with checksums — CRC32 match on the file bytes.  Pre-checksum
+        checkpoints (no ``checksums`` manifest key) validate by a best-
+        effort parse of each archive's member table instead."""
+        base = os.path.join(self.directory, f"step_{step:010d}")
+        try:
+            with open(os.path.join(base, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError):
+            return False
+        checksums = manifest.get("checksums")
+        for name in manifest.get("groups", {}):
+            path = os.path.join(base, f"{name}.npz")
+            if not os.path.exists(path):
+                return False
+            if checksums is not None:
+                want = checksums.get(f"{name}.npz")
+                if want is None or _file_crc32(path) != int(want):
+                    return False
+            else:
+                try:
+                    with np.load(path) as z:
+                        _ = z.files
+                except Exception:
+                    return False
+        return True
+
+    def valid_steps(self) -> List[int]:
+        return [s for s in self.all_steps() if self.validate_step(s)]
+
+    def restore_latest(self, templates: Dict[str, Params],
+                       shardings: Optional[Dict[str, Params]] = None,
+                       ) -> Tuple[int, Dict[str, Params]]:
+        """Restore the newest step that passes validation, falling back
+        past corrupt/truncated ones (a crash mid-write plus a crash
+        mid-GC can leave any suffix of the step list damaged — losing
+        recency is recoverable, crashing mid-restore is not).  Returns
+        ``(step, trees)``; raises :class:`CorruptCheckpointError` when no
+        step survives validation."""
+        steps = self.all_steps()
+        skipped = []
+        for step in reversed(steps):
+            if not self.validate_step(step):
+                skipped.append(step)
+                continue
+            try:
+                return step, self.restore(step, templates, shardings)
+            except CorruptCheckpointError:
+                skipped.append(step)   # raced a concurrent writer/GC
+        raise CorruptCheckpointError(
+            f"no valid checkpoint under {self.directory!r} "
+            f"(steps seen: {steps}, failed validation: {skipped})")
+
     def restore(self, step: int, templates: Dict[str, Params],
                 shardings: Optional[Dict[str, Params]] = None,
                 ) -> Dict[str, Params]:
@@ -113,10 +200,27 @@ class CheckpointManager:
         wrote them or will read them."""
         from repro.distributed.sharding import path_str
         base = os.path.join(self.directory, f"step_{step:010d}")
+        checksums = None
+        try:
+            with open(os.path.join(base, "manifest.json")) as f:
+                checksums = json.load(f).get("checksums")
+        except (OSError, ValueError) as e:
+            raise CorruptCheckpointError(
+                f"step {step}: unreadable manifest ({e})") from e
         out = {}
         for name, template in templates.items():
-            with np.load(os.path.join(base, f"{name}.npz")) as z:
-                flat = {k: z[k] for k in z.files}
+            path = os.path.join(base, f"{name}.npz")
+            if checksums is not None and f"{name}.npz" in checksums:
+                if _file_crc32(path) != int(checksums[f"{name}.npz"]):
+                    raise CorruptCheckpointError(
+                        f"step {step}: checksum mismatch on {name}.npz "
+                        "(truncated or corrupt)")
+            try:
+                with np.load(path) as z:
+                    flat = {k: z[k] for k in z.files}
+            except Exception as e:
+                raise CorruptCheckpointError(
+                    f"step {step}: unreadable {name}.npz ({e})") from e
             leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
             shard_tree = shardings.get(name) if shardings else None
             shard_leaves = (jax.tree_util.tree_leaves(shard_tree)

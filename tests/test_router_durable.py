@@ -1,0 +1,315 @@
+"""Durable versioned mutation through the replicated fabric (ISSUE 10).
+
+The contracts on top of PR 8's chaos invariants:
+
+* ``apply_mutations`` is WAL-disciplined: ops land in the durable log
+  before any replica applies them, every replica replays the same
+  LSN-ordered stream, and propagation costs ZERO recompiles (the heads
+  hot-swap).
+* Every Result carries the serving replica's applied-LSN watermark;
+  results served past the staleness budget are tagged
+  ``stale_catalogue`` — never silently stale.
+* A crashed replica recovers snapshot+tail from the log and is kept out
+  of HEALTHY until it has caught up (gated re-admission).
+* A writer crash mid-append (torn record) loses at most the un-acked
+  suffix: a restarted router recovers the durable prefix bit-identically
+  to a from-scratch oracle.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.mutation import MutableHeadState, apply_op
+from repro.models import seqrec as S
+from repro.serving import (CatalogueLog, ReplicaRouter, Request,
+                           RetrievalEngine)
+from repro.training.fault_tolerance import SimulatedFailure
+
+CFG = get_reduced("sasrec-recjpq").model
+K = 5
+
+
+@pytest.fixture(scope="module")
+def params():
+    return S.init_seqrec(jax.random.PRNGKey(0), CFG)
+
+
+def _mk_state(params):
+    return MutableHeadState.build(params["item_emb"]["codes"], CFG.pq.b,
+                                  tile=64)
+
+
+def _gen_ops(shadow, rng, n=10):
+    """n random valid ops, applied to ``shadow`` as they are drawn (the
+    caller's oracle of what the fleet should converge to)."""
+    ops = []
+    for _ in range(n):
+        live = np.where(np.asarray(shadow.live))[0]
+        live = live[live > 0]
+        kind = rng.choice(["insert", "delete", "update"], p=[0.3, 0.35, 0.35])
+        row = np.asarray(rng.integers(0, shadow.b, shadow.m, np.int64),
+                         np.asarray(shadow.codes).dtype)
+        if kind == "insert" and not shadow.free \
+                and shadow.n_rows >= shadow.cap:
+            kind = "delete"
+        if kind == "insert":
+            op = ("insert", row)
+        elif kind == "delete":
+            op = ("delete", int(rng.choice(live)))
+        else:
+            op = ("update", int(rng.choice(live)), row)
+        apply_op(shadow, op)
+        ops.append(op)
+    return ops
+
+
+def _specs(n, base=0, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(base + i, rng.integers(1, CFG.n_items + 1, 8)) for i in range(n)]
+
+
+def _wait(cond, timeout_s=30.0):
+    t0 = time.monotonic()
+    while not cond():
+        if time.monotonic() - t0 > timeout_s:
+            return False
+        time.sleep(0.01)
+    return True
+
+
+def _caught_up(router):
+    return lambda: all(
+        rep["lag"] == 0 for rep in router.stats()["replicas"].values())
+
+
+def test_mutations_propagate_zero_recompiles_and_watermarks(params, tmp_path):
+    log = CatalogueLog(str(tmp_path), fsync_every=4)
+    mstate = _mk_state(params)
+    shadow = mstate.clone()
+    rng = np.random.default_rng(0)
+    with ReplicaRouter.for_seqrec_mutable(
+            params, CFG, mstate, n_replicas=2, k=K, max_batch=8,
+            calibrate=False, log=log, hedge=False) as router:
+        router.warmup()
+        specs0 = _specs(16, base=0)
+        for rid_, seq in specs0:
+            router.submit(Request(rid_, seq, k=K))
+        r0 = router.drain()
+        assert all(r.lsn == 0 for r in r0)          # pre-mutation watermark
+        compiles0 = [rep["n_compiles"]
+                     for rep in router.stats()["replicas"].values()]
+
+        ops = _gen_ops(shadow, rng, n=12)
+        deleted = [op[1] for op in ops if op[0] == "delete"]
+        lsn = router.apply_mutations(ops)
+        assert lsn == 12
+        assert _wait(_caught_up(router)), "replicas never caught up"
+
+        specs1 = _specs(16, base=100, seed=1)
+        for rid_, seq in specs1:
+            router.submit(Request(rid_, seq, k=K))
+        r1 = router.drain()
+        st = router.stats()
+        # zero recompiles: propagation is a hot swap, not a new program
+        assert [rep["n_compiles"]
+                for rep in st["replicas"].values()] == compiles0
+        assert st["committed_lsn"] == 12.0
+        assert st["stale_served"] == 0.0
+        assert st["log"]["lsn"] == 12.0
+        for r in r1:
+            assert r.lsn == 12 and not r.degraded and not r.shed
+            assert not np.isin(np.asarray(r.items), deleted).any()
+
+        # bit-parity vs a single-engine oracle on an independently
+        # mutated state, sharing the fleet's ladder
+        oracle = RetrievalEngine.for_seqrec_mutable(
+            params, CFG, shadow, k=K, max_batch=8,
+            ladder=router.engines[0].ladder, calibrate=False)
+        for rid_, seq in specs1:
+            oracle.submit(Request(rid_, seq, k=K))
+        want = {r.request_id: r for r in oracle.drain()}
+        for r in r1:
+            np.testing.assert_array_equal(r.items, want[r.request_id].items)
+            np.testing.assert_array_equal(r.scores,
+                                          want[r.request_id].scores)
+
+
+def test_stale_tagging_and_immutable_guards(params, tmp_path):
+    mstate = _mk_state(params)
+    shadow = mstate.clone()
+    rng = np.random.default_rng(1)
+    with ReplicaRouter.for_seqrec_mutable(
+            params, CFG, mstate, n_replicas=1, k=K, max_batch=8,
+            calibrate=False, staleness_budget=2) as router:
+        router.warmup()
+        # invalid op: rejected BEFORE anything becomes durable
+        with pytest.raises(ValueError):
+            router.apply_mutations([("delete", 0)])   # padding row
+        assert router.stats()["committed_lsn"] == 0.0
+
+        router.pause_mutations(0)
+        router.apply_mutations(_gen_ops(shadow, rng, n=5))
+        for rid_, seq in _specs(8, base=0, seed=2):
+            router.submit(Request(rid_, seq, k=K))
+        stale = router.drain()
+        st = router.stats()
+        assert st["stale_served"] >= 1.0
+        for r in stale:                    # lag 5 > budget 2: all tagged
+            assert r.degraded == "stale_catalogue"
+            assert r.lsn == 0              # served from the genesis state
+            assert not r.shed and r.items.shape == (K,)
+
+        router.resume_mutations(0)
+        assert _wait(_caught_up(router))
+        for rid_, seq in _specs(8, base=100, seed=3):
+            router.submit(Request(rid_, seq, k=K))
+        fresh = router.drain()
+        for r in fresh:
+            assert r.lsn == 5 and not r.degraded
+
+    # an immutable router refuses the mutation API outright
+    with ReplicaRouter.for_seqrec(params, CFG, n_replicas=1, k=K,
+                                  max_batch=8, method="pqtopk_pruned",
+                                  calibrate=False) as plain:
+        with pytest.raises(ValueError, match="immutable"):
+            plain.apply_mutations([("delete", 1)])
+        assert all(r.lsn == -1 for r in _serve(plain, 4))
+
+
+def _serve(router, n, base=0, seed=9):
+    for rid_, seq in _specs(n, base=base, seed=seed):
+        router.submit(Request(rid_, seq, k=K))
+    return router.drain()
+
+
+@pytest.mark.slow
+def test_crash_replica_recovers_with_gated_readmission(params, tmp_path):
+    log = CatalogueLog(str(tmp_path), fsync_every=4)
+    mstate = _mk_state(params)
+    shadow = mstate.clone()
+    rng = np.random.default_rng(2)
+    with ReplicaRouter.for_seqrec_mutable(
+            params, CFG, mstate, n_replicas=2, k=K, max_batch=8,
+            calibrate=False, log=log, hedge=False, eject_after=1,
+            cooldown_ms=20.0) as router:
+        router.warmup()
+        router.apply_mutations(_gen_ops(shadow, rng, n=6))
+        assert _wait(_caught_up(router))
+        all_results = list(_serve(router, 16, base=0))
+
+        # Crash replica 1 AND freeze its catch-up: probes answer but the
+        # health FSM must refuse re-admission while recovery is pending.
+        router.pause_mutations(1)
+        router.crash_replica(1)
+        router.apply_mutations(_gen_ops(shadow, rng, n=4))
+        base = 1000
+        for _ in range(6):
+            all_results += _serve(router, 8, base=base, seed=base)
+            base += 8
+        assert router.replicas[1].readmissions == 0, \
+            "re-admitted before catching up"
+
+        # Un-freeze: the worker recovers snapshot+tail from the log,
+        # catches up, and the next probe re-admits it.
+        router.resume_mutations(1)
+        while router.replicas[1].readmissions == 0:
+            all_results += _serve(router, 8, base=base, seed=base)
+            base += 8
+            assert base < 3000, "replica 1 never re-admitted"
+        st = router.stats()
+        assert st["catchup_events"] >= 1.0
+        assert st["replicas"][1]["lag"] == 0
+        assert st["replicas"][1]["applied_lsn"] == 10
+
+        # exactly-once through crash + recovery
+        seen = sorted(r.request_id for r in all_results)
+        assert seen == sorted(router._expected)
+
+        # the recovered replica serves bit-identically to the writer's
+        # catalogue: compare against an oracle engine on the shadow
+        oracle = RetrievalEngine.for_seqrec_mutable(
+            params, CFG, shadow, k=K, max_batch=8,
+            ladder=router.engines[0].ladder, calibrate=False)
+        specs = _specs(16, base=9000, seed=7)
+        for rid_, seq in specs:
+            router.submit(Request(rid_, seq, k=K))
+            oracle.submit(Request(rid_, seq, k=K))
+        got = {r.request_id: r for r in router.drain()}
+        want = {r.request_id: r for r in oracle.drain()}
+        for i in got:
+            if got[i].degraded or got[i].shed:
+                continue
+            np.testing.assert_array_equal(got[i].items, want[i].items)
+            np.testing.assert_array_equal(got[i].scores, want[i].scores)
+
+
+@pytest.mark.slow
+def test_writer_torn_crash_and_full_router_recovery(params, tmp_path):
+    """Kill the writer mid-append (torn record on disk), kill the router,
+    stand a new one up from CatalogueLog.recover(): the recovered fleet
+    serves the durable prefix bit-identically to a from-scratch oracle."""
+    log = CatalogueLog(str(tmp_path), fsync_every=4)
+    mstate = _mk_state(params)
+    shadow = mstate.clone()            # tracks the DURABLE prefix only
+    rng = np.random.default_rng(3)
+    ladder = None
+    with ReplicaRouter.for_seqrec_mutable(
+            params, CFG, mstate, n_replicas=2, k=K, max_batch=8,
+            calibrate=False, log=log, hedge=False) as router:
+        ladder = router.engines[0].ladder
+        router.apply_mutations(_gen_ops(shadow, rng, n=6))
+
+        batch2 = _gen_ops(shadow.clone(), rng, n=5)   # NOT applied to shadow
+        log.fail_at_lsn = 9            # third op of batch2 tears
+        with pytest.raises(SimulatedFailure, match="mid-append"):
+            router.apply_mutations(batch2)
+        # ops 7..8 are durable and were fanned out; op 9 died mid-record
+        for op in batch2[:2]:
+            apply_op(shadow, op)
+        assert _wait(_caught_up(router))
+        res = _serve(router, 8)
+        assert all(r.lsn == 8 for r in res)
+        # the crashed log refuses further commits: the router must be
+        # rebuilt from recovery, not limp on with a diverged writer state
+        with pytest.raises(RuntimeError, match="crashed"):
+            router.apply_mutations([("delete", 1)])
+
+    # ---- restart: recover the durable prefix, stand up a new fleet ----
+    log2 = CatalogueLog(str(tmp_path), fsync_every=4)
+    assert log2.torn_bytes_dropped > 0
+    state, lsn = log2.recover(verify=True)
+    assert lsn == 8
+    np.testing.assert_array_equal(np.asarray(state.codes),
+                                  np.asarray(shadow.codes))
+    np.testing.assert_array_equal(np.asarray(state.live),
+                                  np.asarray(shadow.live))
+    assert state.free == shadow.free and state.n_rows == shadow.n_rows
+
+    with ReplicaRouter.for_seqrec_mutable(
+            params, CFG, state, n_replicas=2, k=K, max_batch=8,
+            calibrate=False, ladder=ladder, log=log2,
+            hedge=False) as router2:
+        assert router2.stats()["committed_lsn"] == 8.0
+        # a fresh-built oracle over the same durable catalogue
+        oracle = RetrievalEngine.for_seqrec_mutable(
+            params, CFG, shadow, k=K, max_batch=8, ladder=ladder,
+            calibrate=False)
+        specs = _specs(16, base=0, seed=11)
+        for rid_, seq in specs:
+            router2.submit(Request(rid_, seq, k=K))
+            oracle.submit(Request(rid_, seq, k=K))
+        got = {r.request_id: r for r in router2.drain()}
+        want = {r.request_id: r for r in oracle.drain()}
+        assert set(got) == set(want)
+        for i in got:
+            assert got[i].lsn == 8
+            np.testing.assert_array_equal(got[i].items, want[i].items)
+            np.testing.assert_array_equal(got[i].scores, want[i].scores)
+        # and the recovered log keeps committing
+        more = _gen_ops(shadow, rng, n=3)
+        assert router2.apply_mutations(more) == 11
+        assert _wait(_caught_up(router2))
+        assert all(r.lsn == 11 for r in _serve(router2, 8, base=100))

@@ -104,6 +104,35 @@ def test_checkpoint_async_save(tmp_path):
     assert mgr.all_steps() == [1]
 
 
+def test_checkpoint_restore_skips_truncated(tmp_path):
+    """Hardened restore (ISSUE 10): a truncated npz fails its manifest
+    CRC32, ``restore`` raises CorruptCheckpointError instead of a numpy
+    parse error, and ``restore_latest`` falls back to the previous valid
+    step rather than crashing the run on its newest checkpoint."""
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    params = {"a": jnp.arange(64.0).reshape(8, 8)}
+    mgr.save(10, {"params": params})
+    mgr.save(20, {"params": params})
+    victim = os.path.join(str(tmp_path), "step_0000000020", "params.npz")
+    size = os.path.getsize(victim)
+    with open(victim, "r+b") as f:          # torn write: drop the tail
+        f.truncate(size // 2)
+    assert not mgr.validate_step(20)
+    assert mgr.valid_steps() == [10]
+    with pytest.raises(ckpt_lib.CorruptCheckpointError, match="checksum"):
+        mgr.restore(20, {"params": params})
+    step, out = mgr.restore_latest({"params": params})
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(out["params"]["a"]),
+                                  np.asarray(params["a"]))
+    # every step damaged -> a hard, named error (not a numpy traceback)
+    with open(os.path.join(str(tmp_path), "step_0000000010",
+                           "params.npz"), "r+b") as f:
+        f.truncate(8)
+    with pytest.raises(ckpt_lib.CorruptCheckpointError, match="no valid"):
+        mgr.restore_latest({"params": params})
+
+
 @pytest.mark.sharded
 def test_elastic_restore_reshards(tmp_path):
     """Restore onto a (trivially different) mesh sharding — the elastic
